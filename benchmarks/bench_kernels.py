@@ -1,0 +1,85 @@
+"""Kernel micro-bench: Pallas (interpret on CPU) vs jnp reference.
+
+On this CPU container interpret-mode wall time is meaningless; what we
+record per kernel is (a) allclose vs the oracle at bench shapes, and
+(b) the analytic VMEM working set + arithmetic intensity per BlockSpec
+tile — the numbers that determine TPU performance (DESIGN.md §Perf
+hints).  Wall time of the *reference* path is also printed as the CPU
+sanity anchor.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.nbb_matmul import nbb_matmul
+
+
+def _time(f, *args, reps=3):
+    f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def flash_attention_report():
+    B, T, H, hd = 1, 1024, 4, 128
+    bq = bk = 128
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, T, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, T, H, hd), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, T, H, hd), jnp.float32)
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    err = float(jnp.abs(out - want).max())
+    # per-tile VMEM: q + k + v tiles + fp32 scratch (acc, m, l)
+    vmem = (bq * hd + 2 * bk * hd) * 4 + (bq * hd + 2 * bq) * 4
+    flops_tile = 2 * 2 * bq * bk * hd              # qk^T + pv
+    bytes_tile = (bk * hd * 2) * 4                 # k,v stream per step
+    t_ref = _time(lambda a, b, c: ref.flash_attention_ref(a, b, c), q, k, v)
+    return {"kernel": "flash_attention", "max_err": err,
+            "vmem_tile_kb": vmem / 1024,
+            "arith_intensity": flops_tile / bytes_tile,
+            "ref_cpu_ms": t_ref * 1e3}
+
+
+def nbb_matmul_report():
+    M = N = 512
+    K = 1024
+    bm = bn = 256
+    bk = 512
+    a = jax.random.normal(jax.random.PRNGKey(3), (M, K), jnp.bfloat16)
+    b = jax.random.normal(jax.random.PRNGKey(4), (K, N), jnp.bfloat16)
+    out = nbb_matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.matmul_ref(a, b)
+    err = float(jnp.abs(out.astype(jnp.float32)
+                        - want.astype(jnp.float32)).max())
+    # 2-slot rings: 2*(bm*bk + bk*bn) operand tiles + fp32 acc
+    vmem = 2 * (bm * bk + bk * bn) * 2 + bm * bn * 4
+    flops_tile = 2 * bm * bn * bk
+    bytes_tile = (bm * bk + bk * bn) * 2
+    t_ref = _time(lambda x, y: ref.matmul_ref(x, y), a, b)
+    return {"kernel": "nbb_matmul", "max_err": err,
+            "vmem_tile_kb": vmem / 1024,
+            "arith_intensity": flops_tile / bytes_tile,
+            "ref_cpu_ms": t_ref * 1e3}
+
+
+def main():
+    print("kernel,max_err,vmem_tile_kb,arith_intensity,ref_cpu_ms")
+    rows = [flash_attention_report(), nbb_matmul_report()]
+    for r in rows:
+        print(f"{r['kernel']},{r['max_err']:.2e},{r['vmem_tile_kb']:.0f},"
+              f"{r['arith_intensity']:.0f},{r['ref_cpu_ms']:.1f}")
+        assert r["vmem_tile_kb"] < 16 * 1024, "tile exceeds 16 MB VMEM"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Perf hillclimb driver (§Perf of EXPERIMENTS.md).
+
+Each named variant = (arch, shape, rules_override, remat).  Runs the
+dry-run cell, saves a tagged JSON next to the baseline, and prints the
+three roofline terms + deltas vs baseline, so every hypothesis ->
+change -> measure iteration is one command:
+
+    PYTHONPATH=src python -m benchmarks.hillclimb smollm_dp
+    PYTHONPATH=src python -m benchmarks.hillclimb --list
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+# variant -> (arch, shape, rules_override, remat)
+VARIANTS = {
+    # --- iteration "full-length loss": model.loss now forwards all T
+    #     tokens (rolled labels) instead of T-1, restoring power-of-two
+    #     blocking. These re-measure the three cells with ONLY that fix.
+    "smollm_fullloss": ("smollm-135m", "train_4k", None, "nothing"),
+    "gemma3_fullloss": ("gemma3-27b", "train_4k", None, "nothing"),
+    "arctic_fullloss": ("arctic-480b", "train_4k", None, "nothing"),
+    # --- smollm-135m x train_4k: useful=0.03, model axis wasted (9 heads
+    #     and d_ff 1536 divide 16 poorly) -> go pure 256-way DP.
+    "smollm_dp": ("smollm-135m", "train_4k",
+                  {"batch": ("pod", "data", "model"), "heads": None,
+                   "kv_heads": None, "mlp": None, "vocab": None,
+                   "cache_seq": None}, "nothing"),
+    "smollm_dp_dots": ("smollm-135m", "train_4k",
+                       {"batch": ("pod", "data", "model"), "heads": None,
+                        "kv_heads": None, "mlp": None, "vocab": None,
+                        "cache_seq": None}, "dots"),
+    "smollm_seqp": ("smollm-135m", "train_4k",
+                    {"seq": "model", "heads": None, "kv_heads": None,
+                     "mlp": None, "vocab": None}, "nothing"),
+    # 256-way DP activations + vocab-sharded embed table: kills the
+    # replicated-table gradient scatter loop found by the op profile
+    "smollm_dp_vocab": ("smollm-135m", "train_4k",
+                        {"batch": ("pod", "data", "model"), "heads": None,
+                         "kv_heads": None, "mlp": None,
+                         "cache_seq": None}, "nothing"),
+    # --- gemma3-27b x train_4k: collective-bound (917 GB all-reduce/dev).
+    #     Megatron SP: shard the residual stream's seq dim over model so
+    #     per-block sync becomes reduce-scatter/all-gather pairs.
+    "gemma3_sp": ("gemma3-27b", "train_4k", {"seq": "model"}, "nothing"),
+    "gemma3_dots": ("gemma3-27b", "train_4k", None, "dots"),
+    "gemma3_sp_dots": ("gemma3-27b", "train_4k", {"seq": "model"}, "dots"),
+    # --- arctic-480b x train_4k: memory-bound, 164 GB/dev (doesn't fit).
+    "arctic_sp": ("arctic-480b", "train_4k", {"seq": "model"}, "nothing"),
+    "arctic_dots": ("arctic-480b", "train_4k", None, "dots"),
+    "arctic_sp_dots": ("arctic-480b", "train_4k", {"seq": "model"}, "dots"),
+    # 5-tuples: last element = gradient-accumulation microbatches
+    "arctic_sp_mb4": ("arctic-480b", "train_4k", {"seq": "model"},
+                      "nothing", 4),
+    "arctic_sp_dots_mb8": ("arctic-480b", "train_4k", {"seq": "model"},
+                           "dots", 8),
+    "gemma3_sp_dots_mb4": ("gemma3-27b", "train_4k", {"seq": "model"},
+                           "dots", 4),
+    # zamba2: head-sharded SSD recurrence sends GSPMD into windowed
+    # einsum loops (3140 s memory term); replicate heads / shard seq
+    "zamba_noheads": ("zamba2-2.7b", "train_4k", {"heads": None},
+                      "nothing"),
+    "zamba_sp": ("zamba2-2.7b", "train_4k",
+                 {"heads": None, "seq": "model"}, "nothing"),
+    "gemma3_sp_mb4": ("gemma3-27b", "train_4k", {"seq": "model"},
+                      "nothing", 4),
+    "smollm_dp_mb4": ("smollm-135m", "train_4k",
+                      {"batch": ("pod", "data", "model"), "heads": None,
+                       "kv_heads": None, "mlp": None, "vocab": None,
+                       "cache_seq": None}, "nothing", 4),
+}
+
+
+def run_variant(name: str, multi_pod: bool = False):
+    # deferred: sets XLA_FLAGS for 512 host devices on import
+    from repro.launch import dryrun
+    from benchmarks.roofline import analyze_record
+
+    spec = VARIANTS[name]
+    arch, shape, rules, remat = spec[:4]
+    mb = spec[4] if len(spec) > 4 else 1
+    rec = dryrun.dryrun_cell(arch, shape, multi_pod, remat=remat,
+                             rules_override=rules, microbatches=mb)
+    rec["variant"] = name
+    dryrun.save(rec, tag=f"__opt_{name}")
+
+    base_p = RESULTS / f"{arch}__{shape}__{rec['mesh']}.json"
+    base = analyze_record(json.loads(base_p.read_text()))
+    opt = analyze_record(rec)
+    print(f"\n=== {name}: {arch} x {shape} (remat={remat}) ===")
+    print(f"{'term':14}{'baseline':>12}{'variant':>12}{'delta':>9}")
+    for t in ("compute_s", "memory_s", "collective_s"):
+        b, o = base[t], opt[t]
+        print(f"{t:14}{b:12.3e}{o:12.3e}{(o / b - 1) * 100:8.0f}%")
+    for t in ("mfu_bound", "useful_ratio", "peak_gb"):
+        print(f"{t:14}{base[t]:12.3f}{opt[t]:12.3f}")
+    return rec
+
+
+def main():
+    args = sys.argv[1:]
+    if not args or args[0] == "--list":
+        for k, v in VARIANTS.items():
+            print(f"{k}: {v[0]} x {v[1]} rules={v[2]} remat={v[3]}")
+        return
+    for name in args:
+        run_variant(name)
+
+
+if __name__ == "__main__":
+    main()

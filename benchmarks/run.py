@@ -1,0 +1,51 @@
+"""Benchmark harness — one section per paper table/figure.
+
+  bench_lockfree   -> Table 2 (multicore penalty), Figures 7/8 (speedups)
+  qpn_model        -> Figure 6 (QPN memory-bus model), §5 theoretical max
+  bench_pipeline   -> device-level lock vs lock-free (collective bytes)
+  bench_kernels    -> Pallas kernel tiles (VMEM fit, intensity, allclose)
+  roofline         -> §Roofline table over the dry-run artifacts
+
+Usage: PYTHONPATH=src python -m benchmarks.run [section ...]
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+SECTIONS = ["lockfree", "qpn", "pipeline", "kernels", "roofline"]
+
+
+def main() -> None:
+    want = sys.argv[1:] or SECTIONS
+    failures = []
+    for name in want:
+        print(f"\n{'=' * 72}\n# benchmark section: {name}\n{'=' * 72}")
+        try:
+            if name == "lockfree":
+                from benchmarks import bench_lockfree
+                bench_lockfree.main()
+            elif name == "qpn":
+                from benchmarks import qpn_model
+                qpn_model.main()
+            elif name == "pipeline":
+                from benchmarks import bench_pipeline
+                bench_pipeline.main()
+            elif name == "kernels":
+                from benchmarks import bench_kernels
+                bench_kernels.main()
+            elif name == "roofline":
+                from benchmarks import roofline
+                roofline.main()
+            else:
+                raise KeyError(f"unknown section {name}; have {SECTIONS}")
+        except Exception:  # noqa: BLE001 — report all sections
+            failures.append(name)
+            traceback.print_exc()
+    print(f"\n{'=' * 72}\n# benchmarks done; failures: {failures or 'none'}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Quickstart: build a model, take a train step, generate tokens.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch smollm-135m]
+
+Uses the smoke-size config so it runs on a laptop CPU in seconds; the
+same code paths scale to the full configs on a TPU mesh (see
+repro/launch/dryrun.py for proof every full config compiles at 512
+chips).
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config, list_archs
+from repro.models.model import build_model
+from repro.train.optimizer import AdamW, OptConfig
+from repro.train.train_step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=list_archs())
+    args = ap.parse_args(argv)
+
+    # 1. build a model from the registry
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(p.size for p in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n / 1e6:.2f}M params ({cfg.family})")
+
+    # 2. one jitted train step
+    opt = AdamW(OptConfig(lr=1e-3))
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                cfg.vocab_size, jnp.int32)
+    batch = {"tokens": tokens}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.zeros((2, cfg.num_image_tokens,
+                                           cfg.d_model), cfg.compute_dtype)
+    if cfg.encoder is not None:
+        batch["frame_embeds"] = jnp.zeros((2, cfg.encoder.num_frames,
+                                           cfg.d_model), cfg.compute_dtype)
+    params, opt_state, metrics = step(params, opt_state, batch)
+    print(f"train step: loss={float(metrics['loss']):.4f} "
+          f"grad_norm={float(metrics['grad_norm']):.2f}")
+
+    # 3. prefill + greedy decode
+    extras = batch.get("image_embeds", batch.get("frame_embeds"))
+    tok, caches = model.prefill(params, tokens[:, :8], max_len=32,
+                                extras=extras)
+    out = [int(tok[0])]
+    for i in range(8, 14):
+        tok, caches = model.decode_step(params, caches, tok[:, None],
+                                        jnp.int32(i))
+        out.append(int(tok[0]))
+    print(f"generated token ids: {out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Serve a small model with batched concurrent requests (deliverable b).
+
+Three client threads fire requests at the lock-free engine; the batcher
+fuses them, decodes greedily, and answers over per-client SPSC rings.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    return serve_main(["--arch", "smollm-135m", "--smoke",
+                       "--clients", "3", "--requests-per-client", "4",
+                       "--prompt-len", "8", "--max-tokens", "8"])
+
+
+if __name__ == "__main__":
+    main()

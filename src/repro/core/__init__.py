@@ -1,0 +1,11 @@
+"""Core lock-free communication library (the paper's contribution).
+
+Modules:
+  nbb        — Non-Blocking Buffer (event messages, SPSC FIFO ring)
+  nbw        — Non-Blocking Write protocol (state messages)
+  bitset     — lock-free slot allocator (replaces lock-free linked lists)
+  states     — CAS finite-state machines for request/buffer lifecycles
+  host_queue — SPSC/MPSC compositions + the lock-based baseline
+  channels   — MCAPI-style domains/nodes/endpoints/channels (host + device)
+"""
+from repro.core import bitset, channels, host_queue, nbb, nbw, states  # noqa: F401

@@ -1,0 +1,114 @@
+"""Lock-free bit set — request/slot allocation without a linked list.
+
+Refactoring step (3) of the paper: the lock-free *doubly linked list* used to
+track asynchronous request objects was replaced by a lock-free *bit set*,
+because lock-free doubly-linked lists are not feasible in practice
+([25][26] in the paper).  A bit set supports the only two operations the
+request pool needs — claim-any-free-slot and release-slot — with single-word
+atomics.
+
+Host variant: CPython's ``dict.setdefault`` is an atomic compare-and-swap
+(single bytecode under the GIL), which gives a genuine lock-free test-and-set
+per slot.  Used for KV-cache page allocation and in-flight request tracking
+in the serving engine.
+
+JAX variant: functional claim/release over a packed uint32 word array, for
+allocator state carried through jitted loops.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+class HostBitset:
+    """Lock-free slot allocator for host threads (multi-producer safe)."""
+
+    __slots__ = ("_n", "_claims")
+
+    def __init__(self, nslots: int):
+        self._n = nslots
+        # slot -> owner token.  dict.setdefault is our CAS primitive.
+        self._claims: dict = {}
+
+    @property
+    def capacity(self) -> int:
+        return self._n
+
+    def try_claim(self, owner: object = True, start: int = 0) -> Optional[int]:
+        """Claim any free slot; returns its index or None when all taken.
+
+        Lock-free: each probe is one atomic setdefault; a failed probe means
+        another thread won that slot and we move on (the paper's "progress in
+        finite time" guarantee — someone always succeeds).
+        """
+        n = self._n
+        for off in range(n):
+            i = (start + off) % n
+            if self._claims.setdefault(i, owner) is owner:
+                return i
+        return None
+
+    def claim_specific(self, i: int, owner: object = True) -> bool:
+        return self._claims.setdefault(i, owner) is owner
+
+    def release(self, i: int) -> None:
+        # pop() is atomic; releasing an unclaimed slot is a programming error.
+        if self._claims.pop(i, _MISSING) is _MISSING:
+            raise KeyError(f"slot {i} was not claimed")
+
+    def is_claimed(self, i: int) -> bool:
+        return i in self._claims
+
+    def count(self) -> int:
+        return len(self._claims)
+
+
+_MISSING = object()
+
+
+# ---------------------------------------------------------------------------
+# Functional JAX variant: words of 32 slots each.
+# ---------------------------------------------------------------------------
+def init(nslots: int) -> jnp.ndarray:
+    nwords = (nslots + 31) // 32
+    return jnp.zeros((nwords,), jnp.uint32)
+
+
+def claim_first_free(bits: jnp.ndarray, nslots: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Claim the lowest free slot.  Returns (new_bits, slot) with slot == -1
+    when the set is full (caller branches on it, never blocks)."""
+    nwords = bits.shape[0]
+    lanes = jnp.arange(32, dtype=jnp.uint32)
+    free = (bits[:, None] >> lanes[None, :]) & jnp.uint32(1) == 0  # [w, 32]
+    idx = jnp.arange(nwords * 32).reshape(nwords, 32)
+    valid = free & (idx < nslots)
+    flat = valid.reshape(-1)
+    slot = jnp.argmax(flat)  # first True, or 0 if none
+    any_free = jnp.any(flat)
+    slot = jnp.where(any_free, slot, -1)
+    word, lane = slot // 32, slot % 32
+    new_bits = jnp.where(
+        any_free,
+        bits.at[word].set(bits[word] | (jnp.uint32(1) << lane.astype(jnp.uint32))),
+        bits,
+    )
+    return new_bits, slot.astype(jnp.int32)
+
+
+def release(bits: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
+    word, lane = slot // 32, slot % 32
+    mask = ~(jnp.uint32(1) << lane.astype(jnp.uint32))
+    return bits.at[word].set(bits[word] & mask)
+
+
+def is_claimed(bits: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
+    word, lane = slot // 32, slot % 32
+    return ((bits[word] >> lane.astype(jnp.uint32)) & jnp.uint32(1)) == 1
+
+
+def count(bits: jnp.ndarray) -> jnp.ndarray:
+    lanes = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(((bits[:, None] >> lanes[None, :]) & jnp.uint32(1)).astype(jnp.int32))

@@ -1,0 +1,161 @@
+"""MCAPI-style communication API: domains, nodes, endpoints, channels.
+
+Reproduces the MCAPI surface the paper refactors (Section 2): three
+communication formats over FIFO delivery —
+
+  1) MESSAGES — connection-less, ad-hoc endpoints,
+  2) PACKETS  — connection-oriented over established FIFO channels,
+  3) SCALARS  — connection-oriented 8/16/32/64-bit values,
+
+backed here by lock-free NBB rings (the paper's refactored design) or by the
+mutex-guarded baseline (the reference design) for A/B benchmarking.
+
+The same endpoint naming scheme is reused at the *device* level:
+:class:`DeviceChannel` describes a point-to-point edge on a mesh axis and
+resolves to a ``jax.lax.ppermute`` partner list — the TPU analogue of an
+MCAPI FIFO channel, with ICI playing the role of the shared-memory bus
+(DESIGN.md §2).  ``repro.parallel.pipeline`` builds its ring schedule from
+these descriptors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import struct
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import nbb, nbw
+from repro.core.host_queue import LockedQueue, SpscQueue
+
+
+class ChannelType(enum.Enum):
+    MESSAGE = "message"   # connection-less, priority FIFO
+    PACKET = "packet"     # connected, buffer handoff
+    SCALAR = "scalar"     # connected, 8..64-bit values
+    STATE = "state"       # NBW: freshest-value, order-indeterminate
+    # STATE implements the paper's §7 future work: "enhance the MCAPI
+    # runtime to support state message data exchange policies ... we
+    # expect to see a speed-up because it drops the FIFO requirement."
+    # The writer can never block or fill the channel (NBW non-blocking
+    # property); the reader always sees the newest committed value.
+    # benchmarks/bench_lockfree.py state_vs_fifo() measures the
+    # predicted speed-up.
+
+
+class Endpoint:
+    """An addressable port owned by a node (MCAPI <domain, node, port>)."""
+
+    def __init__(self, domain: int, node: int, port: int):
+        self.address = (domain, node, port)
+        self.rx: Optional[Any] = None   # receive queue, set when connected
+
+    def __repr__(self):
+        return f"Endpoint{self.address}"
+
+
+@dataclasses.dataclass
+class Channel:
+    """A one-way FIFO connection between two endpoints."""
+
+    ctype: ChannelType
+    send_ep: Endpoint
+    recv_ep: Endpoint
+    queue: Any  # SpscQueue (lock-free) or LockedQueue (baseline)
+
+    def send(self, payload: Any) -> int:
+        if self.ctype is ChannelType.STATE:
+            self.queue.write(payload)      # NBW: never blocks, never full
+            return nbb.OK
+        if self.ctype is ChannelType.SCALAR:
+            payload = _pack_scalar(payload)
+        return self.queue.insert_item(payload)
+
+    def recv(self) -> Tuple[int, Optional[Any]]:
+        if self.ctype is ChannelType.STATE:
+            status, payload = self.queue.try_read()
+            if status != nbw.OK:
+                return nbb.BUFFER_EMPTY_BUT_PRODUCER_INSERTING, None
+            if payload is None:            # nothing published yet
+                return nbb.BUFFER_EMPTY, None
+            return nbb.OK, payload
+        status, payload = self.queue.read_item()
+        if status == nbb.OK and self.ctype is ChannelType.SCALAR:
+            payload = _unpack_scalar(payload)
+        return status, payload
+
+    def send_blocking(self, payload: Any) -> None:
+        import time
+        while self.send(payload) != nbb.OK:
+            time.sleep(0)
+
+    def recv_blocking(self) -> Any:
+        import time
+        while True:
+            status, payload = self.recv()
+            if status == nbb.OK:
+                return payload
+            time.sleep(0)
+
+
+def _pack_scalar(value: int) -> bytes:
+    # MCAPI scalars are 8/16/32/64-bit; we carry them as 8 bytes.
+    return struct.pack("<q", int(value))
+
+
+def _unpack_scalar(b: bytes) -> int:
+    return struct.unpack("<q", b)[0]
+
+
+class Domain:
+    """A communication domain: creates endpoints and connects channels."""
+
+    def __init__(self, domain_id: int = 0, lock_free: bool = True,
+                 queue_capacity: int = 64):
+        self.domain_id = domain_id
+        self.lock_free = lock_free
+        self.queue_capacity = queue_capacity
+        self._endpoints: Dict[Tuple[int, int, int], Endpoint] = {}
+        self.channels: List[Channel] = []
+
+    def create_endpoint(self, node: int, port: int) -> Endpoint:
+        key = (self.domain_id, node, port)
+        if key in self._endpoints:
+            raise ValueError(f"endpoint {key} already exists")
+        ep = Endpoint(*key)
+        self._endpoints[key] = ep
+        return ep
+
+    def connect(self, ctype: ChannelType, send_ep: Endpoint,
+                recv_ep: Endpoint, nbw_depth: int = 4) -> Channel:
+        if ctype is ChannelType.STATE:
+            queue: Any = nbw.HostNBW(depth=nbw_depth)
+        elif self.lock_free:
+            queue = SpscQueue(self.queue_capacity)
+        else:
+            queue = LockedQueue(self.queue_capacity)
+        ch = Channel(ctype, send_ep, recv_ep, queue)
+        recv_ep.rx = queue
+        self.channels.append(ch)
+        return ch
+
+
+# ---------------------------------------------------------------------------
+# Device-level channels: FIFO edges over a mesh axis.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DeviceChannel:
+    """A point-to-point ring edge along a named mesh axis.
+
+    ``perm(n)`` yields the (source, dest) pairs for ``jax.lax.ppermute`` —
+    every member sends to its ``+shift`` neighbour, the device analogue of an
+    MCAPI FIFO channel between adjacent cores.
+    """
+
+    axis: str
+    shift: int = 1
+
+    def perm(self, axis_size: int) -> List[Tuple[int, int]]:
+        return [(i, (i + self.shift) % axis_size) for i in range(axis_size)]
+
+    def reverse(self) -> "DeviceChannel":
+        return DeviceChannel(self.axis, -self.shift)

@@ -1,0 +1,170 @@
+"""Host-side lock-free queues composed from NBBs.
+
+The paper (via Kim'07) notes the NBB "can be composed to support complex
+communication patterns including publish/subscribe and broadcast".  We
+compose:
+
+  * :class:`SpscQueue` — thin alias over :class:`repro.core.nbb.HostNBB`.
+  * :class:`MpscQueue` — N producers fan into one consumer via N private
+    SPSC rings drained round-robin.  Each ring keeps the single-writer
+    invariant, so the composition stays lock-free end to end (this is the
+    MCAPI "multiple client endpoints -> one server receive queue" topology
+    of the paper's Figure 1, without its global lock).
+  * :class:`LockedQueue` — the *lock-based baseline* the paper measures
+    against: a deque guarded by one mutex, standing in for the MCAPI
+    reference implementation's global reader/writer lock.
+
+Framework uses: the data pipeline feeds the trainer through an MpscQueue;
+the serving engine's request batcher drains client SPSC rings; the async
+checkpointer receives snapshots through an SPSC ring.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Any, List, Optional, Tuple
+
+from repro.core import nbb
+from repro.core.nbb import HostNBB
+
+SpscQueue = HostNBB
+
+
+class MpscQueue:
+    """Multi-producer single-consumer lock-free queue (fan-in of SPSC NBBs)."""
+
+    def __init__(self, nproducers: int, capacity_per_producer: int = 64):
+        self._rings: List[HostNBB] = [
+            HostNBB(capacity_per_producer) for _ in range(nproducers)
+        ]
+        self._cursor = 0  # consumer-owned round-robin cursor
+
+    def producer(self, i: int) -> HostNBB:
+        """The private SPSC ring for producer ``i`` (single-writer)."""
+        return self._rings[i]
+
+    def insert_item(self, producer_id: int, item: Any) -> int:
+        return self._rings[producer_id].insert_item(item)
+
+    def read_item(self) -> Tuple[int, Optional[Any]]:
+        """Drain round-robin; returns first available item.  EMPTY only when
+        every producer ring is empty this pass."""
+        n = len(self._rings)
+        busy = False
+        for off in range(n):
+            ring = self._rings[(self._cursor + off) % n]
+            status, item = ring.read_item()
+            if status == nbb.OK:
+                self._cursor = (self._cursor + off + 1) % n
+                return nbb.OK, item
+            if status == nbb.BUFFER_EMPTY_BUT_PRODUCER_INSERTING:
+                busy = True
+        return (nbb.BUFFER_EMPTY_BUT_PRODUCER_INSERTING if busy
+                else nbb.BUFFER_EMPTY), None
+
+    def get(self, spin: int = 64) -> Any:
+        import time
+        k = 0
+        while True:
+            status, item = self.read_item()
+            if status == nbb.OK:
+                return item
+            k += 1
+            if status == nbb.BUFFER_EMPTY or k > spin:
+                time.sleep(0)
+                k = 0
+
+
+class BroadcastChannel:
+    """One producer -> N consumers, each with a private SPSC ring.
+
+    Kim'07's composition claim (quoted in the paper §2): the NBB "can be
+    composed to support complex communication patterns including
+    publish/subscribe and broadcast connections".  Every consumer gets
+    every item; the producer's insert is non-blocking per ring and
+    reports the per-consumer status vector (a slow consumer only stalls
+    itself — slot disjointness holds per ring).
+    """
+
+    def __init__(self, nconsumers: int, capacity: int = 64):
+        self._rings: List[HostNBB] = [HostNBB(capacity)
+                                      for _ in range(nconsumers)]
+
+    def insert_item(self, item: Any) -> List[int]:
+        return [ring.insert_item(item) for ring in self._rings]
+
+    def publish(self, item: Any) -> None:
+        import time
+        pending = set(range(len(self._rings)))
+        while pending:
+            for i in list(pending):
+                if self._rings[i].insert_item(item) == nbb.OK:
+                    pending.discard(i)
+            if pending:
+                time.sleep(0)
+
+    def consumer(self, i: int) -> HostNBB:
+        return self._rings[i]
+
+
+class LockedQueue:
+    """Mutex-guarded FIFO — the paper's lock-based baseline.
+
+    Mirrors the MCAPI reference design: every insert/read takes the one lock,
+    serializing all access to the shared structure.  Capacity-bounded to
+    match NBB semantics (returns the same status codes for comparability).
+
+    ``blocking=True`` makes put/get park on condition variables (kernel
+    futex wait + context switch) — the reference implementation's actual
+    behavior, and the convoy cost the paper measures.  The default spins
+    with yield, a *more* charitable lock-based baseline.
+    """
+
+    def __init__(self, capacity: int, blocking: bool = False):
+        self._capacity = capacity
+        self._dq: deque = deque()
+        self._lock = threading.Lock()
+        self._blocking = blocking
+        if blocking:
+            self._not_full = threading.Condition(self._lock)
+            self._not_empty = threading.Condition(self._lock)
+
+    def insert_item(self, item: Any) -> int:
+        with self._lock:
+            if len(self._dq) >= self._capacity:
+                return nbb.BUFFER_FULL
+            self._dq.append(item)
+            return nbb.OK
+
+    def read_item(self) -> Tuple[int, Optional[Any]]:
+        with self._lock:
+            if not self._dq:
+                return nbb.BUFFER_EMPTY, None
+            return nbb.OK, self._dq.popleft()
+
+    def put(self, item: Any) -> None:
+        if self._blocking:
+            with self._not_full:
+                while len(self._dq) >= self._capacity:
+                    self._not_full.wait()
+                self._dq.append(item)
+                self._not_empty.notify()
+            return
+        import time
+        while self.insert_item(item) != nbb.OK:
+            time.sleep(0)
+
+    def get(self) -> Any:
+        if self._blocking:
+            with self._not_empty:
+                while not self._dq:
+                    self._not_empty.wait()
+                item = self._dq.popleft()
+                self._not_full.notify()
+                return item
+        import time
+        while True:
+            status, item = self.read_item()
+            if status == nbb.OK:
+                return item
+            time.sleep(0)

@@ -1,0 +1,256 @@
+"""Non-Blocking Buffer (NBB) — lock-free event-message FIFO ring buffer.
+
+Faithful implementation of the algorithm the paper adopts from
+Kim, Colmenares & Rim, "Efficient adaptations of the non-blocking buffer for
+event message communication" (ISORC 2007), as refactored into MCAPI by
+Harper & de Gooijer (2014), Section 3.
+
+Two atomic counters guard disjoint sections of a circular ring buffer:
+
+  * ``update_count`` (UC)      — owned by the single producer,
+  * ``acknowledge_count`` (AC) — owned by the single consumer.
+
+Each counter is incremented *twice* per operation: once before the slot
+access starts and once after it completes, so an odd value means an
+operation is in flight.  Items in the buffer = UC//2 - AC//2.  Producer and
+consumer always address different slots, hence neither ever blocks the
+other; operations that cannot proceed return one of the four status codes of
+the paper's Table 1 instead of waiting.
+
+Two variants are provided:
+
+  * :class:`HostNBB` — a real lock-free SPSC queue for host-side Python
+    threads (data pipeline -> trainer, request batcher -> serving engine).
+    Under CPython, aligned int stores/loads and single-slot list assignment
+    are atomic, so the single-writer-per-counter discipline is sound.
+  * Functional JAX form (:func:`init`, :func:`insert_item`,
+    :func:`read_item`) — the same state machine expressed as a pure function
+    over an :class:`NBBState` pytree so it can live inside ``jit`` /
+    ``lax.scan`` loops.  This is the synchronization skeleton used by the
+    ring-buffered pipeline-parallel schedule in
+    ``repro.parallel.pipeline``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Status codes — Table 1 of the paper.
+# ---------------------------------------------------------------------------
+OK = 0
+BUFFER_FULL = 1                          # caller should yield and retry later
+BUFFER_FULL_BUT_CONSUMER_READING = 2     # retry immediately, bounded spins
+BUFFER_EMPTY = 3                         # caller should yield and retry later
+BUFFER_EMPTY_BUT_PRODUCER_INSERTING = 4  # retry immediately, bounded spins
+
+STATUS_NAMES = {
+    OK: "OK",
+    BUFFER_FULL: "BUFFER_FULL",
+    BUFFER_FULL_BUT_CONSUMER_READING: "BUFFER_FULL_BUT_CONSUMER_READING",
+    BUFFER_EMPTY: "BUFFER_EMPTY",
+    BUFFER_EMPTY_BUT_PRODUCER_INSERTING: "BUFFER_EMPTY_BUT_PRODUCER_INSERTING",
+}
+
+
+# ---------------------------------------------------------------------------
+# Host (threaded) variant — genuine lock-free SPSC ring for CPython threads.
+# ---------------------------------------------------------------------------
+class HostNBB:
+    """Single-producer single-consumer non-blocking buffer for host threads.
+
+    ``insert_item`` may only ever be called from one thread, ``read_item``
+    from one (possibly different) thread.  No locks anywhere: the producer is
+    the sole writer of ``_uc`` and of the slot it addresses; the consumer is
+    the sole writer of ``_ac``.  CPython guarantees the individual loads and
+    stores are atomic, which is exactly the memory model the paper's
+    PowerPC/x86 discussion (Section 3) relies on.
+    """
+
+    __slots__ = ("_n", "_slots", "_uc", "_ac")
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("NBB capacity must be >= 1")
+        self._n = capacity
+        self._slots: list = [None] * capacity
+        self._uc = 0  # update counter (producer-owned)
+        self._ac = 0  # acknowledge counter (consumer-owned)
+
+    @property
+    def capacity(self) -> int:
+        return self._n
+
+    def __len__(self) -> int:  # snapshot; may be stale under concurrency
+        return (self._uc // 2) - (self._ac // 2)
+
+    def insert_item(self, item: Any) -> int:
+        uc = self._uc
+        ac = self._ac  # single racy read — fine: AC only grows
+        if (uc // 2) - (ac // 2) >= self._n:
+            # Full.  Distinguish "consumer mid-read" (spin briefly) from
+            # "consumer idle" (yield) exactly as the paper's Table 1.
+            if ac & 1:
+                return BUFFER_FULL_BUT_CONSUMER_READING
+            return BUFFER_FULL
+        self._uc = uc + 1                       # announce write-in-progress
+        self._slots[(uc // 2) % self._n] = item
+        self._uc = uc + 2                       # commit
+        return OK
+
+    def read_item(self) -> Tuple[int, Optional[Any]]:
+        ac = self._ac
+        uc = self._uc  # single racy read — UC only grows
+        if (uc // 2) == (ac // 2):
+            if uc & 1:
+                return BUFFER_EMPTY_BUT_PRODUCER_INSERTING, None
+            return BUFFER_EMPTY, None
+        self._ac = ac + 1                       # announce read-in-progress
+        idx = (ac // 2) % self._n
+        item = self._slots[idx]
+        self._slots[idx] = None                 # help GC; slot now ours alone
+        self._ac = ac + 2                       # acknowledge
+        return OK, item
+
+    # Convenience blocking wrappers (spin + yield, still lock-free progress).
+    def put(self, item: Any, spin: int = 64) -> None:
+        import time
+        k = 0
+        while True:
+            st = self.insert_item(item)
+            if st == OK:
+                return
+            k += 1
+            if st == BUFFER_FULL or k > spin:
+                time.sleep(0)  # yield the processor, per Table 1
+                k = 0
+
+    def get(self, spin: int = 64) -> Any:
+        import time
+        k = 0
+        while True:
+            st, item = self.read_item()
+            if st == OK:
+                return item
+            k += 1
+            if st == BUFFER_EMPTY or k > spin:
+                time.sleep(0)
+                k = 0
+
+
+# ---------------------------------------------------------------------------
+# Functional JAX variant.
+# ---------------------------------------------------------------------------
+class NBBState(NamedTuple):
+    """Pure-functional NBB state (a pytree, usable as scan carry)."""
+
+    update_count: jnp.ndarray       # i32 scalar, producer counter
+    acknowledge_count: jnp.ndarray  # i32 scalar, consumer counter
+    slots: jnp.ndarray              # [capacity, *item_shape]
+
+
+def init(capacity: int, item: jax.ShapeDtypeStruct | jnp.ndarray) -> NBBState:
+    """Create an empty NBB holding ``capacity`` items shaped like ``item``."""
+    shape = tuple(item.shape)
+    dtype = item.dtype
+    return NBBState(
+        update_count=jnp.zeros((), jnp.int32),
+        acknowledge_count=jnp.zeros((), jnp.int32),
+        slots=jnp.zeros((capacity,) + shape, dtype),
+    )
+
+
+def size(state: NBBState) -> jnp.ndarray:
+    return state.update_count // 2 - state.acknowledge_count // 2
+
+
+def insert_item(state: NBBState, item: jnp.ndarray) -> Tuple[NBBState, jnp.ndarray]:
+    """Producer op.  Returns (new_state, status).  Never blocks: when the ring
+    is full the state is returned unchanged with a BUFFER_FULL* status."""
+    n = state.slots.shape[0]
+    uc, ac = state.update_count, state.acknowledge_count
+    full = (uc // 2 - ac // 2) >= n
+    status = jnp.where(
+        full,
+        jnp.where(ac % 2 == 1,
+                  jnp.int32(BUFFER_FULL_BUT_CONSUMER_READING),
+                  jnp.int32(BUFFER_FULL)),
+        jnp.int32(OK),
+    )
+    idx = (uc // 2) % n
+    new_slots = jnp.where(
+        full,
+        state.slots,
+        state.slots.at[idx].set(item.astype(state.slots.dtype)),
+    )
+    new_uc = jnp.where(full, uc, uc + 2)  # both half-increments fused: the
+    # functional update is atomic by construction (no observer between them).
+    return NBBState(new_uc, ac, new_slots), status
+
+
+def read_item(state: NBBState) -> Tuple[NBBState, jnp.ndarray, jnp.ndarray]:
+    """Consumer op.  Returns (new_state, item, status); ``item`` is zeros when
+    status != OK (callers must branch on status, as in the paper)."""
+    n = state.slots.shape[0]
+    uc, ac = state.update_count, state.acknowledge_count
+    empty = (uc // 2) == (ac // 2)
+    status = jnp.where(
+        empty,
+        jnp.where(uc % 2 == 1,
+                  jnp.int32(BUFFER_EMPTY_BUT_PRODUCER_INSERTING),
+                  jnp.int32(BUFFER_EMPTY)),
+        jnp.int32(OK),
+    )
+    idx = (ac // 2) % n
+    item = jnp.where(empty, jnp.zeros_like(state.slots[0]), state.slots[idx])
+    new_ac = jnp.where(empty, ac, ac + 2)
+    return NBBState(uc, new_ac, state.slots), item, status
+
+
+# ---------------------------------------------------------------------------
+# Interleaving simulator — used by property tests to exercise the *torn*
+# (odd-counter) states that the fused functional ops above never expose.
+# It executes half-increments as separate micro-ops under an arbitrary
+# producer/consumer interleaving, which is how we check the paper's Safety
+# property (a successful read never observes a partially-written slot).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SimNBB:
+    capacity: int
+
+    def __post_init__(self):
+        self.uc = 0
+        self.ac = 0
+        self.slots = [(0, 0)] * self.capacity  # (value, torn_flag)
+
+    # Producer micro-ops -----------------------------------------------------
+    def try_begin_insert(self) -> int:
+        if (self.uc // 2) - (self.ac // 2) >= self.capacity:
+            return (BUFFER_FULL_BUT_CONSUMER_READING
+                    if self.ac % 2 else BUFFER_FULL)
+        self.uc += 1
+        return OK
+
+    def write_half(self, value):
+        """First half of a non-atomic multi-word write: slot is torn."""
+        self.slots[(self.uc // 2) % self.capacity] = (value, 1)
+
+    def write_commit(self, value):
+        self.slots[(self.uc // 2) % self.capacity] = (value, 0)
+        self.uc += 1
+
+    # Consumer micro-ops -----------------------------------------------------
+    def try_begin_read(self) -> int:
+        if (self.uc // 2) == (self.ac // 2):
+            return (BUFFER_EMPTY_BUT_PRODUCER_INSERTING
+                    if self.uc % 2 else BUFFER_EMPTY)
+        self.ac += 1
+        return OK
+
+    def read_commit(self):
+        value, torn = self.slots[(self.ac // 2) % self.capacity]
+        self.ac += 1
+        return value, torn

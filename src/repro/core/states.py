@@ -1,0 +1,129 @@
+"""Finite-state machines with lock-free CAS transitions.
+
+Refactoring step (4) of the paper: boolean validity flags on request and
+queue-entry objects were replaced by explicit finite state machines whose
+transitions are performed with atomic compare-and-swap — "verify with atomic
+compare-and-swap that an object is in the expected state before changing to
+the next state" (Section 3, Figures 3 and 4).
+
+The two FSMs from the paper are reproduced exactly:
+
+  Request:  FREE -> VALID -> {RECEIVED -> COMPLETED, COMPLETED, CANCELLED}
+            COMPLETED -> FREE, CANCELLED -> FREE
+  Buffer:   FREE -> RESERVED -> ALLOCATED -> RECEIVED -> FREE
+
+Host CAS primitive: CPython has no compare-exchange bytecode, so we build
+consensus from the one atomic read-modify-write it does give us —
+``list.append``.  Each cell keeps an append-only journal of *proposed*
+transitions; folding the journal deterministically decides which proposals
+won.  Append-only logs are a classic lock-free construction (every proposer
+completes in a bounded number of steps; the journal is compacted by the
+winner).  The serving engine and async checkpointer use these cells for
+request lifecycle tracking.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Dict, FrozenSet, Optional, Tuple
+
+# --- Request FSM (paper Figure 3) ------------------------------------------
+REQUEST_FREE = "REQUEST_FREE"
+REQUEST_VALID = "REQUEST_VALID"
+REQUEST_RECEIVED = "REQUEST_RECEIVED"
+REQUEST_COMPLETED = "REQUEST_COMPLETED"
+REQUEST_CANCELLED = "REQUEST_CANCELLED"
+
+REQUEST_TRANSITIONS: Dict[str, FrozenSet[str]] = {
+    REQUEST_FREE: frozenset({REQUEST_VALID}),
+    REQUEST_VALID: frozenset({REQUEST_RECEIVED, REQUEST_COMPLETED,
+                              REQUEST_CANCELLED}),
+    REQUEST_RECEIVED: frozenset({REQUEST_COMPLETED}),
+    REQUEST_COMPLETED: frozenset({REQUEST_FREE}),
+    REQUEST_CANCELLED: frozenset({REQUEST_FREE}),
+}
+
+# --- Queue-entry / buffer FSM (paper Figure 4) ------------------------------
+BUFFER_FREE = "BUFFER_FREE"
+BUFFER_RESERVED = "BUFFER_RESERVED"
+BUFFER_ALLOCATED = "BUFFER_ALLOCATED"
+BUFFER_RECEIVED = "BUFFER_RECEIVED"
+
+BUFFER_TRANSITIONS: Dict[str, FrozenSet[str]] = {
+    BUFFER_FREE: frozenset({BUFFER_RESERVED}),
+    BUFFER_RESERVED: frozenset({BUFFER_ALLOCATED}),
+    BUFFER_ALLOCATED: frozenset({BUFFER_RECEIVED}),
+    BUFFER_RECEIVED: frozenset({BUFFER_FREE}),
+}
+
+
+class IllegalTransition(RuntimeError):
+    pass
+
+
+_seq = itertools.count()  # itertools.count() is thread-safe in CPython
+
+
+class StateCell:
+    """A lock-free CAS cell over a fixed transition table.
+
+    ``cas(expected, new)`` returns True iff this caller's proposal is the one
+    that moved the cell from ``expected`` to ``new``.  Multiple threads may
+    race; exactly one wins per state occupancy.  Progress is lock-free: an
+    append always completes, and deciding the winner is a pure fold.
+    """
+
+    __slots__ = ("_table", "_base", "_journal", "_name")
+
+    def __init__(self, table: Dict[str, FrozenSet[str]], initial: str,
+                 name: str = ""):
+        if initial not in table:
+            raise ValueError(f"unknown state {initial!r}")
+        self._table = table
+        self._base = initial
+        self._journal: list = []  # [(seq, expected, new)]
+        self._name = name
+
+    def _fold(self) -> Tuple[str, set]:
+        """Deterministically replay proposals; returns (state, winner_seqs)."""
+        state = self._base
+        winners = set()
+        for seq, expected, new in self._journal:
+            if expected == state and new in self._table[state]:
+                state = new
+                winners.add(seq)
+        return state, winners
+
+    @property
+    def state(self) -> str:
+        return self._fold()[0]
+
+    def cas(self, expected: str, new: str) -> bool:
+        if new not in self._table.get(expected, frozenset()):
+            raise IllegalTransition(
+                f"{self._name}: {expected} -> {new} not in transition table")
+        seq = next(_seq)
+        self._journal.append((seq, expected, new))  # atomic append = consensus
+        _, winners = self._fold()
+        won = seq in winners
+        # Opportunistic compaction by any caller once the journal grows; the
+        # fold result is base-state-invariant so a torn compaction by two
+        # threads is benign (both write the same folded base).
+        if len(self._journal) > 64:
+            state, _ = self._fold()
+            self._base, self._journal = state, []
+        return won
+
+    def transition(self, expected: str, new: str) -> None:
+        if not self.cas(expected, new):
+            raise IllegalTransition(
+                f"{self._name}: lost CAS {expected} -> {new} "
+                f"(actual state {self.state})")
+
+
+def request_cell(name: str = "request") -> StateCell:
+    return StateCell(REQUEST_TRANSITIONS, REQUEST_FREE, name)
+
+
+def buffer_cell(name: str = "buffer") -> StateCell:
+    return StateCell(BUFFER_TRANSITIONS, BUFFER_FREE, name)

@@ -1,0 +1,41 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On CPU (this container) the kernels run with ``interpret=True`` so the
+kernel bodies execute in Python for correctness validation; on TPU they
+lower to Mosaic.  ``interpret=None`` (default) auto-detects.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.nbb_matmul import nbb_matmul as _nbb_matmul
+from repro.kernels import ref
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Blocked online-softmax GQA attention (see flash_attention.py)."""
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  block_q=block_q, block_k=block_k,
+                  interpret=_auto_interpret(interpret))
+
+
+def nbb_matmul(a, b, *, bm: int = 256, bn: int = 256, bk: int = 512,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Explicit 2-slot NBB double-buffered matmul (see nbb_matmul.py)."""
+    return _nbb_matmul(a, b, bm=bm, bn=bn, bk=bk,
+                       interpret=_auto_interpret(interpret))
+
+
+__all__ = ["flash_attention", "nbb_matmul", "ref"]

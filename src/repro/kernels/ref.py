@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function here is the semantic ground truth the kernels are validated
+against (interpret=True on CPU, real lowering on TPU).  They are written
+for clarity, not speed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """[M, K] @ [K, N] -> [M, N] with f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0) -> jax.Array:
+    """Reference GQA attention.
+
+    q: [B, T, H, hd]; k/v: [B, S, Hkv, hd] with H % Hkv == 0.
+    causal assumes q positions are S-T..S-1 (suffix of the kv sequence).
+    window: sliding-window size (0 = unlimited).
+    Returns [B, T, H, hd] in q.dtype.
+    """
+    B, T, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, T, Hkv, g, hd)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    q_pos = jnp.arange(T) + (S - T)
+    kv_pos = jnp.arange(S)
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= kv_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= kv_pos[None, :] > q_pos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, T, H, hd).astype(q.dtype)
+
+
+def swiglu_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+               w_down: jax.Array) -> jax.Array:
+    """Fused SwiGLU MLP oracle: silu(x@Wg) * (x@Wu) @ Wd."""
+    h = jax.nn.silu(jnp.dot(x, w_gate, preferred_element_type=jnp.float32))
+    h = h * jnp.dot(x, w_up, preferred_element_type=jnp.float32)
+    return jnp.dot(h.astype(x.dtype), w_down,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def rmsnorm_matmul_ref(x: jax.Array, scale: jax.Array, w: jax.Array,
+                       eps: float = 1e-6) -> jax.Array:
+    """Fused rmsnorm(x) @ W oracle."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = (xf * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)
+    return jnp.dot(y.astype(x.dtype), w,
+                   preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the dry-run needs 512 placeholder host devices to build the
+production meshes.  Smoke tests and benches must NOT import this module.
+
+For each cell this produces:
+  * compiled.memory_analysis()  — proves the program fits 16 GB/chip,
+  * compiled.cost_analysis()    — per-device HLO FLOPs / bytes,
+  * collective bytes parsed from the optimized HLO (per collective kind),
+all recorded as JSON under results/dryrun/ for the roofline stage.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only-train-4k]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs, shapes_for
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES
+from repro.models.inputs import decode_specs, prefill_specs, train_batch_specs
+from repro.models.model import build_model
+from repro.parallel import sharding as shlib
+from repro.train.optimizer import AdamW, OptConfig
+from repro.train.train_step import (batch_shardings, cache_shardings,
+                                    make_decode_step, make_train_step,
+                                    opt_state_shardings, param_shardings)
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Sum output-shape bytes of every collective op in the optimized HLO.
+
+    Per-device view: each op line looks like
+      %x = bf16[8,128,7168]{...} all-gather(...)
+    We count the op's result size (bytes leaving/entering this device's
+    link domain); tuples are summed over members.
+    """
+    dtype_bytes = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4,
+                   "u32": 4, "s64": 8, "u64": 8, "s8": 1, "u8": 1,
+                   "pred": 1, "s16": 2, "u16": 2}
+    totals = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s+(\(?[\w\[\],\s{}/#*_-]+?\)?)\s+"
+                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)", line)
+        if not m:
+            continue
+        kind = m.group(2)
+        nbytes = 0
+        for dt, dims in shape_re.findall(m.group(1)):
+            if dt not in dtype_bytes:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * dtype_bytes[dt]
+        totals[kind] += nbytes
+        counts[kind] += 1
+    return totals, counts
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
+                opt_cfg: OptConfig = None, remat: str = "nothing",
+                rules_override=None, microbatches: int = 1,
+                verbose: bool = True):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg, remat_policy=remat)
+    if opt_cfg is None:
+        # arctic-480B needs 8-bit optimizer state to fit (DESIGN.md).
+        state_dtype = "int8" if arch == "arctic-480b" else "float32"
+        opt_cfg = OptConfig(state_dtype=state_dtype)
+    opt = AdamW(opt_cfg)
+
+    rules = dict(cfg.mesh_rules or {})
+    if rules_override:
+        rules.update(rules_override)
+
+    t0 = time.time()
+    with shlib.axis_rules(mesh, rules), jax.set_mesh(mesh):
+        params_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        p_sh = param_shardings(model, mesh)
+
+        if shape.kind == "train":
+            batch_abs = train_batch_specs(cfg, shape)
+            o_sh = opt_state_shardings(model, opt, mesh, params_abs)
+            b_sh = batch_shardings(mesh, batch_abs)
+            opt_abs = jax.eval_shape(opt.init, params_abs)
+            step = make_train_step(model, opt, microbatches=microbatches)
+            jitted = jax.jit(step,
+                             in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            specs = prefill_specs(cfg, shape)
+            b_sh = batch_shardings(mesh, specs)
+
+            def prefill_fn(params, tokens, extras=None):
+                return model.prefill(params, tokens, shape.seq_len,
+                                     extras=extras)
+
+            args = [params_abs, specs["tokens"]]
+            in_sh = [p_sh, b_sh["tokens"]]
+            if "extras" in specs:
+                args.append(specs["extras"])
+                in_sh.append(b_sh["extras"])
+            lowered = jax.jit(prefill_fn, in_shardings=tuple(in_sh)).lower(*args)
+        else:  # decode
+            specs = decode_specs(cfg, shape, model)
+            c_sh = cache_shardings(mesh, specs["caches"], cfg)
+            t_sh = batch_shardings(mesh, {"t": specs["tokens"]})["t"]
+            step = make_decode_step(model)
+            jitted = jax.jit(step,
+                             in_shardings=(p_sh, c_sh, t_sh, None),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, specs["caches"],
+                                   specs["tokens"], specs["pos"])
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        acc = hlo_analysis.analyze(hlo)  # while-aware (xla counts loops once)
+        coll_bytes = {k: acc.collective_bytes[k] for k in acc.collective_bytes}
+        coll_counts = {k: acc.collective_counts[k]
+                       for k in acc.collective_counts}
+
+    n_devices = mesh.size
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_devices,
+        "kind": shape.kind,
+        "remat": remat,
+        "microbatches": microbatches,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": acc.flops,
+        "bytes_accessed_per_device": acc.bytes,
+        "xla_flops_loop_body_once": cost.get("flops", 0.0),
+        "xla_bytes_loop_body_once": cost.get("bytes accessed", 0.0),
+        "collective_bytes_per_device": coll_bytes,
+        "collective_counts": coll_counts,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+        },
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    if verbose:
+        peak_gb = result["memory"]["peak_estimate_bytes"] / 1e9
+        print(f"[dryrun] {arch} x {shape_name} x {result['mesh']}: "
+              f"compile {t_compile:.0f}s, "
+              f"{result['flops_per_device']/1e12:.2f} TF/dev, "
+              f"peak ~{peak_gb:.2f} GB/dev, "
+              f"colls {sum(coll_counts.values())}", flush=True)
+    return result
+
+
+def save(result, tag=""):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    name = f"{result['arch']}__{result['shape']}__{result['mesh']}{tag}.json"
+    (RESULTS / name).write_text(json.dumps(result, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="nothing")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        failures = []
+        cells = []
+        for arch in list_archs():
+            for shape in shapes_for(arch):
+                cells.append((arch, shape.name, False))
+                cells.append((arch, shape.name, True))
+        for arch, shape, mp in cells:
+            mesh_tag = "2x16x16" if mp else "16x16"
+            out = RESULTS / f"{arch}__{shape}__{mesh_tag}.json"
+            if args.skip_existing and out.exists():
+                continue
+            try:
+                save(dryrun_cell(arch, shape, mp, remat=args.remat))
+            except Exception as e:
+                failures.append((arch, shape, mesh_tag, repr(e)))
+                print(f"[dryrun] FAIL {arch} x {shape} x {mesh_tag}: {e}",
+                      flush=True)
+                traceback.print_exc()
+        print(f"\n[dryrun] done; {len(failures)} failures")
+        for f in failures:
+            print("  FAIL:", *f[:3])
+        sys.exit(1 if failures else 0)
+    else:
+        result = dryrun_cell(args.arch, args.shape or "train_4k",
+                             args.multi_pod, remat=args.remat)
+        save(result)
+        print(json.dumps(result, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Composes the full stack: config registry -> model -> sharded train step
+(on the active mesh) -> lock-free data pipeline -> Trainer (checkpoint/
+restart, straggler detection, NBW telemetry).
+
+On this CPU container run smoke-size archs (``--smoke``); on a TPU fleet
+drop ``--smoke`` and pass ``--mesh single|multi`` to get the production
+mesh of DESIGN.md §6 (the dry-run proves every full config compiles).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.data.pipeline import DataPipeline
+from repro.models.model import build_model
+from repro.parallel import sharding as shlib
+from repro.train.optimizer import AdamW, OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main(argv=None) -> Trainer:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--remat", default="nothing",
+                    choices=["nothing", "dots", "none"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "single", "multi"],
+                    help="production mesh (requires >= 256 devices)")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg, remat_policy=args.remat)
+    opt = AdamW(OptConfig(lr=args.lr, total_steps=args.steps))
+
+    ctx = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        ctx = shlib.axis_rules(mesh, cfg.mesh_rules or {})
+        ctx.__enter__()
+
+    tc = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    trainer = Trainer(model, opt, tc, resume=args.resume)
+    pipe = DataPipeline(batch=args.batch, seq_len=args.seq,
+                        vocab=cfg.vocab_size, nproducers=2)
+    try:
+        hist = trainer.fit(
+            pipe, steps=args.steps,
+            on_metrics=lambda s, m: print(
+                f"step {s:5d}  loss {m['loss']:.4f}  "
+                f"gnorm {m['grad_norm']:.2f}  {m['dt_s'] * 1e3:.0f} ms",
+                flush=True))
+    finally:
+        pipe.close()
+        trainer.close()
+        if ctx:
+            ctx.__exit__(None, None, None)
+    print(f"done: {trainer.step} steps, final loss "
+          f"{hist[-1]['loss']:.4f}, stragglers {trainer.straggler_steps}")
+    return trainer
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""input_specs(): shape/dtype stand-ins for every model input.
+
+For dry-runs these are ``jax.ShapeDtypeStruct``s (no allocation); for smoke
+tests / examples they are concrete random arrays.  Modality frontends are
+stubs per the assignment: VLM cells get precomputed patch embeddings,
+whisper cells get precomputed audio-frame embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S + 1), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, cfg.d_model), cfg.compute_dtype)
+    if cfg.encoder is not None:
+        specs["frame_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder.num_frames, cfg.d_model), cfg.compute_dtype)
+    return specs
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["extras"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, cfg.d_model), cfg.compute_dtype)
+    if cfg.encoder is not None:
+        specs["extras"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder.num_frames, cfg.d_model), cfg.compute_dtype)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, model) -> Dict[str, Any]:
+    """Inputs for serve_step: one new token, KV cache of seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(lambda: model.init_cache(B, S))
+    return {
+        "caches": caches,
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def concrete(specs, rng: Optional[jax.Array] = None, vocab: int = 256):
+    """Materialize a spec tree with random (token) / normal (float) data."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    leaves, treedef = jax.tree.flatten(specs)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for k, leaf in zip(keys, leaves):
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            out.append(jax.random.randint(k, leaf.shape, 0, vocab,
+                                          dtype=leaf.dtype))
+        else:
+            out.append(jax.random.normal(k, leaf.shape, jnp.float32)
+                       .astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,136 @@
+"""Chunked linear attention with data-dependent per-channel decay.
+
+One primitive serves both SSM-family archs:
+
+  * Mamba2 / SSD (zamba2): scalar-per-head decay, q=C, k=B, v=dt*x,
+  * RWKV-6 "Finch": per-key-channel decay w_t, receptance r as q, bonus u.
+
+Recurrence over state S_t in R^{N x P} (N = key/state channels, P = value):
+
+    S_t = diag(exp(ld_t)) S_{t-1} + k_t v_t^T
+    y_t = q_t^T (S applied per `decay_at_readout`)           (mamba: S_t)
+    y_t = q_t^T (S_{t-1} + diag(u) k_t v_t^T)                (rwkv)
+
+The chunked form exploits that per-channel decay factors *separate*:
+exp(L_t - L_s) = exp(L_t) * exp(-L_s) with L the running log-decay sum, so
+the intra-chunk interaction matrix is a plain matmul of decay-scaled q and k
+— MXU-friendly, no [C,C,N] blowup.  ``ld`` is clamped at ``-clamp`` per step
+so exp(-L_s) stays inside f32 range for a chunk (clamp * chunk <= 80 nats);
+contributions below e^-80 are numerically dead anyway.  The sequential-scan
+reference (`decay_linear_attention_scan`) applies the same clamp, so chunked
+and scan forms agree to float tolerance (property-tested).
+
+This is the TPU-native adaptation of the paper's ring-buffer insight for
+recurrent state: the chunk boundary hand-off is the single "message" between
+consecutive chunk computations, everything inside a chunk is lock-free
+parallel work (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+
+def _clamp(ld: jax.Array, clamp: float) -> jax.Array:
+    return jnp.clip(ld, -clamp, 0.0)
+
+
+def decay_linear_attention_scan(
+    q: jax.Array, k: jax.Array, v: jax.Array, ld: jax.Array,
+    u: Optional[jax.Array] = None,
+    initial_state: Optional[jax.Array] = None,
+    decay_at_readout: bool = True,
+    clamp: float = 5.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential reference / decode path.
+
+    q,k: [B,T,H,N]; v: [B,T,H,P]; ld: [B,T,H,N] (log decay, <=0);
+    u: [H,N] bonus (rwkv) or None (mamba).
+    Returns y [B,T,H,P], final state [B,H,N,P].
+    """
+    B, T, H, N = q.shape
+    P = v.shape[-1]
+    ld = _clamp(ld.astype(jnp.float32), clamp)
+    S0 = (jnp.zeros((B, H, N, P), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(S, inp):
+        qt, kt, vt, ldt = inp  # [B,H,N], [B,H,N], [B,H,P], [B,H,N]
+        qt = qt.astype(jnp.float32)
+        kt = kt.astype(jnp.float32)
+        vt = vt.astype(jnp.float32)
+        kv = kt[..., :, None] * vt[..., None, :]            # [B,H,N,P]
+        decay = jnp.exp(ldt)[..., :, None]                  # [B,H,N,1]
+        if decay_at_readout:
+            S_new = decay * S + kv
+            y = jnp.einsum("bhn,bhnp->bhp", qt, S_new)
+        else:
+            read = S + (u[None, :, :, None].astype(jnp.float32) * kv
+                        if u is not None else kv)
+            y = jnp.einsum("bhn,bhnp->bhp", qt, read)
+            S_new = decay * S + kv
+        return S_new, y
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), ld.transpose(1, 0, 2, 3))
+    S, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(v.dtype), S
+
+
+def decay_linear_attention_chunked(
+    q: jax.Array, k: jax.Array, v: jax.Array, ld: jax.Array,
+    u: Optional[jax.Array] = None,
+    initial_state: Optional[jax.Array] = None,
+    decay_at_readout: bool = True,
+    chunk: int = 64,
+    clamp: float = 1.25,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunk-parallel form.  Shapes as in the scan variant; T % chunk == 0."""
+    B, T, H, N = q.shape
+    P = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    assert clamp * chunk <= 80.0, "decay clamp too loose for f32 exp range"
+    C = chunk
+    NC = T // C
+
+    ld = _clamp(ld.astype(jnp.float32), clamp)
+    f32 = lambda x: x.astype(jnp.float32)
+
+    def reshape_chunks(x):
+        return x.reshape(B, NC, C, H, -1).transpose(1, 0, 2, 3, 4)  # [NC,B,C,H,*]
+
+    qc, kc, vc, ldc = map(reshape_chunks, (f32(q), f32(k), f32(v), ld))
+
+    S0 = (jnp.zeros((B, H, N, P), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    causal = jnp.tril(jnp.ones((C, C), jnp.bool_), 0 if decay_at_readout else -1)
+
+    def chunk_step(S, inp):
+        qi, ki, vi, ldi = inp                       # [B,C,H,N|P]
+        L = jnp.cumsum(ldi, axis=1)                 # inclusive [B,C,H,N]
+        Lq = L if decay_at_readout else (L - ldi)   # rwkv reads pre-decay state
+        q_in = qi * jnp.exp(Lq)                     # <= |q| (safe)
+        k_out = ki * jnp.exp(-L)                    # bounded by clamp*chunk
+        # Intra-chunk: separable decay -> plain matmuls.
+        A = jnp.einsum("bthn,bshn->bhts", q_in, k_out)
+        A = jnp.where(causal[None, None], A, 0.0)
+        y = jnp.einsum("bhts,bshp->bthp", A, vi)
+        if u is not None:
+            # rwkv diagonal bonus: current token with weight u.
+            y = y + jnp.einsum("bthn,hn,bthn,bthp->bthp", qi, f32(u), ki, vi)
+        # Inter-chunk: read the carried state.
+        y = y + jnp.einsum("bthn,bhnp->bthp", q_in, S)
+        # State hand-off (the chunk's single "message").
+        Ltot = L[:, -1][:, :, :, None]              # [B,H,N,1]
+        k_tail = ki * jnp.exp(Ltot.transpose(0, 3, 1, 2) - L)   # [B,C,H,N]
+        S_new = jnp.exp(Ltot) * S + jnp.einsum("bthn,bthp->bhnp", k_tail, vi)
+        return S_new, y
+
+    S, ys = jax.lax.scan(chunk_step, S0, (qc, kc, vc, ldc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, P)
+    return y.astype(v.dtype), S

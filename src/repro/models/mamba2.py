@@ -1,0 +1,125 @@
+"""Mamba2 (SSD) block — the zamba2 hybrid's sequence mixer.
+
+in_proj -> [z | xBC | dt]; causal depthwise conv over xBC; SSD recurrence via
+the shared chunked-decay-linear-attention primitive (scalar decay per head,
+ngroups=1); gated RMSNorm; out_proj.  Decode carries (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamBuilder, rms_norm
+from repro.models.linear_attention import (
+    decay_linear_attention_chunked, decay_linear_attention_scan)
+from repro.parallel.sharding import Axes, shard
+
+MAMBA_CLAMP = 1.25  # per-step log-decay clamp (fits f32 with chunk 64)
+
+
+def _dims(cfg: ModelConfig):
+    ss = cfg.ssm
+    d_in = ss.expand * cfg.d_model
+    nh = ss.num_heads or d_in // ss.head_dim
+    return ss, d_in, nh
+
+
+def mamba2_params(make: ParamBuilder, cfg: ModelConfig) -> Dict[str, Any]:
+    ss, d_in, nh = _dims(cfg)
+    d, N = cfg.d_model, ss.state_dim
+    m = make.scope("mamba2")
+    # projection order: z (d_in) | x (d_in) | B (N) | C (N) | dt (nh)
+    return {
+        "in_proj": m("in_proj", (d, 2 * d_in + 2 * N + nh),
+                     Axes("embed", "mlp"), fan_in=d),
+        "conv_w": m("conv_w", (ss.conv_kernel, d_in + 2 * N),
+                    Axes("conv_kernel", "mlp"), scale=ss.conv_kernel ** -0.5),
+        "conv_b": m("conv_b", (d_in + 2 * N,), Axes("mlp"), zero=True),
+        "a_log": m("a_log", (nh,), Axes("heads"), scale=1.0),
+        "dt_bias": m("dt_bias", (nh,), Axes("heads"), scale=1.0),
+        "d_skip": m("d_skip", (nh,), Axes("heads"), scale=1.0),
+        "norm": m("norm", (d_in,), Axes("mlp"), zero=False, scale=1.0),
+        "out_proj": m("out_proj", (d_in, d), Axes("mlp", "embed"), fan_in=d_in),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    ss, d_in, nh = _dims(cfg)
+    N = ss.state_dim
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in:2 * d_in + 2 * N]
+    dt = proj[..., 2 * d_in + 2 * N:]
+    return z, xBC, dt
+
+
+def _ssd(p, cfg, x_heads, Bmat, Cmat, dt, initial_state, chunked: bool):
+    """x_heads [B,T,nh,hd], Bmat/Cmat [B,T,N], dt [B,T,nh] (post-softplus)."""
+    ss, d_in, nh = _dims(cfg)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # [nh], < 0
+    ld = dt * a[None, None, :]                               # [B,T,nh] log decay
+    ld = jnp.broadcast_to(ld[..., None], ld.shape + (ss.state_dim,))
+    q = jnp.broadcast_to(Cmat[:, :, None, :],
+                         Cmat.shape[:2] + (nh, ss.state_dim))
+    k = jnp.broadcast_to(Bmat[:, :, None, :],
+                         Bmat.shape[:2] + (nh, ss.state_dim))
+    v = x_heads * dt[..., None]                              # fold dt into input
+    fn = decay_linear_attention_chunked if chunked else decay_linear_attention_scan
+    kwargs = dict(chunk=ss.chunk) if chunked else {}
+    y, S = fn(q, k, v, ld, u=None, initial_state=initial_state,
+              decay_at_readout=True, clamp=MAMBA_CLAMP, **kwargs)
+    y = y + x_heads * p["d_skip"].astype(y.dtype)[None, None, :, None]
+    return y, S
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=None):
+    ss, d_in, nh = _dims(cfg)
+    dtype = dtype or cfg.compute_dtype
+    return {
+        "conv": jnp.zeros((batch, ss.conv_kernel - 1, d_in + 2 * ss.state_dim),
+                          dtype),
+        "ssm": jnp.zeros((batch, nh, ss.state_dim, ss.head_dim), jnp.float32),
+    }
+
+
+def mamba2_block(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array,
+                 cache: Optional[Dict[str, jax.Array]] = None,
+                 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: [B,T,D] -> ([B,T,D], new_cache)."""
+    ss, d_in, nh = _dims(cfg)
+    B, T, D = x.shape
+    proj = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    proj = shard(proj, "batch", "seq", "mlp")
+    z, xBC, dt = _split_proj(cfg, proj)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+
+    new_cache = None
+    if cache is None:
+        pad = jnp.zeros((B, ss.conv_kernel - 1, xBC.shape[-1]), xBC.dtype)
+        xBC_seq = jnp.concatenate([pad, xBC], axis=1)
+    else:
+        xBC_seq = jnp.concatenate([cache["conv"], xBC], axis=1)
+        new_conv = xBC_seq[:, -(ss.conv_kernel - 1):]
+    # Causal depthwise conv (kernel k): sum of k shifted slices.
+    conv = sum(xBC_seq[:, i:i + T] * p["conv_w"][i][None, None, :]
+               for i in range(ss.conv_kernel))
+    xBC = jax.nn.silu(conv + p["conv_b"][None, None, :])
+
+    x_in = xBC[..., :d_in].reshape(B, T, nh, ss.head_dim)
+    Bmat = xBC[..., d_in:d_in + ss.state_dim]
+    Cmat = xBC[..., d_in + ss.state_dim:]
+
+    initial = cache["ssm"] if cache is not None else None
+    chunked = cache is None and T % ss.chunk == 0
+    y, S = _ssd(p, cfg, x_in, Bmat, Cmat, dt, initial, chunked)
+    if cache is not None:
+        new_cache = {"conv": new_conv, "ssm": S}
+
+    y = y.reshape(B, T, d_in).astype(x.dtype)
+    # Gated RMSNorm (mamba2-style): norm(y * silu(z)).
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    return shard(out, "batch", "seq", "embed"), new_cache

@@ -1,0 +1,627 @@
+"""Model assembly: build any assigned architecture from its ModelConfig.
+
+``build_model(cfg)`` returns a :class:`Model` exposing:
+
+  init(rng) -> params                  param_axes() -> Axes tree
+  loss(params, batch) -> (scalar, metrics)          [train step body]
+  prefill(params, batch, max_len) -> (cache, last_tok)
+  decode_step(params, cache, tokens, pos) -> (next_tok, cache)
+  init_cache(batch, max_len) -> abstract cache (zeros)
+
+Layer stacks are scanned (stacked params) so HLO size is O(1) in depth;
+heterogeneous archs (gemma3 local:global, zamba2 shared-attn hybrid, vlm
+cross-attn) scan over *superblocks*.  Every train-mode block is wrapped in
+``jax.checkpoint`` with a configurable remat policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba2 as m2
+from repro.models import rwkv6 as rw
+from repro.models.config import ModelConfig
+from repro.models.layers import (ParamBuilder, attention, attention_params,
+                                 embed, embed_params, init_kv_cache, mlp,
+                                 mlp_params, rms_norm, unembed_matrix)
+from repro.models.losses import chunked_softmax_xent, full_logits
+from repro.models.moe import moe_block, moe_params
+from repro.parallel.sharding import Axes, shard
+
+_REMAT_POLICIES = {
+    "nothing": None,  # jax.checkpoint default: save nothing inside the block
+    "dots": "dots_with_no_batch_dims_saveable",
+}
+
+
+def _is_axes(x):
+    return isinstance(x, Axes)
+
+
+def stack_params(n: int, build_fn: Callable[[ParamBuilder], Any],
+                 make: ParamBuilder, name: str):
+    """Stack ``n`` independently-initialized copies of a param subtree."""
+    scoped = make.scope(name)
+    if make.mode == "axes":
+        tree = build_fn(scoped)
+        return jax.tree.map(lambda a: a.prepend("layers"), tree,
+                            is_leaf=_is_axes)
+    keys = jax.random.split(scoped.rng, n)
+    return jax.vmap(
+        lambda k: build_fn(ParamBuilder("init", k, scoped.dtype, scoped.prefix))
+    )(keys)
+
+
+# ---------------------------------------------------------------------------
+# Blocks: pre-norm residual units.
+# ---------------------------------------------------------------------------
+def _norm_param(make: ParamBuilder, name: str, dim: int):
+    if make.mode == "axes":
+        return Axes("embed")
+    return jnp.ones((dim,), make.dtype)
+
+
+def attn_block_params(make: ParamBuilder, cfg: ModelConfig,
+                      with_mlp: bool = True, cross: bool = False,
+                      d_ff: Optional[int] = None):
+    p = {
+        "ln1": _norm_param(make, "ln1", cfg.d_model),
+        "attn": attention_params(make, cfg, cross=cross),
+    }
+    if with_mlp:
+        p["ln2"] = _norm_param(make, "ln2", cfg.d_model)
+        p["mlp"] = mlp_params(make, cfg, d_ff=d_ff)
+    return p
+
+
+def attn_block(p, cfg: ModelConfig, x, positions, window=0, cache=None,
+               cache_pos=None, kv_source=None, causal=True,
+               static_cache=False):
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    if static_cache:
+        # Cross-attention against precomputed (cached) K/V.
+        a, new_cache = _attend_static(p["attn"], cfg, h, cache), cache
+    else:
+        a, new_cache = attention(p["attn"], cfg, h, positions, window=window,
+                                 cache=cache, cache_pos=cache_pos,
+                                 kv_source=kv_source)
+    x = x + a
+    if "mlp" in p:
+        x = x + mlp(p["mlp"], rms_norm(p["ln2"], x, cfg.norm_eps))
+    return x, new_cache
+
+
+def _attend_static(pa, cfg: ModelConfig, x, kv_cache):
+    """Decode-time cross-attention: q against precomputed k/v (no mask)."""
+    B, T, D = x.shape
+    nh, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q = jnp.einsum("btd,dhk->bthk", x, pa["wq"])
+    if cfg.qk_norm:
+        q = rms_norm(pa["q_norm"], q, cfg.norm_eps)
+    k, v = kv_cache["k"], kv_cache["v"]
+    group = nh // nkv
+    qg = q.reshape(B, T, nkv, group, hd)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qg, k,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs, v).reshape(B, T, nh, hd)
+    return jnp.einsum("bthk,hkd->btd", out, pa["wo"])
+
+
+def cross_kv(pa, cfg: ModelConfig, source: jax.Array):
+    """Precompute cross-attention K/V from an encoder/image source."""
+    k = jnp.einsum("bsd,dhk->bshk", source, pa["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", source, pa["wv"])
+    if cfg.qk_norm:
+        k = rms_norm(pa["k_norm"], k, cfg.norm_eps)
+    return {"k": k, "v": v}
+
+
+def moe_block_params(make: ParamBuilder, cfg: ModelConfig):
+    p = {
+        "ln1": _norm_param(make, "ln1", cfg.d_model),
+        "attn": attention_params(make, cfg),
+        "ln2": _norm_param(make, "ln2", cfg.d_model),
+        "moe": moe_params(make, cfg),
+    }
+    if cfg.moe.dense_residual:
+        p["dense"] = mlp_params(make, cfg)
+    return p
+
+
+def moe_layer(p, cfg: ModelConfig, x, positions, cache=None, cache_pos=None):
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    a, new_cache = attention(p["attn"], cfg, h, positions, cache=cache,
+                             cache_pos=cache_pos)
+    x = x + a
+    h = rms_norm(p["ln2"], x, cfg.norm_eps)
+    y, aux = moe_block(p["moe"], cfg, h)
+    if "dense" in p:
+        y = y + mlp(p["dense"], h)  # arctic: dense residual in parallel
+    return x + y, new_cache, aux
+
+
+def mamba_layer_params(make: ParamBuilder, cfg: ModelConfig):
+    return {"ln": _norm_param(make, "ln", cfg.d_model),
+            "mixer": m2.mamba2_params(make, cfg)}
+
+
+def mamba_layer(p, cfg: ModelConfig, x, cache=None):
+    h = rms_norm(p["ln"], x, cfg.norm_eps)
+    y, new_cache = m2.mamba2_block(p["mixer"], cfg, h, cache=cache)
+    return x + y, new_cache
+
+
+def rwkv_layer_params(make: ParamBuilder, cfg: ModelConfig):
+    return {"ln1": _norm_param(make, "ln1", cfg.d_model),
+            "ln2": _norm_param(make, "ln2", cfg.d_model),
+            "rwkv": rw.rwkv6_params(make, cfg)}
+
+
+def rwkv_layer(p, cfg: ModelConfig, x, cache=None):
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    y, c1 = rw.rwkv6_time_mix(p["rwkv"], cfg, h, cache=cache)
+    x = x + y
+    h = rms_norm(p["ln2"], x, cfg.norm_eps)
+    y, c2 = rw.rwkv6_channel_mix(p["rwkv"], cfg, h, cache=cache)
+    x = x + y
+    new_cache = None
+    if cache is not None:
+        new_cache = {**c1, **c2}
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    remat_policy: str = "nothing"
+
+    # -- parameters ----------------------------------------------------------
+    def _build(self, make: ParamBuilder):
+        cfg = self.cfg
+        p: Dict[str, Any] = {"embed": embed_params(make.scope("tok"), cfg)}
+        fam = self._structure()
+        if fam == "uniform_attn":
+            p["layers"] = stack_params(cfg.num_layers,
+                                       lambda m: attn_block_params(m, cfg),
+                                       make, "layers")
+        elif fam == "uniform_moe":
+            p["layers"] = stack_params(cfg.num_layers,
+                                       lambda m: moe_block_params(m, cfg),
+                                       make, "layers")
+        elif fam == "uniform_rwkv":
+            p["layers"] = stack_params(cfg.num_layers,
+                                       lambda m: rwkv_layer_params(m, cfg),
+                                       make, "layers")
+        elif fam == "gemma_local_global":
+            per, nsb, tail = self._gemma_plan()
+            p["super"] = stack_params(
+                nsb,
+                lambda m: {
+                    "local": stack_params(per, lambda mm: attn_block_params(mm, cfg),
+                                          m, "local"),
+                    "global": attn_block_params(m.scope("global"), cfg),
+                }, make, "super")
+            if tail:
+                p["tail"] = stack_params(tail,
+                                         lambda m: attn_block_params(m, cfg),
+                                         make, "tail")
+        elif fam == "zamba_hybrid":
+            nsb, per = self._zamba_plan()
+            p["shared_attn"] = attn_block_params(
+                make.scope("shared_attn"), cfg, with_mlp=True, d_ff=cfg.d_ff)
+            p["super"] = stack_params(
+                nsb,
+                lambda m: stack_params(per, lambda mm: mamba_layer_params(mm, cfg),
+                                       m, "mamba"),
+                make, "super")
+        elif fam == "vlm_cross":
+            nsb, per, cross_at = self._vlm_plan()
+            p["super"] = stack_params(
+                nsb,
+                lambda m: {
+                    "selfs": stack_params(per - 1,
+                                          lambda mm: attn_block_params(mm, cfg),
+                                          m, "selfs"),
+                    "cross": attn_block_params(m.scope("cross"), cfg, cross=True),
+                }, make, "super")
+        elif fam == "enc_dec":
+            enc = self.cfg.encoder
+            p["encoder"] = stack_params(enc.num_layers,
+                                        lambda m: attn_block_params(m, cfg),
+                                        make, "encoder")
+            p["enc_norm"] = _norm_param(make, "enc_norm", cfg.d_model)
+            p["layers"] = stack_params(
+                cfg.num_layers,
+                lambda m: {
+                    "self": attn_block_params(m, cfg, with_mlp=False),
+                    "cross": attn_block_params(m, cfg, with_mlp=True, cross=True),
+                }, make, "decoder")
+        else:
+            raise ValueError(fam)
+        p["final_norm"] = _norm_param(make, "final_norm", cfg.d_model)
+        return p
+
+    def _structure(self) -> str:
+        cfg = self.cfg
+        if cfg.encoder is not None:
+            return "enc_dec"
+        if cfg.rwkv is not None:
+            return "uniform_rwkv"
+        if cfg.ssm is not None:
+            return "zamba_hybrid"
+        if cfg.cross_attn_every:
+            return "vlm_cross"
+        if cfg.moe is not None:
+            return "uniform_moe"
+        if cfg.local_global_ratio:
+            return "gemma_local_global"
+        return "uniform_attn"
+
+    def _gemma_plan(self):
+        per = self.cfg.local_global_ratio          # local layers per global
+        block = per + 1
+        nsb = self.cfg.num_layers // block
+        tail = self.cfg.num_layers - nsb * block   # trailing local layers
+        return per, nsb, tail
+
+    def _zamba_plan(self):
+        per = self.cfg.attn_every                  # mamba layers per superblock
+        nsb = self.cfg.num_layers // per
+        assert nsb * per == self.cfg.num_layers
+        return nsb, per
+
+    def _vlm_plan(self):
+        per = self.cfg.cross_attn_every
+        nsb = self.cfg.num_layers // per
+        assert nsb * per == self.cfg.num_layers
+        return nsb, per, per - 2  # cross sits at index per-2 (e.g. 3 of 0..4)
+
+    def init(self, rng: jax.Array):
+        make = ParamBuilder("init", rng, self.cfg.compute_dtype)
+        return self._build(make)
+
+    def param_axes(self):
+        return self._build(ParamBuilder("axes"))
+
+    # -- forward -------------------------------------------------------------
+    def _remat(self, fn):
+        pol = self.remat_policy
+        if pol == "none":
+            return fn
+        if pol == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            return jax.checkpoint(fn, policy=policy)
+        return jax.checkpoint(fn)
+
+    def _run_stack(self, params, x, positions, caches, cache_pos, train,
+                   extras=None):
+        """Returns (hidden, new_caches, aux_loss)."""
+        cfg = self.cfg
+        fam = self._structure()
+        aux = jnp.zeros((), jnp.float32)
+        decode = caches is not None
+
+        if fam == "uniform_attn":
+            def body(x, inp):
+                lp, c = inp
+                out, nc = attn_block(lp, cfg, x, positions,
+                                     window=cfg.sliding_window,
+                                     cache=c, cache_pos=cache_pos)
+                return out, nc
+            f = body if decode else self._remat(body)
+            x, new_caches = jax.lax.scan(f, x, (params["layers"], caches))
+
+        elif fam == "uniform_moe":
+            def body(carry, inp):
+                x, aux = carry
+                lp, c = inp
+                out, nc, a = moe_layer(lp, cfg, x, positions, cache=c,
+                                       cache_pos=cache_pos)
+                return (out, aux + a), nc
+            f = body if decode else self._remat(body)
+            (x, aux), new_caches = jax.lax.scan(
+                f, (x, aux), (params["layers"], caches))
+
+        elif fam == "uniform_rwkv":
+            def body(x, inp):
+                lp, c = inp
+                return rwkv_layer(lp, cfg, x, cache=c)
+            f = body if decode else self._remat(body)
+            x, new_caches = jax.lax.scan(f, x, (params["layers"], caches))
+
+        elif fam == "gemma_local_global":
+            per, nsb, tail = self._gemma_plan()
+
+            def superblock(x, inp):
+                sp, c = inp
+                lc = c["local"] if decode else [None] * per
+                new_local = []
+                for i in range(per):
+                    lp_i = jax.tree.map(lambda a: a[i], sp["local"])
+                    ci = jax.tree.map(lambda a: a[i], c["local"]) if decode else None
+                    x, nc = attn_block(lp_i, cfg, x, positions,
+                                       window=cfg.sliding_window,
+                                       cache=ci, cache_pos=cache_pos)
+                    new_local.append(nc)
+                x, ngc = attn_block(sp["global"], cfg, x, positions, window=0,
+                                    cache=c["global"] if decode else None,
+                                    cache_pos=cache_pos)
+                if decode:
+                    stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_local)
+                    return x, {"local": stacked, "global": ngc}
+                return x, None
+            f = superblock if decode else self._remat(superblock)
+            x, new_super = jax.lax.scan(
+                f, x, (params["super"],
+                       caches["super"] if decode else None))
+            new_caches = {"super": new_super} if decode else None
+            if tail:
+                def tailbody(x, inp):
+                    lp, c = inp
+                    return attn_block(lp, cfg, x, positions,
+                                      window=cfg.sliding_window,
+                                      cache=c, cache_pos=cache_pos)
+                ft = tailbody if decode else self._remat(tailbody)
+                x, new_tail = jax.lax.scan(
+                    ft, x, (params["tail"], caches["tail"] if decode else None))
+                if decode:
+                    new_caches["tail"] = new_tail
+
+        elif fam == "zamba_hybrid":
+            nsb, per = self._zamba_plan()
+            shared = params["shared_attn"]
+
+            def superblock(x, inp):
+                sp, c = inp
+                x, nac = attn_block(shared, cfg, x, positions,
+                                    cache=c["attn"] if decode else None,
+                                    cache_pos=cache_pos)
+                new_m = []
+                for i in range(per):
+                    lp_i = jax.tree.map(lambda a: a[i], sp)
+                    ci = jax.tree.map(lambda a: a[i], c["mamba"]) if decode else None
+                    x, nc = mamba_layer(lp_i, cfg, x, cache=ci)
+                    new_m.append(nc)
+                if decode:
+                    stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_m)
+                    return x, {"attn": nac, "mamba": stacked}
+                return x, None
+            f = superblock if decode else self._remat(superblock)
+            x, new_super = jax.lax.scan(
+                f, x, (params["super"], caches["super"] if decode else None))
+            new_caches = {"super": new_super} if decode else None
+
+        elif fam == "vlm_cross":
+            nsb, per, cross_at = self._vlm_plan()
+            image_embeds = extras  # [B, n_img, D] (train) or None (decode)
+
+            def superblock(x, inp):
+                sp, c = inp
+                new_selfs = []
+                si = 0
+                ncc = None
+                for pos_in_block in range(per):
+                    if pos_in_block == cross_at:
+                        if decode:
+                            x, _ = attn_block(sp["cross"], cfg, x, positions,
+                                              cache=c["cross"],
+                                              static_cache=True)
+                            ncc = c["cross"]
+                        else:
+                            x, _ = attn_block(sp["cross"], cfg, x, positions,
+                                              kv_source=image_embeds)
+                    else:
+                        lp_i = jax.tree.map(lambda a: a[si], sp["selfs"])
+                        ci = (jax.tree.map(lambda a: a[si], c["selfs"])
+                              if decode else None)
+                        x, nc = attn_block(lp_i, cfg, x, positions,
+                                           cache=ci, cache_pos=cache_pos)
+                        new_selfs.append(nc)
+                        si += 1
+                if decode:
+                    stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_selfs)
+                    return x, {"selfs": stacked, "cross": ncc}
+                return x, None
+            f = superblock if decode else self._remat(superblock)
+            x, new_super = jax.lax.scan(
+                f, x, (params["super"], caches["super"] if decode else None))
+            new_caches = {"super": new_super} if decode else None
+
+        elif fam == "enc_dec":
+            enc_out = extras  # encoder output [B, S_enc, D]
+
+            def body(x, inp):
+                lp, c = inp
+                h = x
+                x, nc = attn_block(lp["self"], cfg, x, positions,
+                                   cache=c["self"] if decode else None,
+                                   cache_pos=cache_pos)
+                if decode:
+                    x, _ = attn_block(lp["cross"], cfg, x, positions,
+                                      cache=c["cross"], static_cache=True)
+                    ncc = c["cross"]
+                    return x, {"self": nc, "cross": ncc}
+                x, _ = attn_block(lp["cross"], cfg, x, positions,
+                                  kv_source=enc_out)
+                return x, None
+            f = body if decode else self._remat(body)
+            x, new_caches = jax.lax.scan(
+                f, x, (params["layers"], caches))
+        else:
+            raise ValueError(fam)
+
+        return x, new_caches, aux
+
+    def _encode(self, params, frame_embeds):
+        """Whisper encoder: bidirectional self-attention over frames."""
+        cfg = self.cfg
+        B, S, D = frame_embeds.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+        def body(x, lp):
+            h = rms_norm(lp["ln1"], x, cfg.norm_eps)
+            a, _ = attention(lp["attn"], cfg, h, positions, kv_source=h)
+            x = x + a  # kv_source=h -> no causal mask (bidirectional)
+            x = x + mlp(lp["mlp"], rms_norm(lp["ln2"], x, cfg.norm_eps))
+            return x, None
+
+        x, _ = jax.lax.scan(self._remat(body), frame_embeds.astype(cfg.compute_dtype),
+                            params["encoder"])
+        return rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+    # -- public API ----------------------------------------------------------
+    def forward(self, params, tokens, extras=None, caches=None,
+                cache_pos=None, start_pos=None):
+        cfg = self.cfg
+        B, T = tokens.shape
+        tokens = shard(tokens, "batch", "seq")
+        if start_pos is None:
+            positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+        else:
+            positions = jnp.broadcast_to(start_pos + jnp.arange(T), (B, T))
+        x = embed(params["embed"], tokens, cfg)
+        if cfg.encoder is not None and extras is not None:
+            extras = self._encode(params, extras)
+        x, new_caches, aux = self._run_stack(params, x, positions, caches,
+                                             cache_pos, train=caches is None,
+                                             extras=extras)
+        x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+        return x, new_caches, aux
+
+    def loss(self, params, batch):
+        """batch: {"tokens": [B, T] (+ "image_embeds"/"frame_embeds")}.
+
+        The forward runs on the FULL T tokens (labels rolled left, final
+        position masked) rather than on tokens[:, :-1]: an odd T-1 would
+        defeat every power-of-two blocking downstream — the 512-wide
+        query-chunked attention, loss token chunks, seq sharding — and
+        cost a [T-1, T-1] f32 score materialization per layer
+        (EXPERIMENTS.md §Perf, iteration "full-length loss").
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        extras = batch.get("image_embeds", batch.get("frame_embeds"))
+        hidden, _, aux = self.forward(params, tokens, extras=extras)
+        w_out = unembed_matrix(params["embed"], cfg).astype(cfg.compute_dtype)
+        labels = jnp.roll(tokens, -1, axis=1)
+        weights = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+        xent = chunked_softmax_xent(hidden, w_out, labels, weights=weights,
+                                    layout=cfg.xent_layout)
+        total = xent + (cfg.moe.aux_loss_weight * aux if cfg.moe else 0.0)
+        return total, {"xent": xent, "aux": aux}
+
+    # -- serving -------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, extras_len: int = 0):
+        cfg = self.cfg
+        fam = self._structure()
+        W = cfg.sliding_window
+
+        def kvc(window=0):
+            return init_kv_cache(cfg, batch, max_len, window=window)
+
+        def stack_zeros(n, tree):
+            return jax.tree.map(
+                lambda a: jnp.zeros((n,) + a.shape, a.dtype), tree)
+
+        def cross_c(src_len):
+            kv = (batch, src_len, cfg.num_kv_heads, cfg.head_dim_)
+            return {"k": jnp.zeros(kv, cfg.compute_dtype),
+                    "v": jnp.zeros(kv, cfg.compute_dtype)}
+
+        if fam == "uniform_attn":
+            return stack_zeros(cfg.num_layers, kvc(W))
+        if fam == "uniform_moe":
+            return stack_zeros(cfg.num_layers, kvc())
+        if fam == "uniform_rwkv":
+            return stack_zeros(cfg.num_layers, rw.init_rwkv_cache(cfg, batch))
+        if fam == "gemma_local_global":
+            per, nsb, tail = self._gemma_plan()
+            sup = {"local": stack_zeros(per, kvc(W)), "global": kvc()}
+            out = {"super": stack_zeros(nsb, sup)}
+            if tail:
+                out["tail"] = stack_zeros(tail, kvc(W))
+            return out
+        if fam == "zamba_hybrid":
+            nsb, per = self._zamba_plan()
+            sup = {"attn": kvc(),
+                   "mamba": stack_zeros(per, m2.init_mamba_cache(cfg, batch))}
+            return {"super": stack_zeros(nsb, sup)}
+        if fam == "vlm_cross":
+            nsb, per, _ = self._vlm_plan()
+            sup = {"selfs": stack_zeros(per - 1, kvc(W)),
+                   "cross": cross_c(extras_len or cfg.num_image_tokens)}
+            return {"super": stack_zeros(nsb, sup)}
+        if fam == "enc_dec":
+            lay = {"self": kvc(), "cross": cross_c(extras_len or
+                                                   cfg.encoder.num_frames)}
+            return stack_zeros(cfg.num_layers, lay)
+        raise ValueError(fam)
+
+    def fill_cross_cache(self, params, caches, source):
+        """Populate cross-attention K/V from image/encoder source."""
+        cfg = self.cfg
+        fam = self._structure()
+        if fam == "enc_dec":
+            source = self._encode(params, source)
+            return _fill_scan(params["layers"], caches, cfg, source)
+        if fam == "vlm_cross":
+            def fill_super(sp, c):
+                return {**c, "cross": cross_kv(sp["cross"]["attn"], cfg,
+                                               source)}
+            nsb = self._vlm_plan()[0]
+            new = []
+            for i in range(nsb):
+                sp = jax.tree.map(lambda a: a[i], params["super"])
+                ci = jax.tree.map(lambda a: a[i], caches["super"])
+                new.append(fill_super(sp, ci))
+            stacked = jax.tree.map(lambda *a: jnp.stack(a), *new)
+            return {"super": stacked}
+        return caches
+
+    def decode_step(self, params, caches, tokens, pos):
+        """tokens: [B, 1]; pos: scalar absolute position. Greedy."""
+        cfg = self.cfg
+        hidden, new_caches, _ = self.forward(
+            params, tokens, caches=caches, cache_pos=pos, start_pos=pos)
+        w_out = unembed_matrix(params["embed"], cfg).astype(cfg.compute_dtype)
+        logits = full_logits(hidden, w_out)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_caches
+
+    def prefill(self, params, tokens, max_len, extras=None):
+        """Process a prompt, producing a filled cache + next token."""
+        cfg = self.cfg
+        B, T = tokens.shape
+        caches = self.init_cache(B, max_len,
+                                 extras_len=extras.shape[1] if extras is not None else 0)
+        if extras is not None or cfg.encoder is not None:
+            caches = self.fill_cross_cache(params, caches, extras)
+        hidden, new_caches, _ = self.forward(params, tokens, caches=caches,
+                                             cache_pos=jnp.int32(0),
+                                             start_pos=jnp.int32(0))
+        w_out = unembed_matrix(params["embed"], cfg).astype(cfg.compute_dtype)
+        logits = full_logits(hidden[:, -1:], w_out)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_caches
+
+
+def _fill_scan(layers, caches, cfg, source):
+    """enc-dec: fill cross K/V via scan over stacked decoder layers."""
+    def body(_, inp):
+        lp, c = inp
+        kv = cross_kv(lp["cross"]["attn"], cfg, source)
+        return None, {**c, "cross": kv}
+    _, new = jax.lax.scan(body, None, (layers, caches))
+    return new
+
+
+def build_model(cfg: ModelConfig, remat_policy: str = "nothing") -> Model:
+    return Model(cfg, remat_policy=remat_policy)

@@ -1,0 +1,136 @@
+"""RWKV-6 "Finch" block — data-dependent decay linear attention (attn-free).
+
+Time-mix: token-shift interpolation, r/k/v/gate projections, per-channel
+data-dependent decay w_t produced by a low-rank MLP (LoRA), WKV recurrence
+via the shared chunked-decay primitive (decay applied *after* readout, with
+the current-token bonus u), group-norm, silu-gated output projection.
+
+Channel-mix: token-shifted squared-ReLU MLP (d -> d_ff -> d).
+
+Decode carries (shift_tm, shift_cm, wkv_state) per layer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamBuilder, rms_norm
+from repro.models.linear_attention import (
+    decay_linear_attention_chunked, decay_linear_attention_scan)
+from repro.parallel.sharding import Axes, shard
+
+RWKV_CLAMP = 5.0  # per-step log-decay clamp; chunk 16 -> 80 nats, f32-safe
+
+
+def _dims(cfg: ModelConfig):
+    hd = cfg.rwkv.head_dim
+    nh = cfg.d_model // hd
+    return nh, hd
+
+
+def rwkv6_params(make: ParamBuilder, cfg: ModelConfig) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    nh, hd = _dims(cfg)
+    r = cfg.rwkv.decay_lora
+    m = make.scope("rwkv6")
+    p = {
+        # time-mix
+        "mix_r": m("mix_r", (d,), Axes("embed"), scale=0.5),
+        "mix_k": m("mix_k", (d,), Axes("embed"), scale=0.5),
+        "mix_v": m("mix_v", (d,), Axes("embed"), scale=0.5),
+        "mix_g": m("mix_g", (d,), Axes("embed"), scale=0.5),
+        "mix_w": m("mix_w", (d,), Axes("embed"), scale=0.5),
+        "wr": m("wr", (d, d), Axes("embed", "qkv"), fan_in=d),
+        "wk": m("wk", (d, d), Axes("embed", "qkv"), fan_in=d),
+        "wv": m("wv", (d, d), Axes("embed", "qkv"), fan_in=d),
+        "wg": m("wg", (d, d), Axes("embed", "qkv"), fan_in=d),
+        "w0": m("w0", (d,), Axes("qkv"), scale=1.0),
+        "w_lora_a": m("w_lora_a", (d, r), Axes("embed", None), fan_in=d),
+        "w_lora_b": m("w_lora_b", (r, d), Axes(None, "qkv"), fan_in=r),
+        "u_bonus": m("u_bonus", (nh, hd), Axes("heads", "head_dim"), scale=0.3),
+        "ln_x": m("ln_x", (d,), Axes("qkv"), scale=1.0),
+        "wo": m("wo", (d, d), Axes("qkv", "embed"), fan_in=d),
+        # channel-mix
+        "cmix_k": m("cmix_k", (d,), Axes("embed"), scale=0.5),
+        "cmix_r": m("cmix_r", (d,), Axes("embed"), scale=0.5),
+        "ck": m("ck", (d, f), Axes("embed", "mlp"), fan_in=d),
+        "cv": m("cv", (f, d), Axes("mlp", "embed"), fan_in=f),
+        "cr": m("cr", (d, d), Axes("embed", "qkv"), fan_in=d),
+    }
+    return p
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype=None):
+    nh, hd = _dims(cfg)
+    dtype = dtype or cfg.compute_dtype
+    return {
+        "shift_tm": jnp.zeros((batch, cfg.d_model), dtype),
+        "shift_cm": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} (zeros / cache at t=0).  x: [B,T,D]."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None, :].astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix(p, cfg: ModelConfig, x: jax.Array,
+                   cache: Optional[Dict[str, jax.Array]] = None):
+    B, T, D = x.shape
+    nh, hd = _dims(cfg)
+    xprev = _token_shift(x, cache["shift_tm"] if cache is not None else None)
+
+    def mixed(mix):
+        return x + (xprev - x) * mix[None, None, :].astype(x.dtype)
+
+    r = jnp.einsum("btd,de->bte", mixed(p["mix_r"]), p["wr"])
+    k = jnp.einsum("btd,de->bte", mixed(p["mix_k"]), p["wk"])
+    v = jnp.einsum("btd,de->bte", mixed(p["mix_v"]), p["wv"])
+    g = jnp.einsum("btd,de->bte", mixed(p["mix_g"]), p["wg"])
+    # Data-dependent decay (LoRA): w_t = exp(-exp(w0 + tanh(x A) B))
+    wx = jnp.tanh(jnp.einsum("btd,dr->btr", mixed(p["mix_w"]), p["w_lora_a"]))
+    wlog = (p["w0"].astype(jnp.float32)[None, None, :]
+            + jnp.einsum("btr,re->bte", wx, p["w_lora_b"]).astype(jnp.float32))
+    ld = -jnp.exp(wlog)                                     # [B,T,D] (<0)
+
+    heads = lambda z: z.reshape(B, T, nh, hd)
+    initial = cache["wkv"] if cache is not None else None
+    chunked = cache is None and T % cfg.rwkv.chunk == 0
+    fn = decay_linear_attention_chunked if chunked else decay_linear_attention_scan
+    kwargs = dict(chunk=cfg.rwkv.chunk) if chunked else {}
+    y, S = fn(heads(r), heads(k), heads(v), heads(ld), u=p["u_bonus"],
+              initial_state=initial, decay_at_readout=False,
+              clamp=RWKV_CLAMP, **kwargs)
+    y = y.reshape(B, T, D)
+    y = rms_norm(p["ln_x"], y, cfg.norm_eps)                # stand-in groupnorm
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bte,ed->btd", y, p["wo"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift_tm": x[:, -1], "wkv": S}
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+def rwkv6_channel_mix(p, cfg: ModelConfig, x: jax.Array,
+                      cache: Optional[Dict[str, jax.Array]] = None):
+    xprev = _token_shift(x, cache["shift_cm"] if cache is not None else None)
+
+    def mixed(mix):
+        return x + (xprev - x) * mix[None, None, :].astype(x.dtype)
+
+    k = jnp.einsum("btd,df->btf", mixed(p["cmix_k"]), p["ck"])
+    k = jnp.square(jax.nn.relu(k))
+    k = shard(k, "batch", "seq", "mlp")
+    kv = jnp.einsum("btf,fd->btd", k, p["cv"])
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", mixed(p["cmix_r"]), p["cr"]))
+    out = r * kv
+    new_shift = {"shift_cm": x[:, -1]} if cache is not None else None
+    return shard(out, "batch", "seq", "embed"), new_shift

@@ -1,0 +1,99 @@
+"""Gradient compression with error feedback for cross-pod all-reduce.
+
+At 512+ chips the data-parallel gradient all-reduce crosses the (slow)
+pod axis; int8 quantization cuts those collective bytes 4x vs f32 (2x vs
+bf16).  Error feedback (residual carried to the next step) keeps SGD
+convergence — the quantization error is re-injected instead of lost, so
+the compressed update telescopes to the true gradient sum.
+
+This composes with the paper's framing: the gradient exchange is one
+more producer/consumer channel; compression shrinks the message payload
+exactly like the paper's "combine multiple messages into a single packet
+buffer" §6 recommendation shrinks per-message overhead.
+
+All functions are pure; the error-feedback state is threaded explicitly
+(a pytree congruent with the grads).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params: Any) -> Any:
+    """Zero residual per parameter (f32 — it holds sub-int8 mass)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_grads(grads: Any, err: Any) -> Tuple[Any, Any]:
+    """(grads, err) -> (compressed {q, scale} tree, new err).
+
+    Error feedback: compress (g + err); the new err is what int8 lost.
+    """
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(target)
+        recon = dequantize_int8(q, scale)
+        return {"q": q, "scale": scale}, target - recon
+
+    flat = jax.tree.map(one, grads, err,
+                        is_leaf=lambda x: isinstance(x, jax.Array)
+                        or hasattr(x, "shape"))
+    comp = jax.tree.map(lambda t: t[0], flat,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda t: t[1], flat,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return comp, new_err
+
+
+def decompress_grads(comp: Any, dtype=jnp.float32) -> Any:
+    return jax.tree.map(
+        lambda leaf: dequantize_int8(leaf["q"], leaf["scale"], dtype),
+        comp, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+def compressed_psum(grads: Any, err: Any, axis: str,
+                    n_shards: Optional[int] = None) -> Tuple[Any, Any]:
+    """All-reduce grads over ``axis`` in int8 (inside shard_map).
+
+    Each shard quantizes (g + err) locally, the int8 payloads are summed
+    with ``psum`` (s32 accumulate to avoid overflow at <= 2^23 shards),
+    and every shard dequantizes with the max scale.  Returns the mean
+    gradient and the new error state.
+    """
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(target)
+        recon_local = dequantize_int8(q, scale)
+        # shared scale: every shard must use the same dequant factor
+        scale_max = jax.lax.pmax(scale, axis)
+        # requantize against the shared scale so sums are consistent
+        q_shared = jnp.clip(
+            jnp.round(target / scale_max), -127, 127).astype(jnp.int8)
+        recon_shared = q_shared.astype(jnp.float32) * scale_max
+        total = jax.lax.psum(q_shared.astype(jnp.int32), axis)
+        n = n_shards or jax.lax.psum(jnp.ones((), jnp.int32), axis)
+        mean = total.astype(jnp.float32) * scale_max / n
+        return mean.astype(g.dtype), target - recon_shared
+
+    pairs = jax.tree.map(one, grads, err)
+    mean = jax.tree.map(lambda t: t[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda t: t[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return mean, new_err

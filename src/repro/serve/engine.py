@@ -1,0 +1,192 @@
+"""Serving engine: lock-free request intake, batched prefill/decode.
+
+MCAPI topology, lock-free end to end (paper Figures 1-4 without the red
+lock):
+
+  client threads --SPSC NBB rings--> batcher --> prefill+decode -->
+      --per-client SPSC response rings--> clients
+
+  * intake      — each client owns a private SPSC ring of an MpscQueue;
+                  submission is InsertItem with Table-1 status codes.
+  * lifecycle   — every request carries a CAS FSM cell (Figure 3):
+                  FREE->VALID on submit, ->RECEIVED when batched,
+                  ->COMPLETED on finish, ->CANCELLED on reject;
+                  illegal transitions throw, catching scheduler bugs.
+  * KV memory   — admission claims pages from the lock-free bitset pool
+                  (kv_cache.py); a full pool *rejects* (BUFFER_FULL
+                  semantics) instead of blocking the batcher.
+  * decode      — greedy, batched; a `done` mask retires sequences at
+                  EOS/max_tokens; the round ends when all retire
+                  (batch-level continuous batching — the next wave is
+                  admitted immediately; iteration-level slot swap is
+                  future work, noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import nbb, states
+from repro.core.host_queue import MpscQueue, SpscQueue
+from repro.serve.kv_cache import OK as POOL_OK
+from repro.serve.kv_cache import PagedKVPool
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    client_id: int
+    prompt: np.ndarray                  # [T] int32
+    max_tokens: int = 16
+    eos_id: int = -1                    # -1: never
+    fsm: states.StateCell = dataclasses.field(
+        default_factory=lambda: states.request_cell())
+    tokens_out: Optional[np.ndarray] = None
+    submit_t: float = 0.0
+    done_t: float = 0.0
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, max_batch: int = 4,
+                 max_len: int = 128, n_clients: int = 2,
+                 pool_pages: int = 64, page_size: int = 16,
+                 intake_depth: int = 32):
+        self.model, self.params = model, params
+        self.max_batch, self.max_len = max_batch, max_len
+        cfg = model.cfg
+        self.intake = MpscQueue(n_clients, capacity_per_producer=intake_depth)
+        self.responses = [SpscQueue(intake_depth) for _ in range(n_clients)]
+        self.pool = PagedKVPool(
+            pool_pages, page_size, n_layers=cfg.num_layers,
+            kv_heads=max(cfg.num_kv_heads, 1), head_dim=cfg.head_dim_ or 1,
+            dtype=cfg.compute_dtype)
+        self._id = itertools.count()
+        self._stop = threading.Event()
+        self._jit_decode = jax.jit(model.decode_step)
+        self._prefill_cache: Dict[Any, Any] = {}
+        self.stats = {"served": 0, "rejected": 0, "batches": 0,
+                      "decode_steps": 0}
+
+    # -- client API (any thread) ------------------------------------------------
+    def submit(self, client_id: int, prompt: np.ndarray,
+               max_tokens: int = 16, eos_id: int = -1) -> Optional[Request]:
+        """Non-blocking submit.  None => intake ring full (caller retries)."""
+        req = Request(next(self._id), client_id, np.asarray(prompt, np.int32),
+                      max_tokens, eos_id, submit_t=time.monotonic())
+        req.fsm.transition(states.REQUEST_FREE, states.REQUEST_VALID)
+        status = self.intake.insert_item(client_id, req)
+        if status != nbb.OK:
+            req.fsm.transition(states.REQUEST_VALID, states.REQUEST_CANCELLED)
+            return None
+        return req
+
+    # -- engine loop --------------------------------------------------------------
+    def _take_batch(self, timeout_s: float = 0.05) -> List[Request]:
+        """Greedy batcher: first request blocks briefly, rest drained free."""
+        batch: List[Request] = []
+        deadline = time.monotonic() + timeout_s
+        while len(batch) < self.max_batch:
+            status, req = self.intake.read_item()
+            if status == nbb.OK:
+                # admission control: KV pages for prompt + generation
+                need = len(req.prompt) + req.max_tokens
+                if self.pool.try_admit(req.req_id, need) != POOL_OK:
+                    req.fsm.transition(states.REQUEST_VALID,
+                                       states.REQUEST_CANCELLED)
+                    self.stats["rejected"] += 1
+                    self._respond(req)
+                    continue
+                req.fsm.transition(states.REQUEST_VALID,
+                                   states.REQUEST_RECEIVED)
+                batch.append(req)
+            elif batch or time.monotonic() > deadline:
+                break
+            else:
+                time.sleep(0.001)
+        return batch
+
+    def _prefill_fn(self, prompt_len: int):
+        key = prompt_len
+        if key not in self._prefill_cache:
+            self._prefill_cache[key] = jax.jit(
+                lambda p, t: self.model.prefill(p, t, self.max_len))
+        return self._prefill_cache[key]
+
+    def _run_batch(self, batch: List[Request]) -> None:
+        B = len(batch)
+        plen = max(len(r.prompt) for r in batch)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
+        tok, caches = self._prefill_fn(plen)(self.params, jnp.asarray(toks))
+
+        max_new = max(r.max_tokens for r in batch)
+        outs = np.full((B, max_new), -1, np.int64)
+        done = np.zeros((B,), bool)
+        cur = tok
+        for step in range(max_new):
+            outs[~done, step] = np.asarray(cur)[~done]
+            for i, r in enumerate(batch):
+                if not done[i] and (outs[i, step] == r.eos_id
+                                    or step + 1 >= r.max_tokens):
+                    done[i] = True
+            if done.all() or plen + step + 1 >= self.max_len:
+                break
+            cur, caches = self._jit_decode(self.params, caches, cur[:, None],
+                                           jnp.int32(plen + step))
+            self.stats["decode_steps"] += 1
+
+        for i, r in enumerate(batch):
+            got = outs[i][outs[i] >= 0].astype(np.int32)
+            r.tokens_out = got
+            r.done_t = time.monotonic()
+            r.fsm.transition(states.REQUEST_RECEIVED, states.REQUEST_COMPLETED)
+            self.pool.free(r.req_id)
+            self.stats["served"] += 1
+            self._respond(r)
+        self.stats["batches"] += 1
+
+    def _respond(self, req: Request) -> None:
+        ring = self.responses[req.client_id]
+        while ring.insert_item(req) != nbb.OK:
+            time.sleep(0)          # response ring full: yield, retry
+
+    def step(self) -> int:
+        """One engine iteration; returns requests served."""
+        batch = self._take_batch()
+        if not batch:
+            return 0
+        self._run_batch(batch)
+        return len(batch)
+
+    def serve_forever(self) -> None:
+        while not self._stop.is_set():
+            if self.step() == 0:
+                time.sleep(0.001)
+
+    def start(self) -> threading.Thread:
+        t = threading.Thread(target=self.serve_forever, daemon=True)
+        t.start()
+        return t
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    # -- client-side receive -----------------------------------------------------
+    def get_response(self, client_id: int, timeout_s: float = 30.0
+                     ) -> Optional[Request]:
+        deadline = time.monotonic() + timeout_s
+        ring = self.responses[client_id]
+        while time.monotonic() < deadline:
+            status, req = ring.read_item()
+            if status == nbb.OK:
+                return req
+            time.sleep(0.001)
+        return None

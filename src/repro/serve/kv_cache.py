@@ -1,0 +1,149 @@
+"""Paged KV-cache pool with a lock-free bitset page allocator.
+
+The serving engine's KV memory is a fixed pool of fixed-size pages (the
+vLLM idea, TPU-adapted: pages are [page_size, kv_heads, head_dim] tiles
+whose last two dims stay MXU/VREG aligned).  Page accounting uses the
+paper's lock-free **bit set** (refactoring step 3): claim-any-free-page
+and release-page are single-CAS operations on a :class:`HostBitset`, so
+concurrent client threads admitting requests never serialize behind a
+pool lock — admission control is non-blocking and over-subscription is
+rejected with an explicit status (the NBB BUFFER_FULL discipline) rather
+than a blocked caller.
+
+Device-side, per-sequence KV lives scattered across the pool arrays; the
+engine gathers pages into a contiguous batch cache when a sequence joins
+a decode round and scatters them back on preemption (swap-out).  On real
+TPU the gather/scatter lower to HBM DMAs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitset import HostBitset
+
+OK = 0
+POOL_FULL = 1
+
+
+@dataclasses.dataclass
+class PageTable:
+    """Host-side metadata for one sequence's pages."""
+    seq_id: int
+    pages: List[int]
+    n_tokens: int = 0
+
+
+class PagedKVPool:
+    """One pool per (layer-stacked) KV tensor family.
+
+    k/v pools: [n_pages, page_size, n_layers, kv_heads, head_dim] — layer
+    innermost-batched so one page holds all layers for a token span and a
+    sequence needs ceil(len/page_size) pages total (not per layer).
+    """
+
+    def __init__(self, n_pages: int, page_size: int, n_layers: int,
+                 kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+        self.n_pages, self.page_size = n_pages, page_size
+        self.n_layers, self.kv_heads, self.head_dim = (n_layers, kv_heads,
+                                                       head_dim)
+        shape = (n_pages, page_size, n_layers, kv_heads, head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+        self._alloc = HostBitset(n_pages)
+        self._tables: Dict[int, PageTable] = {}
+        self._next_probe = 0
+
+    # -- allocation (lock-free) ------------------------------------------------
+    def pages_needed(self, n_tokens: int) -> int:
+        return max(1, math.ceil(n_tokens / self.page_size))
+
+    def try_admit(self, seq_id: int, n_tokens: int) -> int:
+        """Claim pages for a sequence.  OK or POOL_FULL (all-or-nothing;
+        claimed pages are rolled back on partial failure, so concurrent
+        admitters can't deadlock each other)."""
+        need = self.pages_needed(n_tokens)
+        got: List[int] = []
+        for _ in range(need):
+            # fresh token per claim: setdefault-CAS must not recognize our
+            # own earlier claims as "won again"
+            page = self._alloc.try_claim(owner=object(),
+                                         start=self._next_probe)
+            if page is None:
+                for p in got:      # roll back — nobody waits on us
+                    self._alloc.release(p)
+                return POOL_FULL
+            self._next_probe = (page + 1) % self.n_pages
+            got.append(page)
+        self._tables[seq_id] = PageTable(seq_id, got, n_tokens)
+        return OK
+
+    def grow(self, seq_id: int, new_n_tokens: int) -> int:
+        """Extend a sequence (decode appends); claims pages as needed."""
+        t = self._tables[seq_id]
+        need = self.pages_needed(new_n_tokens)
+        while len(t.pages) < need:
+            page = self._alloc.try_claim(owner=object(),
+                                         start=self._next_probe)
+            if page is None:
+                return POOL_FULL
+            self._next_probe = (page + 1) % self.n_pages
+            t.pages.append(page)
+        t.n_tokens = new_n_tokens
+        return OK
+
+    def free(self, seq_id: int) -> None:
+        t = self._tables.pop(seq_id)
+        for p in t.pages:
+            self._alloc.release(p)
+
+    def free_pages(self) -> int:
+        return self.n_pages - self._alloc.count()
+
+    def table(self, seq_id: int) -> PageTable:
+        return self._tables[seq_id]
+
+    # -- device data movement ---------------------------------------------------
+    def swap_in(self, seq_id: int, max_len: int
+                ) -> Tuple[jax.Array, jax.Array]:
+        """Gather a sequence's pages -> contiguous [max_len, L, kv, hd] k/v."""
+        t = self._tables[seq_id]
+        idx = jnp.asarray(t.pages, jnp.int32)
+        k = self.k[idx].reshape(-1, self.n_layers, self.kv_heads,
+                                self.head_dim)
+        v = self.v[idx].reshape(-1, self.n_layers, self.kv_heads,
+                                self.head_dim)
+        pad = max_len - k.shape[0]
+        if pad > 0:
+            zk = jnp.zeros((pad,) + k.shape[1:], k.dtype)
+            k, v = jnp.concatenate([k, zk]), jnp.concatenate([v, zk])
+        return k[:max_len], v[:max_len]
+
+    def swap_out(self, seq_id: int, k_seq: jax.Array, v_seq: jax.Array,
+                 n_tokens: int) -> int:
+        """Scatter contiguous [S, L, kv, hd] k/v back into the pool."""
+        status = self.grow(seq_id, n_tokens)
+        if status != OK:
+            return status
+        t = self._tables[seq_id]
+        ps = self.page_size
+        n_pages = self.pages_needed(n_tokens)
+        pad = n_pages * ps - k_seq.shape[0]
+        if pad > 0:
+            zk = jnp.zeros((pad,) + k_seq.shape[1:], k_seq.dtype)
+            k_seq = jnp.concatenate([k_seq, zk])
+            v_seq = jnp.concatenate([v_seq, zk])
+        idx = jnp.asarray(t.pages[:n_pages], jnp.int32)
+        k_pages = k_seq[:n_pages * ps].reshape(n_pages, ps, self.n_layers,
+                                               self.kv_heads, self.head_dim)
+        v_pages = v_seq[:n_pages * ps].reshape(n_pages, ps, self.n_layers,
+                                               self.kv_heads, self.head_dim)
+        self.k = self.k.at[idx].set(k_pages)
+        self.v = self.v.at[idx].set(v_pages)
+        return OK

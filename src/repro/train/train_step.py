@@ -1,0 +1,145 @@
+"""The jitted train/serve step functions and their sharding plumbing."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.model import Model
+from repro.parallel import sharding as shlib
+from repro.train.optimizer import AdamW, OptConfig, zero_shard_spec
+
+
+def make_train_step(model: Model, opt: AdamW, microbatches: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatches > 1`` splits the batch's leading dim and accumulates
+    gradients through a ``lax.scan`` — activation memory scales with the
+    microbatch, not the global batch (the standard fit-the-chip lever;
+    see EXPERIMENTS.md §Perf for measured peak reductions).  The scan is
+    sequential per device, so no collective schedule changes.
+    """
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                (loss, metrics), g = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g)
+                return (acc, loss_acc + loss), metrics
+
+            (grads, loss), metrics = jax.lax.scan(
+                body, (zero_g, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        new_params, new_state, opt_metrics = opt.update(grads, opt_state,
+                                                        params)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_decode_step(model: Model):
+    """serve_step: one new token against a filled KV cache."""
+
+    def serve_step(params, caches, tokens, pos):
+        return model.decode_step(params, caches, tokens, pos)
+
+    return serve_step
+
+
+def make_prefill(model: Model, max_len: int):
+    def prefill(params, tokens, extras=None):
+        return model.prefill(params, tokens, max_len, extras=extras)
+
+    return prefill
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+def param_shardings(model: Model, mesh) -> Any:
+    axes = model.param_axes()
+    return shlib.shardings_tree(axes)
+
+
+def opt_state_shardings(model: Model, opt: AdamW, mesh, params_abs) -> Any:
+    """m/v get the params' spec + ZeRO data axis on a divisible dim."""
+    axes = opt.state_axes(model.param_axes())
+    specs = shlib.specs_tree(axes)
+
+    def apply_zero(spec, leaf):
+        return NamedSharding(mesh, zero_shard_spec(spec, leaf.shape, mesh))
+
+    state_abs = jax.eval_shape(opt.init, params_abs)
+    return jax.tree.map(apply_zero, specs, state_abs)
+
+
+def batch_shardings(mesh, batch_specs) -> Any:
+    """Shard the leading (batch) dim over pod+data when divisible."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bsz = 1
+    for a in batch_axes:
+        bsz *= mesh.shape[a]
+
+    def one(leaf):
+        if leaf.ndim == 0 or leaf.shape[0] % bsz or not batch_axes:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(batch_axes, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(one, batch_specs)
+
+
+def cache_shardings(mesh, cache_abs, cfg) -> Any:
+    """KV caches: batch over pod+data when divisible, else seq over model.
+
+    Cache leaves are [layers?, B, S, kv, hd]-like; we shard the largest
+    divisible dim: prefer the batch dim, fall back to the longest dim over
+    'model' (long-context single-sample decode).
+    """
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bsz = 1
+    for a in batch_axes:
+        bsz *= mesh.shape[a]
+    msz = mesh.shape["model"]
+
+    def one(leaf):
+        entries = [None] * leaf.ndim
+        dims = list(leaf.shape)
+        used_model = False
+        # Heuristic: dims equal to known batch size get batch axes; the
+        # largest remaining dim divisible by model size gets 'model'.
+        for i, d in enumerate(dims):
+            if batch_axes and d % bsz == 0 and d >= bsz and entries[i] is None:
+                entries[i] = batch_axes
+                break
+        order = sorted(range(leaf.ndim), key=lambda i: -dims[i])
+        for i in order:
+            if entries[i] is None and dims[i] % msz == 0 and dims[i] >= msz:
+                entries[i] = "model"
+                used_model = True
+                break
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(one, cache_abs)

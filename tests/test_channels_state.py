@@ -1,0 +1,87 @@
+"""STATE (NBW) channels + broadcast composition (paper §7 future work
+and Kim'07's pub/sub composition claim)."""
+import threading
+
+from repro.core import nbb
+from repro.core.channels import ChannelType, Domain
+from repro.core.host_queue import BroadcastChannel
+
+
+def test_state_channel_freshest_wins():
+    dom = Domain()
+    a, b = dom.create_endpoint(0, 1), dom.create_endpoint(1, 1)
+    ch = dom.connect(ChannelType.STATE, a, b)
+    status, v = ch.recv()
+    assert status == nbb.BUFFER_EMPTY and v is None
+    for i in range(10):
+        assert ch.send(i) == nbb.OK        # writer never blocks
+    status, v = ch.recv()
+    assert status == nbb.OK and v == 9     # newest value, not FIFO head
+    status, v = ch.recv()
+    assert status == nbb.OK and v == 9     # state re-read is legal
+
+
+def test_state_channel_never_fills():
+    dom = Domain(queue_capacity=2)
+    a, b = dom.create_endpoint(0, 2), dom.create_endpoint(1, 2)
+    ch = dom.connect(ChannelType.STATE, a, b)
+    for i in range(1000):                  # >> any capacity
+        assert ch.send(i) == nbb.OK
+    assert ch.recv() == (nbb.OK, 999)
+
+
+def test_state_channel_threaded_monotone_reads():
+    """Readers may skip values but never see them go backwards."""
+    dom = Domain()
+    a, b = dom.create_endpoint(0, 3), dom.create_endpoint(1, 3)
+    ch = dom.connect(ChannelType.STATE, a, b, nbw_depth=8)
+    n = 20_000
+    errors = []
+
+    def writer():
+        for i in range(1, n + 1):
+            ch.send(i)
+
+    def reader():
+        last = 0
+        while last < n:
+            status, v = ch.recv()
+            if status == nbb.OK and v is not None:
+                if v < last:
+                    errors.append((last, v))
+                    return
+                last = v
+
+    tw, tr = threading.Thread(target=writer), threading.Thread(target=reader)
+    tr.start(); tw.start()
+    tw.join(); tr.join(timeout=30)
+    assert not errors, errors[0]
+
+
+def test_broadcast_every_consumer_gets_every_item():
+    bc = BroadcastChannel(3, capacity=8)
+    sent = list(range(5))
+    for x in sent:
+        bc.publish(x)
+    for c in range(3):
+        got = []
+        ring = bc.consumer(c)
+        while True:
+            status, item = ring.read_item()
+            if status != nbb.OK:
+                break
+            got.append(item)
+        assert got == sent, (c, got)
+
+
+def test_broadcast_slow_consumer_only_stalls_itself():
+    bc = BroadcastChannel(2, capacity=4)
+    for x in range(4):
+        statuses = bc.insert_item(x)
+        assert statuses == [nbb.OK, nbb.OK]
+    # consumer 0 drains, consumer 1 stalls
+    for _ in range(4):
+        assert bc.consumer(0).read_item()[0] == nbb.OK
+    statuses = bc.insert_item(99)
+    assert statuses[0] == nbb.OK           # fast ring accepts
+    assert statuses[1] != nbb.OK           # stalled ring reports FULL

@@ -1,0 +1,466 @@
+"""Tests for the core lock-free library: NBB, NBW, bitset, FSMs, queues.
+
+Validates the paper's three design properties (Section 3):
+  Safety       — a successful read never returns a corrupted value,
+  Timeliness   — failed ops return immediately with a status (bounded retry),
+  Non-blocking — the writer is never blocked by readers and vice versa.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitset, nbb, nbw, states
+from repro.core.channels import ChannelType, Domain
+from repro.core.host_queue import LockedQueue, MpscQueue, SpscQueue
+from repro.core.nbb import HostNBB, SimNBB
+
+
+# ---------------------------------------------------------------------------
+# HostNBB — single-threaded semantics
+# ---------------------------------------------------------------------------
+class TestHostNBB:
+    def test_fifo_order(self):
+        q = HostNBB(8)
+        for i in range(8):
+            assert q.insert_item(i) == nbb.OK
+        assert q.insert_item(99) == nbb.BUFFER_FULL
+        for i in range(8):
+            status, item = q.read_item()
+            assert status == nbb.OK and item == i
+        status, item = q.read_item()
+        assert status == nbb.BUFFER_EMPTY and item is None
+
+    def test_wraparound(self):
+        q = HostNBB(3)
+        for round_ in range(10):
+            for i in range(3):
+                assert q.insert_item((round_, i)) == nbb.OK
+            for i in range(3):
+                status, item = q.read_item()
+                assert status == nbb.OK and item == (round_, i)
+
+    def test_len(self):
+        q = HostNBB(4)
+        assert len(q) == 0
+        q.insert_item(1)
+        q.insert_item(2)
+        assert len(q) == 2
+        q.read_item()
+        assert len(q) == 1
+
+    def test_capacity_one(self):
+        q = HostNBB(1)
+        assert q.insert_item("x") == nbb.OK
+        assert q.insert_item("y") == nbb.BUFFER_FULL
+        assert q.read_item() == (nbb.OK, "x")
+
+
+# ---------------------------------------------------------------------------
+# HostNBB — real two-thread stress (the paper's stress-test design, §4:
+# transaction IDs 1..1000 verified in sequence at the receiver).
+# ---------------------------------------------------------------------------
+class TestHostNBBThreaded:
+    @pytest.mark.parametrize("capacity", [1, 2, 16])
+    def test_spsc_transaction_ids_in_order(self, capacity):
+        q = HostNBB(capacity)
+        n = 1000
+        received = []
+        errs = []
+
+        def producer():
+            for txn in range(1, n + 1):
+                q.put(txn)
+
+        def consumer():
+            for _ in range(n):
+                item = q.get()
+                received.append(item)
+
+        t1 = threading.Thread(target=producer)
+        t2 = threading.Thread(target=consumer)
+        t1.start(); t2.start()
+        t1.join(timeout=30); t2.join(timeout=30)
+        assert not errs
+        assert received == list(range(1, n + 1)), "FIFO order violated"
+
+    def test_multi_payload_types(self):
+        """message/packet/scalar payloads all travel uncorrupted."""
+        q = HostNBB(8)
+        payloads = [b"m" * 24, ("packet", bytes(24)), 0xDEADBEEF]
+        done = []
+
+        def producer():
+            for p in payloads * 100:
+                q.put(p)
+
+        def consumer():
+            for _ in range(len(payloads) * 100):
+                done.append(q.get())
+
+        t1, t2 = threading.Thread(target=producer), threading.Thread(target=consumer)
+        t1.start(); t2.start(); t1.join(30); t2.join(30)
+        assert done == payloads * 100
+
+
+# ---------------------------------------------------------------------------
+# Property tests: interleaving simulator proves Safety under ANY schedule.
+# ---------------------------------------------------------------------------
+class TestNBBInterleavings:
+    @given(
+        capacity=st.integers(1, 4),
+        schedule=st.lists(st.booleans(), min_size=1, max_size=60),
+    )
+    @settings(max_examples=300, deadline=None)
+    def test_no_torn_reads_any_interleaving(self, capacity, schedule):
+        """Under any producer/consumer interleaving of the micro-ops, a
+        committed read never observes a torn slot, and FIFO order holds."""
+        sim = SimNBB(capacity)
+        p_state, c_state = "idle", "idle"
+        next_val, expect = 1, 1
+        for is_producer in schedule:
+            if is_producer:
+                if p_state == "idle":
+                    if sim.try_begin_insert() == nbb.OK:
+                        sim.write_half(next_val)   # torn intermediate state
+                        p_state = "mid"
+                else:
+                    sim.write_commit(next_val)
+                    next_val += 1
+                    p_state = "idle"
+            else:
+                if c_state == "idle":
+                    if sim.try_begin_read() == nbb.OK:
+                        c_state = "mid"
+                else:
+                    value, torn = sim.read_commit()
+                    assert torn == 0, "SAFETY VIOLATION: torn read committed"
+                    assert value == expect, "FIFO order violated"
+                    expect += 1
+                    c_state = "idle"
+
+    @given(capacity=st.integers(1, 4))
+    @settings(max_examples=50, deadline=None)
+    def test_status_codes_match_table1(self, capacity):
+        sim = SimNBB(capacity)
+        # Fill the ring completely.
+        for v in range(capacity):
+            assert sim.try_begin_insert() == nbb.OK
+            sim.write_commit(v)
+        assert sim.try_begin_insert() == nbb.BUFFER_FULL
+        # Start (but don't finish) a read: producer must see the
+        # "consumer reading" variant -> spin, don't yield.
+        assert sim.try_begin_read() == nbb.OK
+        assert sim.try_begin_insert() == nbb.BUFFER_FULL_BUT_CONSUMER_READING
+        sim.read_commit()
+        # Drain the rest.
+        for _ in range(capacity - 1):
+            assert sim.try_begin_read() == nbb.OK
+            sim.read_commit()
+        assert sim.try_begin_read() == nbb.BUFFER_EMPTY
+        # Start (but don't finish) an insert: consumer sees the
+        # "producer inserting" variant.
+        assert sim.try_begin_insert() == nbb.OK
+        sim.write_half(123)
+        assert sim.try_begin_read() == nbb.BUFFER_EMPTY_BUT_PRODUCER_INSERTING
+
+
+# ---------------------------------------------------------------------------
+# Functional JAX NBB
+# ---------------------------------------------------------------------------
+class TestJaxNBB:
+    def test_fifo_roundtrip_jit(self):
+        @jax.jit
+        def run():
+            s = nbb.init(4, jnp.zeros((3,), jnp.float32))
+            outs, statuses = [], []
+            for i in range(4):
+                s, st_ = nbb.insert_item(s, jnp.full((3,), float(i)))
+                statuses.append(st_)
+            s, st_full = nbb.insert_item(s, jnp.full((3,), 9.0))
+            for _ in range(4):
+                s, item, st_ = nbb.read_item(s)
+                outs.append(item)
+            _, _, st_empty = nbb.read_item(s)
+            return outs, statuses, st_full, st_empty
+
+        outs, statuses, st_full, st_empty = run()
+        for i, o in enumerate(outs):
+            np.testing.assert_allclose(o, np.full(3, i))
+        assert all(int(s) == nbb.OK for s in statuses)
+        assert int(st_full) == nbb.BUFFER_FULL
+        assert int(st_empty) == nbb.BUFFER_EMPTY
+
+    def test_full_insert_is_noop(self):
+        s = nbb.init(1, jnp.zeros((), jnp.int32))
+        s, _ = nbb.insert_item(s, jnp.int32(7))
+        s2, status = nbb.insert_item(s, jnp.int32(8))
+        assert int(status) == nbb.BUFFER_FULL
+        _, item, _ = nbb.read_item(s2)
+        assert int(item) == 7, "full insert must not overwrite"
+
+    @given(
+        capacity=st.integers(1, 5),
+        ops=st.lists(st.booleans(), min_size=1, max_size=40),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_matches_reference_fifo(self, capacity, ops):
+        """The functional NBB behaves exactly like a bounded FIFO."""
+        s = nbb.init(capacity, jnp.zeros((), jnp.int32))
+        model: list = []
+        next_val, expect_reads = 0, []
+        for is_insert in ops:
+            if is_insert:
+                s, status = nbb.insert_item(s, jnp.int32(next_val))
+                if len(model) < capacity:
+                    assert int(status) == nbb.OK
+                    model.append(next_val)
+                    next_val += 1
+                else:
+                    assert int(status) == nbb.BUFFER_FULL
+            else:
+                s, item, status = nbb.read_item(s)
+                if model:
+                    assert int(status) == nbb.OK
+                    assert int(item) == model.pop(0)
+                else:
+                    assert int(status) == nbb.BUFFER_EMPTY
+            assert int(nbb.size(s)) == len(model)
+
+    def test_usable_as_scan_carry(self):
+        def body(s, x):
+            s, _ = nbb.insert_item(s, x)
+            s, item, _ = nbb.read_item(s)
+            return s, item
+
+        s0 = nbb.init(2, jnp.zeros((), jnp.float32))
+        xs = jnp.arange(10, dtype=jnp.float32)
+        _, ys = jax.lax.scan(body, s0, xs)
+        np.testing.assert_allclose(ys, xs)
+
+
+# ---------------------------------------------------------------------------
+# NBW
+# ---------------------------------------------------------------------------
+class TestNBW:
+    def test_host_roundtrip(self):
+        w = nbw.HostNBW(depth=2)
+        for v in range(20):
+            w.write(v)
+            assert w.read() == v
+        assert w.version == 20
+
+    def test_reader_sees_latest_not_order(self):
+        w = nbw.HostNBW(depth=4)
+        w.write("a"); w.write("b"); w.write("c")
+        assert w.read() == "c"  # state messages: latest wins
+
+    def test_threaded_no_corruption(self):
+        """Readers under a writer storm never observe torn values.
+
+        Values are (i, i*i) pairs; a torn read would mismatch the pair."""
+        w = nbw.HostNBW(depth=2)
+        w.write((0, 0))
+        stop = threading.Event()
+        bad = []
+
+        def writer():
+            i = 0
+            while not stop.is_set():
+                w.write((i, i * i))
+                i += 1
+
+        def reader():
+            for _ in range(20000):
+                i, sq = w.read()
+                if sq != i * i:
+                    bad.append((i, sq))
+
+        wt = threading.Thread(target=writer)
+        rts = [threading.Thread(target=reader) for _ in range(2)]
+        wt.start(); [t.start() for t in rts]
+        [t.join(60) for t in rts]
+        stop.set(); wt.join(10)
+        assert not bad, f"torn NBW reads: {bad[:3]}"
+
+    def test_jax_functional(self):
+        s = nbw.init(2, jnp.zeros((4,), jnp.float32))
+        for v in range(5):
+            s = nbw.write(s, jnp.full((4,), float(v)))
+            value, version = nbw.read(s)
+            np.testing.assert_allclose(value, np.full(4, v))
+            assert int(version) == v + 1
+
+
+# ---------------------------------------------------------------------------
+# Bitset
+# ---------------------------------------------------------------------------
+class TestBitset:
+    def test_host_claim_release(self):
+        b = bitset.HostBitset(4)
+        got = [b.try_claim(f"o{i}") for i in range(4)]
+        assert sorted(got) == [0, 1, 2, 3]
+        assert b.try_claim("x") is None
+        b.release(2)
+        assert b.try_claim("y") == 2
+
+    def test_host_threaded_unique_claims(self):
+        """N threads racing for slots never double-claim (CAS property)."""
+        b = bitset.HostBitset(64)
+        claims = [[] for _ in range(8)]
+
+        def worker(tid):
+            while True:
+                s = b.try_claim(owner=(tid, len(claims[tid])))
+                if s is None:
+                    return
+                claims[tid].append(s)
+
+        ts = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+        [t.start() for t in ts]; [t.join(30) for t in ts]
+        all_claims = [s for c in claims for s in c]
+        assert sorted(all_claims) == list(range(64)), "double-claimed slots"
+
+    def test_jax_claim_release_full(self):
+        bits = bitset.init(5)
+        slots = []
+        for _ in range(5):
+            bits, s = bitset.claim_first_free(bits, 5)
+            slots.append(int(s))
+        assert slots == [0, 1, 2, 3, 4]
+        bits, s = bitset.claim_first_free(bits, 5)
+        assert int(s) == -1  # full: non-blocking failure
+        bits = bitset.release(bits, jnp.int32(3))
+        assert not bool(bitset.is_claimed(bits, jnp.int32(3)))
+        bits, s = bitset.claim_first_free(bits, 5)
+        assert int(s) == 3
+        assert int(bitset.count(bits)) == 5
+
+    @given(n=st.integers(1, 100))
+    @settings(max_examples=30, deadline=None)
+    def test_jax_count_matches(self, n):
+        bits = bitset.init(n)
+        k = min(n, 7)
+        for _ in range(k):
+            bits, _ = bitset.claim_first_free(bits, n)
+        assert int(bitset.count(bits)) == k
+
+
+# ---------------------------------------------------------------------------
+# State machines (paper Figures 3 & 4)
+# ---------------------------------------------------------------------------
+class TestStateMachines:
+    def test_request_lifecycle(self):
+        c = states.request_cell()
+        c.transition(states.REQUEST_FREE, states.REQUEST_VALID)
+        c.transition(states.REQUEST_VALID, states.REQUEST_RECEIVED)
+        c.transition(states.REQUEST_RECEIVED, states.REQUEST_COMPLETED)
+        c.transition(states.REQUEST_COMPLETED, states.REQUEST_FREE)
+        assert c.state == states.REQUEST_FREE
+
+    def test_cancel_path(self):
+        c = states.request_cell()
+        c.transition(states.REQUEST_FREE, states.REQUEST_VALID)
+        c.transition(states.REQUEST_VALID, states.REQUEST_CANCELLED)
+        c.transition(states.REQUEST_CANCELLED, states.REQUEST_FREE)
+
+    def test_illegal_transition_raises(self):
+        c = states.request_cell()
+        with pytest.raises(states.IllegalTransition):
+            c.cas(states.REQUEST_FREE, states.REQUEST_COMPLETED)
+
+    def test_cas_loser_detected(self):
+        c = states.request_cell()
+        assert c.cas(states.REQUEST_FREE, states.REQUEST_VALID) is True
+        assert c.cas(states.REQUEST_FREE, states.REQUEST_VALID) is False
+
+    def test_racing_threads_single_winner(self):
+        """Only one of N racing threads wins each FREE->VALID claim."""
+        c = states.request_cell()
+        wins = []
+
+        def claimer(tid):
+            if c.cas(states.REQUEST_FREE, states.REQUEST_VALID):
+                wins.append(tid)
+
+        for _round in range(50):
+            ts = [threading.Thread(target=claimer, args=(i,)) for i in range(4)]
+            [t.start() for t in ts]; [t.join(10) for t in ts]
+            assert len(wins) == 1, f"multiple CAS winners: {wins}"
+            c.transition(states.REQUEST_VALID, states.REQUEST_COMPLETED)
+            c.transition(states.REQUEST_COMPLETED, states.REQUEST_FREE)
+            wins.clear()
+
+    def test_buffer_lifecycle(self):
+        c = states.buffer_cell()
+        for a, b in [(states.BUFFER_FREE, states.BUFFER_RESERVED),
+                     (states.BUFFER_RESERVED, states.BUFFER_ALLOCATED),
+                     (states.BUFFER_ALLOCATED, states.BUFFER_RECEIVED),
+                     (states.BUFFER_RECEIVED, states.BUFFER_FREE)]:
+            c.transition(a, b)
+        assert c.state == states.BUFFER_FREE
+
+    def test_journal_compaction_preserves_state(self):
+        c = states.request_cell()
+        for _ in range(100):  # force several compactions
+            c.transition(states.REQUEST_FREE, states.REQUEST_VALID)
+            c.transition(states.REQUEST_VALID, states.REQUEST_COMPLETED)
+            c.transition(states.REQUEST_COMPLETED, states.REQUEST_FREE)
+        assert c.state == states.REQUEST_FREE
+
+
+# ---------------------------------------------------------------------------
+# MPSC composition + MCAPI channel API
+# ---------------------------------------------------------------------------
+class TestQueuesAndChannels:
+    def test_mpsc_fan_in(self):
+        q = MpscQueue(nproducers=4, capacity_per_producer=16)
+        n_each = 500
+        def producer(pid):
+            for i in range(n_each):
+                q.producer(pid).put((pid, i))
+        got = []
+        def consumer():
+            for _ in range(4 * n_each):
+                got.append(q.get())
+        ts = [threading.Thread(target=producer, args=(p,)) for p in range(4)]
+        tc = threading.Thread(target=consumer)
+        [t.start() for t in ts]; tc.start()
+        [t.join(30) for t in ts]; tc.join(30)
+        assert len(got) == 4 * n_each
+        # Per-producer FIFO order must hold even through the fan-in.
+        for pid in range(4):
+            seq = [i for (p, i) in got if p == pid]
+            assert seq == list(range(n_each))
+
+    def test_locked_queue_baseline_semantics(self):
+        q = LockedQueue(2)
+        assert q.insert_item(1) == nbb.OK
+        assert q.insert_item(2) == nbb.OK
+        assert q.insert_item(3) == nbb.BUFFER_FULL
+        assert q.read_item() == (nbb.OK, 1)
+
+    @pytest.mark.parametrize("lock_free", [True, False])
+    def test_mcapi_channel_roundtrip(self, lock_free):
+        dom = Domain(lock_free=lock_free, queue_capacity=8)
+        tx = dom.create_endpoint(node=1, port=0)
+        rx = dom.create_endpoint(node=2, port=0)
+        for ctype, payload in [
+            (ChannelType.MESSAGE, b"hello" * 5),
+            (ChannelType.PACKET, bytes(24)),
+            (ChannelType.SCALAR, -12345678901),
+        ]:
+            ch = dom.connect(ctype, tx, dom.create_endpoint(2, hash(ctype.value) % 1000 + 1))
+            ch.send_blocking(payload)
+            assert ch.recv_blocking() == payload
+
+    def test_scalar_widths(self):
+        dom = Domain()
+        ch = dom.connect(ChannelType.SCALAR, dom.create_endpoint(0, 1),
+                         dom.create_endpoint(0, 2))
+        for v in [0, 255, 2 ** 15 - 1, -2 ** 31, 2 ** 63 - 1]:
+            ch.send_blocking(v)
+            assert ch.recv_blocking() == v

@@ -1,0 +1,135 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Sweeps shapes/dtypes per the deliverable: every kernel is asserted
+allclose against its ref.py oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import (flash_attention,
+                                           flash_attention_trainable)
+from repro.kernels.nbb_matmul import nbb_matmul
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape,
+                             jnp.float32).astype(dtype)
+
+
+TOL = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
+       jnp.bfloat16: dict(atol=3e-2, rtol=3e-2)}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,T,S,H,Hkv,hd",
+    [
+        (1, 128, 128, 4, 4, 64),     # MHA square
+        (2, 128, 256, 8, 2, 64),     # GQA, decode-suffix (T < S)
+        (1, 256, 256, 6, 3, 128),    # group=2, 128 head_dim
+    ])
+def test_flash_attention_matches_ref(B, T, S, H, Hkv, hd, dtype):
+    q = rand(0, (B, T, H, hd), dtype)
+    k = rand(1, (B, S, Hkv, hd), dtype)
+    v = rand(2, (B, S, Hkv, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               **TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [128, 512])
+def test_flash_attention_sliding_window(window):
+    B, T, H, hd = 1, 512, 4, 64
+    q = rand(3, (B, T, H, hd), jnp.float32)
+    k = rand(4, (B, T, H, hd), jnp.float32)
+    v = rand(5, (B, T, H, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_softcap():
+    B, T, H, hd = 1, 128, 2, 64
+    q = rand(6, (B, T, H, hd), jnp.float32)
+    k = rand(7, (B, T, H, hd), jnp.float32)
+    v = rand(8, (B, T, H, hd), jnp.float32)
+    out = flash_attention(q, k, v, softcap=50.0, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, softcap=50.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    B, T, S, H, hd = 1, 128, 256, 4, 64
+    q = rand(9, (B, T, H, hd), jnp.float32)
+    k = rand(10, (B, S, H, hd), jnp.float32)
+    v = rand(11, (B, S, H, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_grad_matches_ref():
+    """interpret-mode kernel must be differentiable for training use."""
+    B, T, H, hd = 1, 128, 2, 64
+    q = rand(12, (B, T, H, hd), jnp.float32)
+    k = rand(13, (B, T, H, hd), jnp.float32)
+    v = rand(14, (B, T, H, hd), jnp.float32)
+
+    def f_kern(q, k, v):
+        return flash_attention_trainable(q, k, v, True, 0, 0.0, 128, 128,
+                                         True).sum()
+
+    def f_ref(q, k, v):
+        return ref.flash_attention_ref(q, k, v).sum()
+
+    g1 = jax.grad(f_kern, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# NBB double-buffered matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+    (256, 512, 256, 128, 128, 128),   # 4-deep K pipeline
+    (128, 128, 128, 128, 128, 128),   # single K step (ring primes only)
+    (512, 1024, 256, 256, 256, 256),
+])
+def test_nbb_matmul_matches_ref(M, K, N, bm, bn, bk, dtype):
+    a = rand(20, (M, K), dtype)
+    b = rand(21, (K, N), dtype)
+    out = nbb_matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.matmul_ref(a, b)
+    # fp32 tol covers K-blocked vs single-dot accumulation-order noise.
+    tol = (dict(atol=5e-4, rtol=1e-3) if dtype == jnp.float32
+           else TOL[dtype])
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+def test_nbb_matmul_odd_k_depth():
+    """Odd K-tile count: final slot parity differs from the primed slot."""
+    a = rand(22, (128, 384), jnp.float32)
+    b = rand(23, (384, 128), jnp.float32)
+    out = nbb_matmul(a, b, bm=128, bn=128, bk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.matmul_ref(a, b)),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,80 @@
+"""Loss-layer invariants: both xent chunk layouts agree with each other
+and with the naive full-logits oracle; masking semantics hold."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.losses import chunked_softmax_xent, full_logits
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def naive_xent(hidden, w_out, labels, weights=None):
+    logits = jnp.einsum("btd,dv->btv", hidden.astype(jnp.float32),
+                        w_out.astype(jnp.float32))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=2)[..., 0]
+    w = (jnp.ones(labels.shape, jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    return jnp.sum((lse - ll) * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def _data(seed, B=2, T=32, D=16, V=64):
+    k = jax.random.PRNGKey(seed)
+    hidden = jax.random.normal(k, (B, T, D), jnp.float32)
+    w_out = jax.random.normal(jax.random.fold_in(k, 1), (D, V), jnp.float32)
+    labels = jax.random.randint(jax.random.fold_in(k, 2), (B, T), 0, V)
+    return hidden, w_out, labels
+
+
+@pytest.mark.parametrize("layout", ["flat", "batched"])
+@pytest.mark.parametrize("chunk", [8, 16, 2048])
+def test_layouts_match_naive(layout, chunk):
+    hidden, w_out, labels = _data(0)
+    got = chunked_softmax_xent(hidden, w_out, labels, token_chunk=chunk,
+                               layout=layout)
+    want = naive_xent(hidden, w_out, labels)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_layouts_match_each_other_with_weights():
+    hidden, w_out, labels = _data(1)
+    weights = jnp.ones(labels.shape, jnp.float32).at[:, -1].set(0.0)
+    a = chunked_softmax_xent(hidden, w_out, labels, weights=weights,
+                             layout="flat")
+    b = chunked_softmax_xent(hidden, w_out, labels, weights=weights,
+                             layout="batched")
+    want = naive_xent(hidden, w_out, labels, weights)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
+    np.testing.assert_allclose(float(a), float(want), rtol=1e-5)
+
+
+def test_masked_position_has_no_gradient():
+    hidden, w_out, labels = _data(2)
+    weights = jnp.ones(labels.shape, jnp.float32).at[:, -1].set(0.0)
+
+    def f(h):
+        return chunked_softmax_xent(h, w_out, labels, weights=weights)
+
+    g = jax.grad(f)(hidden)
+    np.testing.assert_array_equal(np.asarray(g[:, -1]), 0.0)
+    assert float(jnp.abs(g[:, :-1]).max()) > 0
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_layout_equivalence_property(seed):
+    hidden, w_out, labels = _data(seed, B=1, T=16, D=8, V=32)
+    a = chunked_softmax_xent(hidden, w_out, labels, token_chunk=4,
+                             layout="flat")
+    b = chunked_softmax_xent(hidden, w_out, labels, token_chunk=4,
+                             layout="batched")
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
+
+
+def test_full_logits_shape():
+    hidden, w_out, _ = _data(3)
+    out = full_logits(hidden[:, -1:], w_out)
+    assert out.shape == (2, 1, 64)

@@ -1,0 +1,74 @@
+"""Pipeline + compression: single-device numerics here; the 8-device
+schedule equivalence / collective-bytes checks run in a subprocess
+(tests/_multidevice_worker.py) so the forced device count never leaks
+into this process.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.parallel.compression import (compress_grads, decompress_grads,
+                                        dequantize_int8, init_error_state,
+                                        quantize_int8)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_multidevice_worker():
+    """Run pipeline schedule equivalence + compressed psum on 8 devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(Path(__file__).with_name("_multidevice_worker.py"))],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "ALL MULTIDEVICE CHECKS PASSED" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# compression numerics (single device)
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_quantize_roundtrip_bounded(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,), jnp.float32)
+    q, scale = quantize_int8(x)
+    recon = dequantize_int8(q, scale)
+    err = np.abs(np.asarray(x) - np.asarray(recon)).max()
+    assert err <= float(scale) / 2 + 1e-7
+
+
+def test_quantize_zero_tensor():
+    q, scale = quantize_int8(jnp.zeros((8,)))
+    assert float(scale) == 1.0
+    np.testing.assert_array_equal(np.asarray(q), 0)
+
+
+def test_error_feedback_telescopes():
+    """sum of k compressed steps -> k*g with O(1) (not O(k)) error."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (128,), jnp.float32)}
+    err = init_error_state(g)
+    total = jnp.zeros((128,))
+    k = 20
+    for _ in range(k):
+        comp, err = compress_grads(g, err)
+        total = total + decompress_grads(comp)["w"]
+    scale = float(jnp.abs(g["w"]).max()) / 127.0
+    resid = np.abs(np.asarray(total) - k * np.asarray(g["w"])).max()
+    assert resid <= scale + 1e-6, (resid, scale)
+
+
+def test_compression_ratio():
+    g = {"w": jnp.zeros((1024,), jnp.float32)}
+    comp, _ = compress_grads(g, init_error_state(g))
+    raw = 1024 * 4
+    packed = comp["w"]["q"].size * 1 + 4
+    assert packed * 3 < raw

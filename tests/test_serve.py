@@ -1,0 +1,172 @@
+"""Serving engine + paged KV pool tests (CPU, tiny model)."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import states
+from repro.models.model import build_model
+from repro.serve.engine import ServeEngine
+from repro.serve.kv_cache import OK, POOL_FULL, PagedKVPool
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# paged pool
+# ---------------------------------------------------------------------------
+def test_pool_admit_grow_free():
+    pool = PagedKVPool(8, page_size=4, n_layers=2, kv_heads=2, head_dim=8)
+    assert pool.try_admit(0, 10) == OK          # 3 pages
+    assert pool.free_pages() == 5
+    assert pool.grow(0, 13) == OK               # 4th page
+    assert pool.free_pages() == 4
+    assert pool.try_admit(1, 17) == POOL_FULL   # needs 5 > 4 free
+    assert pool.free_pages() == 4               # all-or-nothing rollback
+    pool.free(0)
+    assert pool.free_pages() == 8
+    assert pool.try_admit(1, 17) == OK
+
+
+def test_pool_swap_roundtrip():
+    pool = PagedKVPool(8, page_size=4, n_layers=3, kv_heads=2, head_dim=8,
+                       dtype=jnp.float32)
+    n_tok = 10
+    assert pool.try_admit(5, n_tok) == OK
+    k = jax.random.normal(jax.random.PRNGKey(0), (n_tok, 3, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(1), (n_tok, 3, 2, 8))
+    assert pool.swap_out(5, k, v, n_tok) == OK
+    k2, v2 = pool.swap_in(5, max_len=16)
+    np.testing.assert_allclose(np.asarray(k2[:n_tok]), np.asarray(k))
+    np.testing.assert_allclose(np.asarray(v2[:n_tok]), np.asarray(v))
+    np.testing.assert_array_equal(np.asarray(k2[n_tok:]), 0)
+
+
+def test_pool_concurrent_admission_lock_free():
+    """Many threads racing for pages: exactly-once claims, no deadlock."""
+    pool = PagedKVPool(64, page_size=1, n_layers=1, kv_heads=1, head_dim=2)
+    results = []
+
+    def worker(tid):
+        got = pool.try_admit(tid, 4)   # 4 pages each
+        results.append((tid, got))
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(32)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    admitted = [tid for tid, s in results if s == OK]
+    assert len(admitted) == 16          # 64 pages / 4 per seq
+    # each admitted seq owns disjoint pages
+    seen = set()
+    for tid in admitted:
+        pages = pool.table(tid).pages
+        assert len(pages) == 4
+        assert not (set(pages) & seen)
+        seen |= set(pages)
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = get_smoke_config("smollm-135m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_engine_single_request(engine_setup):
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=2, max_len=32, n_clients=1)
+    req = eng.submit(0, np.arange(5) % cfg.vocab_size, max_tokens=4)
+    assert req is not None
+    served = eng.step()
+    assert served == 1
+    resp = eng.get_response(0, timeout_s=10)
+    assert resp is not None
+    assert resp.fsm.state == states.REQUEST_COMPLETED
+    assert resp.tokens_out.shape == (4,)
+    assert ((resp.tokens_out >= 0) & (resp.tokens_out < cfg.vocab_size)).all()
+    assert eng.pool.free_pages() == eng.pool.n_pages  # pages returned
+
+
+def test_engine_batches_multiple_clients(engine_setup):
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=4, max_len=32, n_clients=3)
+    reqs = [eng.submit(c, np.arange(3 + c) % cfg.vocab_size, max_tokens=3)
+            for c in range(3)]
+    assert all(r is not None for r in reqs)
+    eng.step()
+    assert eng.stats["served"] == 3
+    assert eng.stats["batches"] == 1   # one fused batch
+    for c in range(3):
+        resp = eng.get_response(c, timeout_s=10)
+        assert resp is not None and resp.client_id == c
+        assert len(resp.tokens_out) == 3
+
+
+def test_engine_eos_stops_early(engine_setup):
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=1, max_len=32, n_clients=1)
+    # discover the greedy first token, then use it as EOS
+    r0 = eng.submit(0, np.arange(4) % cfg.vocab_size, max_tokens=6)
+    eng.step()
+    first = eng.get_response(0, timeout_s=10).tokens_out[0]
+    r1 = eng.submit(0, np.arange(4) % cfg.vocab_size, max_tokens=6,
+                    eos_id=int(first))
+    eng.step()
+    resp = eng.get_response(0, timeout_s=10)
+    assert len(resp.tokens_out) == 1           # stopped at EOS immediately
+
+
+def test_engine_rejects_when_pool_full(engine_setup):
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=2, max_len=32, n_clients=1,
+                      pool_pages=2, page_size=4)   # 8 tokens of KV total
+    req = eng.submit(0, np.arange(6) % cfg.vocab_size, max_tokens=8)
+    eng.step()
+    resp = eng.get_response(0, timeout_s=10)
+    assert resp.fsm.state == states.REQUEST_CANCELLED
+    assert eng.stats["rejected"] == 1
+    assert eng.pool.free_pages() == 2          # nothing leaked
+
+
+def test_engine_threaded_clients(engine_setup):
+    """Concurrent client threads + engine thread: all requests complete."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=4, max_len=32, n_clients=4,
+                      pool_pages=256)
+    eng_thread = eng.start()
+    n_per_client = 3
+    got = {c: [] for c in range(4)}
+
+    def client(c):
+        import time
+        sent = 0
+        while sent < n_per_client:
+            if eng.submit(c, (np.arange(4) + c) % cfg.vocab_size,
+                          max_tokens=2) is not None:
+                sent += 1
+            else:
+                time.sleep(0.001)
+        while len(got[c]) < n_per_client:
+            r = eng.get_response(c, timeout_s=30)
+            assert r is not None, f"client {c} timed out"
+            got[c].append(r)
+
+    threads = [threading.Thread(target=client, args=(c,)) for c in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    eng.stop()
+    eng_thread.join(timeout=10)
+    assert all(len(v) == n_per_client for v in got.values())
+    assert eng.stats["served"] == 12
+    assert eng.pool.free_pages() == eng.pool.n_pages

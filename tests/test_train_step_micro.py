@@ -1,0 +1,35 @@
+"""Gradient accumulation: microbatched step == monolithic step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.model import build_model
+from repro.train.optimizer import AdamW, OptConfig
+from repro.train.train_step import make_train_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_microbatched_matches_monolithic():
+    import dataclasses
+    cfg = get_smoke_config("smollm-135m")
+    # f32 params so the comparison isn't dominated by bf16 rounding
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(OptConfig(lr=1e-3, clip_norm=1e9))  # no clip interference
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                cfg.vocab_size, jnp.int32)
+    batch = {"tokens": tokens}
+
+    s1 = jax.jit(make_train_step(model, opt, microbatches=1))
+    s4 = jax.jit(make_train_step(model, opt, microbatches=4))
+    p1, o1, m1 = s1(params, opt.init(params), batch)
+    p4, o4, m4 = s4(params, opt.init(params), batch)
+
+    assert np.isclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-5, rtol=5e-4)

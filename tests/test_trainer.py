@@ -1,0 +1,193 @@
+"""Trainer / checkpoint / data-pipeline integration tests (CPU, tiny model)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataPipeline, synth_batch
+from repro.models.model import build_model
+from repro.train import checkpoint as ckpt_lib
+from repro.train.optimizer import AdamW, OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture()
+def tiny():
+    cfg = get_smoke_config("smollm-135m")
+    model = build_model(cfg)
+    opt = AdamW(OptConfig(lr=1e-3, warmup_steps=2, total_steps=100))
+    return cfg, model, opt
+
+
+def _pipe(cfg, batch=2, seq=16):
+    return DataPipeline(batch=batch, seq_len=seq, vocab=cfg.vocab_size,
+                        nproducers=2, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"a": jnp.arange(12.0).reshape(3, 4),
+             "b": {"c": jnp.ones((2,), jnp.int32)}}
+    ckpt_lib.save(tmp_path, 7, state)
+    step, restored = ckpt_lib.restore(tmp_path, state)
+    assert step == 7
+    for x, y in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    state = {"a": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        ckpt_lib.save(tmp_path, s, state, keep=2)
+    assert ckpt_lib.latest_step(tmp_path) == 4
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in tmp_path.glob("step_*"))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    state = {"a": jnp.arange(4.0)}
+    d = ckpt_lib.save(tmp_path, 1, state)
+    leaf = next(d.glob("leaf_*.npy"))
+    arr = np.load(leaf)
+    arr[0] += 1
+    np.save(leaf, arr)
+    with pytest.raises(IOError, match="CRC"):
+        ckpt_lib.restore(tmp_path, state)
+
+
+def test_checkpoint_shape_mismatch(tmp_path):
+    ckpt_lib.save(tmp_path, 1, {"a": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        ckpt_lib.restore(tmp_path, {"a": jnp.zeros((5,))})
+
+
+def test_async_checkpointer_saves_latest(tmp_path):
+    ck = ckpt_lib.AsyncCheckpointer(tmp_path, keep=2, poll_s=0.001)
+    for s in range(5):
+        ck.publish(s, {"x": jnp.full((2,), float(s))})
+    ck.close()
+    latest = ckpt_lib.latest_step(tmp_path)
+    assert latest == 4  # newest publish always lands (NBW freshest-wins)
+    _, restored = ckpt_lib.restore(tmp_path, {"x": jnp.zeros((2,))})
+    np.testing.assert_array_equal(np.asarray(restored["x"]), 4.0)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_synth_batch_deterministic():
+    a = synth_batch(0, 1, 2, 4, 8, 100)
+    b = synth_batch(0, 1, 2, 4, 8, 100)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = synth_batch(0, 1, 3, 4, 8, 100)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_pipeline_delivers_unique_batches():
+    pipe = DataPipeline(batch=2, seq_len=8, vocab=1000, nproducers=3,
+                        seed=0, depth=4)
+    try:
+        seen = set()
+        for _ in range(20):
+            b = pipe.get()
+            assert b["tokens"].shape == (2, 8)
+            seen.add(b["tokens"].tobytes())
+        assert len(seen) == 20  # exactly-once delivery
+    finally:
+        pipe.close()
+
+
+# ---------------------------------------------------------------------------
+# trainer
+# ---------------------------------------------------------------------------
+def test_trainer_loss_decreases(tiny, tmp_path):
+    cfg, model, opt = tiny
+    tc = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=1000,
+                       log_every=5, async_checkpoint=False)
+    tr = Trainer(model, opt, tc)
+    pipe = _pipe(cfg)
+    try:
+        hist = tr.fit(pipe, steps=30)
+    finally:
+        pipe.close()
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    assert last < first, (first, last)
+
+
+def test_trainer_checkpoint_restart_exact(tiny, tmp_path):
+    """Restart from a checkpoint reproduces the uninterrupted run exactly
+    (same data order via the deterministic stream, same params)."""
+    cfg, model, opt = tiny
+
+    def batches():
+        s = 0
+        while True:
+            yield synth_batch(0, 0, s, 2, 16, cfg.vocab_size)
+            s += 1
+
+    tc = TrainerConfig(ckpt_dir=str(tmp_path / "a"), ckpt_every=5,
+                       async_checkpoint=False)
+    tr = Trainer(model, opt, tc, rng=jax.random.PRNGKey(7))
+    gen = batches()
+    tr.fit(gen, steps=10)
+    p_ref = jax.device_get(tr.params)
+
+    # interrupted twin: 5 steps, "crash", resume, 5 more on the same stream
+    tc2 = TrainerConfig(ckpt_dir=str(tmp_path / "b"), ckpt_every=5,
+                        async_checkpoint=False)
+    tr2 = Trainer(model, opt, tc2, rng=jax.random.PRNGKey(7))
+    gen2 = batches()
+    tr2.fit(gen2, steps=5)
+    del tr2
+    tr3 = Trainer(model, opt, tc2, rng=jax.random.PRNGKey(999), resume=True)
+    assert tr3.step == 5
+    gen3 = batches()
+    for _ in range(5):   # replay consumed prefix (deterministic stream)
+        next(gen3)
+    tr3.fit(gen3, steps=5)
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(tr3.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_trainer_straggler_detection(tiny, tmp_path):
+    cfg, model, opt = tiny
+    tc = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=1000,
+                       straggler_factor=2.0, async_checkpoint=False)
+    tr = Trainer(model, opt, tc)
+
+    def batches():
+        s = 0
+        while True:
+            if s == 8:  # inject one slow step (data stall)
+                time.sleep(1.0)
+            yield synth_batch(0, 0, s, 2, 16, cfg.vocab_size)
+            s += 1
+
+    tr.fit(batches(), steps=12)
+    assert tr.straggler_steps >= 1
+
+
+def test_trainer_telemetry_nbw(tiny, tmp_path):
+    cfg, model, opt = tiny
+    tc = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=1000,
+                       async_checkpoint=False)
+    tr = Trainer(model, opt, tc)
+
+    def batches():
+        s = 0
+        while True:
+            yield synth_batch(0, 0, s, 2, 16, cfg.vocab_size)
+            s += 1
+
+    tr.fit(batches(), steps=3)
+    assert tr.telemetry["step"].read() == 3
+    assert np.isfinite(tr.telemetry["loss"].read())
