@@ -203,8 +203,16 @@ def state_vs_fifo(n_msgs: int = 50_000) -> Dict:
     return results
 
 
-def main():
-    rows = run()
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small message counts for CI smoke")
+    ap.add_argument("--n-msgs", type=int, default=None)
+    args = ap.parse_args(argv)
+    n_msgs = args.n_msgs or (2_000 if args.quick else 50_000)
+
+    rows = run(n_msgs=n_msgs)
     print("impl,payload,deployment,msgs_per_s,lat_us_p50,lat_us_mean")
     for r in rows:
         print(f"{r['impl']},{r['payload']},{r['deployment']},"
@@ -215,7 +223,7 @@ def main():
     for k, v in d.items():
         for p, x in v.items():
             print(f"{k},{p},{x:.2f}")
-    sv = state_vs_fifo()
+    sv = state_vs_fifo(n_msgs=n_msgs)
     print("\n# paper §7 prediction: state (NBW) vs FIFO (NBB) policy")
     print(f"fifo_msgs_per_s,{sv['message']:.0f}")
     print(f"state_writes_per_s,{sv['state']:.0f}")

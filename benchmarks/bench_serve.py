@@ -1,0 +1,164 @@
+"""Serving-layer lock-convoy benchmark: wave vs iteration-level batching.
+
+The paper shows that deleting the queue lock turns multicore contention
+into speedup; the serving-layer analogue of the lock is the *wave
+barrier* — every admitted request convoys behind the slowest sequence in
+its batch.  This benchmark drives both schedulers of
+:class:`repro.serve.engine.ServeEngine` through an identical
+mixed-length workload (short prompts interleaved with long generations,
+the worst case for convoying) and records throughput, latency
+percentiles, decode-step counts, slot occupancy, and rejection stats.
+
+Expected result (the serving Figure-8): iteration-level slot swap >=
+wave throughput, with the short requests' completion latency improved
+the most — they no longer wait for long generations.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_serve.py [--quick]
+Emits:  BENCH_serve.json (cwd)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_workload(n_requests: int, seed: int = 0) -> List[Dict]:
+    """Mixed short/long requests, deterministic.  Alternates 2-token and
+    24-token generations with 4/8-token prompts so every wave pairs a
+    short request with a long one — maximal convoy for the baseline."""
+    rng = np.random.default_rng(seed)
+    work = []
+    for i in range(n_requests):
+        long = i % 2 == 1
+        work.append({
+            "prompt": rng.integers(0, 1000, 8 if long else 4),
+            "max_tokens": 24 if long else 2,
+        })
+    return work
+
+
+def run_engine(model, params, scheduler: str, workload: List[Dict],
+               max_batch: int, max_len: int, repeats: int = 2) -> Dict:
+    from repro.serve.engine import ServeEngine
+
+    eng = ServeEngine(model, params, max_batch=max_batch, max_len=max_len,
+                      n_clients=1, pool_pages=512, page_size=16,
+                      intake_depth=len(workload) + 4, scheduler=scheduler)
+
+    # Warmup: trace prefill/decode shapes outside the timed region.
+    for w in workload[:2]:
+        eng.submit(0, w["prompt"] % model.cfg.vocab_size,
+                   max_tokens=w["max_tokens"])
+    while eng.stats["served"] + eng.stats["rejected"] < 2:
+        eng.step()
+    for _ in range(2):
+        eng.get_response(0, timeout_s=10)
+
+    def one_pass() -> Dict:
+        for k in eng.stats:
+            eng.stats[k] = 0
+        t0 = time.monotonic()
+        for w in workload:
+            assert eng.submit(0, w["prompt"] % model.cfg.vocab_size,
+                              max_tokens=w["max_tokens"]) is not None
+        while eng.stats["served"] + eng.stats["rejected"] < len(workload):
+            eng.step()
+        dt = time.monotonic() - t0
+
+        lat, toks, short_lat = [], 0, []
+        for _ in range(len(workload)):
+            r = eng.get_response(0, timeout_s=10)
+            assert r is not None
+            lat.append(r.done_t - r.submit_t)
+            toks += len(r.tokens_out) if r.tokens_out is not None else 0
+            if r.max_tokens <= 2:
+                short_lat.append(r.done_t - r.submit_t)
+        lat.sort()
+        short_lat.sort()
+        return {
+            "scheduler": scheduler,
+            "wall_s": dt,
+            "req_per_s": len(workload) / dt,
+            "tok_per_s": toks / dt,
+            "tokens_out": toks,
+            "lat_ms_p50": 1e3 * lat[len(lat) // 2],
+            "lat_ms_p95": 1e3 * lat[int(len(lat) * 0.95)],
+            "short_req_lat_ms_p50": (1e3 * short_lat[len(short_lat) // 2]
+                                     if short_lat else float("nan")),
+            "decode_steps": eng.stats["decode_steps"],
+            "prefills": eng.stats["prefills"],
+            "served": eng.stats["served"],
+            "rejected": eng.stats["rejected"],
+            "slot_occupancy": eng.occupancy(),
+            "kv_pool": {"n_pages": eng.pool.n_pages,
+                        "free_after_drain": eng.pool.free_pages()},
+        }
+
+    # Best-of-k wall time: scheduling noise on a shared host dwarfs the
+    # deterministic decode-step counts; best-of is the standard antidote.
+    passes = [one_pass() for _ in range(repeats)]
+    return min(passes, key=lambda r: r["wall_s"])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small workload for CI smoke")
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--max-batch", type=int, default=2)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_smoke_config
+    from repro.models.model import build_model
+
+    n_requests = args.requests or (10 if args.quick else 12)
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    workload = make_workload(n_requests)
+
+    results = {}
+    for sched in ("wave", "slot"):
+        results[sched] = run_engine(model, params, sched, workload,
+                                    max_batch=args.max_batch, max_len=96)
+        r = results[sched]
+        print(f"{sched:5s}: {r['wall_s']:.2f}s  {r['tok_per_s']:.1f} tok/s  "
+              f"decode_steps={r['decode_steps']}  "
+              f"occupancy={r['slot_occupancy']:.2f}  "
+              f"p50={r['lat_ms_p50']:.0f}ms  "
+              f"short-p50={r['short_req_lat_ms_p50']:.0f}ms")
+
+    out = {
+        "workload": {"n_requests": n_requests, "max_batch": args.max_batch,
+                     "mix": "alternating max_tokens 2 / 24, prompts 4 / 8",
+                     "arch": args.arch},
+        "wave": results["wave"],
+        "slot": results["slot"],
+        "speedup": {
+            "throughput_tok_per_s": (results["slot"]["tok_per_s"]
+                                     / results["wave"]["tok_per_s"]),
+            "decode_steps_saved": (results["wave"]["decode_steps"]
+                                   - results["slot"]["decode_steps"]),
+            "short_req_latency": (results["wave"]["short_req_lat_ms_p50"]
+                                  / results["slot"]["short_req_lat_ms_p50"]),
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"\nslot/wave throughput: {out['speedup']['throughput_tok_per_s']:.2f}x"
+          f"  short-request latency: {out['speedup']['short_req_latency']:.2f}x"
+          f"  -> {args.out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

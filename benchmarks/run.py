@@ -24,7 +24,7 @@ def main() -> None:
         try:
             if name == "lockfree":
                 from benchmarks import bench_lockfree
-                bench_lockfree.main()
+                bench_lockfree.main([])
             elif name == "qpn":
                 from benchmarks import qpn_model
                 qpn_model.main()

@@ -1,7 +1,10 @@
 """Serve a small model with batched concurrent requests (deliverable b).
 
-Three client threads fire requests at the lock-free engine; the batcher
-fuses them, decodes greedily, and answers over per-client SPSC rings.
+Three client threads fire mixed-length requests at the lock-free engine;
+the iteration-level slot batcher swaps sequences in and out of the
+decode pool every step (no wave barrier) and answers over per-client
+SPSC rings.  Pass ``--scheduler wave`` through ``repro.launch.serve`` to
+feel the convoying baseline.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -16,7 +19,8 @@ from repro.launch.serve import main as serve_main
 def main():
     return serve_main(["--arch", "smollm-135m", "--smoke",
                        "--clients", "3", "--requests-per-client", "4",
-                       "--prompt-len", "8", "--max-tokens", "8"])
+                       "--prompt-len", "8", "--max-tokens", "8",
+                       "--scheduler", "slot"])
 
 
 if __name__ == "__main__":

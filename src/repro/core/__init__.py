@@ -6,6 +6,8 @@ Modules:
   bitset     — lock-free slot allocator (replaces lock-free linked lists)
   states     — CAS finite-state machines for request/buffer lifecycles
   host_queue — SPSC/MPSC compositions + the lock-based baseline
+  transport  — unified send/try_recv/drain protocol + Table-1 backoff
   channels   — MCAPI-style domains/nodes/endpoints/channels (host + device)
 """
-from repro.core import bitset, channels, host_queue, nbb, nbw, states  # noqa: F401
+from repro.core import (bitset, channels, host_queue, nbb, nbw,  # noqa: F401
+                        states, transport)

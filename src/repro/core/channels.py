@@ -24,8 +24,9 @@ import enum
 import struct
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from repro.core import nbb, nbw
+from repro.core import nbb, nbw, transport
 from repro.core.host_queue import LockedQueue, SpscQueue
+from repro.core.transport import CodecTransport, StateTransport, Transport
 
 
 class ChannelType(enum.Enum):
@@ -55,46 +56,40 @@ class Endpoint:
 
 @dataclasses.dataclass
 class Channel:
-    """A one-way FIFO connection between two endpoints."""
+    """A one-way connection between two endpoints.
+
+    Every channel type speaks through one :class:`Transport`: the format
+    differences (scalar packing, NBW state semantics) are baked into the
+    transport stack at :meth:`Domain.connect` time, so send/recv here are
+    pure delegation — no per-``ChannelType`` dispatch on the hot path.
+    """
 
     ctype: ChannelType
     send_ep: Endpoint
     recv_ep: Endpoint
-    queue: Any  # SpscQueue (lock-free) or LockedQueue (baseline)
+    transport: Transport
+    queue: Any  # underlying ring/cell (introspection + benchmarks)
 
     def send(self, payload: Any) -> int:
-        if self.ctype is ChannelType.STATE:
-            self.queue.write(payload)      # NBW: never blocks, never full
-            return nbb.OK
-        if self.ctype is ChannelType.SCALAR:
-            payload = _pack_scalar(payload)
-        return self.queue.insert_item(payload)
+        return self.transport.send(payload)
 
     def recv(self) -> Tuple[int, Optional[Any]]:
-        if self.ctype is ChannelType.STATE:
-            status, payload = self.queue.try_read()
-            if status != nbw.OK:
-                return nbb.BUFFER_EMPTY_BUT_PRODUCER_INSERTING, None
-            if payload is None:            # nothing published yet
-                return nbb.BUFFER_EMPTY, None
-            return nbb.OK, payload
-        status, payload = self.queue.read_item()
-        if status == nbb.OK and self.ctype is ChannelType.SCALAR:
-            payload = _unpack_scalar(payload)
-        return status, payload
+        return self.transport.try_recv()
 
-    def send_blocking(self, payload: Any) -> None:
-        import time
-        while self.send(payload) != nbb.OK:
-            time.sleep(0)
+    def drain(self, max_items: Optional[int] = None) -> List[Any]:
+        return self.transport.drain(max_items)
 
-    def recv_blocking(self) -> Any:
-        import time
-        while True:
-            status, payload = self.recv()
-            if status == nbb.OK:
-                return payload
-            time.sleep(0)
+    def send_blocking(self, payload: Any,
+                      timeout_s: Optional[float] = None) -> bool:
+        return transport.send_blocking(self.transport, payload,
+                                       timeout_s=timeout_s)
+
+    def recv_blocking(self, timeout_s: Optional[float] = None) -> Any:
+        status, payload = transport.recv_blocking(self.transport,
+                                                  timeout_s=timeout_s)
+        if status != nbb.OK:
+            raise TimeoutError("recv_blocking timed out")
+        return payload
 
 
 def _pack_scalar(value: int) -> bytes:
@@ -127,14 +122,23 @@ class Domain:
 
     def connect(self, ctype: ChannelType, send_ep: Endpoint,
                 recv_ep: Endpoint, nbw_depth: int = 4) -> Channel:
+        """Build the transport stack for this channel type, once.
+
+        Type dispatch happens HERE (connection setup), never per-op:
+        STATE gets an NBW cell behind a :class:`StateTransport`; SCALAR
+        wraps the ring in a packing :class:`CodecTransport`; MESSAGE and
+        PACKET ride the raw ring, which is already a Transport.
+        """
         if ctype is ChannelType.STATE:
             queue: Any = nbw.HostNBW(depth=nbw_depth)
-        elif self.lock_free:
-            queue = SpscQueue(self.queue_capacity)
+            tp: Transport = StateTransport(queue)
         else:
-            queue = LockedQueue(self.queue_capacity)
-        ch = Channel(ctype, send_ep, recv_ep, queue)
-        recv_ep.rx = queue
+            queue = (SpscQueue(self.queue_capacity) if self.lock_free
+                     else LockedQueue(self.queue_capacity))
+            tp = (CodecTransport(queue, _pack_scalar, _unpack_scalar)
+                  if ctype is ChannelType.SCALAR else queue)
+        ch = Channel(ctype, send_ep, recv_ep, tp, queue)
+        recv_ep.rx = tp
         self.channels.append(ch)
         return ch
 

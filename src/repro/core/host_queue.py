@@ -14,8 +14,13 @@ compose:
     against: a deque guarded by one mutex, standing in for the MCAPI
     reference implementation's global reader/writer lock.
 
+All of them implement the unified Transport protocol
+(``repro.core.transport``): ``send`` / ``try_recv`` / ``drain`` with
+Table-1 status codes, so channels and engines are written against one
+surface regardless of which queue backs them.
+
 Framework uses: the data pipeline feeds the trainer through an MpscQueue;
-the serving engine's request batcher drains client SPSC rings; the async
+the serving engine's slot-swap batcher drains client SPSC rings; the async
 checkpointer receives snapshots through an SPSC ring.
 """
 from __future__ import annotations
@@ -24,7 +29,7 @@ import threading
 from collections import deque
 from typing import Any, List, Optional, Tuple
 
-from repro.core import nbb
+from repro.core import nbb, transport
 from repro.core.nbb import HostNBB
 
 SpscQueue = HostNBB
@@ -62,17 +67,19 @@ class MpscQueue:
         return (nbb.BUFFER_EMPTY_BUT_PRODUCER_INSERTING if busy
                 else nbb.BUFFER_EMPTY), None
 
-    def get(self, spin: int = 64) -> Any:
-        import time
-        k = 0
-        while True:
-            status, item = self.read_item()
-            if status == nbb.OK:
-                return item
-            k += 1
-            if status == nbb.BUFFER_EMPTY or k > spin:
-                time.sleep(0)
-                k = 0
+    # -- Transport protocol (consumer side) ----------------------------------
+    # Producers are NOT funneled through a shared ``send`` — each producer
+    # owns its private SPSC ring (``producer(i)``, itself a Transport),
+    # which is what keeps the composition lock-free.
+    try_recv = read_item
+
+    def drain(self, max_items: Optional[int] = None) -> List[Any]:
+        return transport.drain(self, max_items)
+
+    def get(self) -> Any:
+        status, item = transport.recv_blocking(self)
+        assert status == nbb.OK
+        return item
 
 
 class BroadcastChannel:
@@ -94,14 +101,16 @@ class BroadcastChannel:
         return [ring.insert_item(item) for ring in self._rings]
 
     def publish(self, item: Any) -> None:
-        import time
         pending = set(range(len(self._rings)))
+        backoff = transport.Backoff()
         while pending:
             for i in list(pending):
                 if self._rings[i].insert_item(item) == nbb.OK:
                     pending.discard(i)
             if pending:
-                time.sleep(0)
+                backoff.wait(nbb.BUFFER_FULL)
+            else:
+                backoff.reset()
 
     def consumer(self, i: int) -> HostNBB:
         return self._rings[i]
@@ -142,6 +151,14 @@ class LockedQueue:
                 return nbb.BUFFER_EMPTY, None
             return nbb.OK, self._dq.popleft()
 
+    # Transport protocol: the baseline speaks the same surface, so the A/B
+    # benchmark swaps implementations without touching caller code.
+    send = insert_item
+    try_recv = read_item
+
+    def drain(self, max_items: Optional[int] = None) -> List[Any]:
+        return transport.drain(self, max_items)
+
     def put(self, item: Any) -> None:
         if self._blocking:
             with self._not_full:
@@ -150,9 +167,7 @@ class LockedQueue:
                 self._dq.append(item)
                 self._not_empty.notify()
             return
-        import time
-        while self.insert_item(item) != nbb.OK:
-            time.sleep(0)
+        transport.send_blocking(self, item)
 
     def get(self) -> Any:
         if self._blocking:
@@ -162,9 +177,6 @@ class LockedQueue:
                 item = self._dq.popleft()
                 self._not_full.notify()
                 return item
-        import time
-        while True:
-            status, item = self.read_item()
-            if status == nbb.OK:
-                return item
-            time.sleep(0)
+        status, item = transport.recv_blocking(self)
+        assert status == nbb.OK
+        return item

@@ -115,6 +115,22 @@ class HostNBB:
         self._ac = ac + 2                       # acknowledge
         return OK, item
 
+    # -- Transport protocol (repro.core.transport) ---------------------------
+    # insert/read already speak Table-1 statuses; the aliases make HostNBB a
+    # structural Transport so channels/engines need no per-type dispatch.
+    send = insert_item
+    try_recv = read_item
+
+    def drain(self, max_items: Optional[int] = None) -> list:
+        """Consumer-side: take every item available now (non-blocking)."""
+        out = []
+        while max_items is None or len(out) < max_items:
+            status, item = self.read_item()
+            if status != OK:
+                break
+            out.append(item)
+        return out
+
     # Convenience blocking wrappers (spin + yield, still lock-free progress).
     def put(self, item: Any, spin: int = 64) -> None:
         import time

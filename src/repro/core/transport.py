@@ -1,0 +1,214 @@
+"""Unified lock-free Transport protocol — one wire format for every queue.
+
+Every host-side communication primitive in this repo (SPSC/MPSC NBB rings,
+the mutex baseline, NBW state cells, MCAPI channels) exposes the same
+three operations:
+
+  send(payload) -> status            non-blocking insert/publish
+  try_recv()    -> (status, payload) non-blocking read
+  drain(max_items) -> [payload, ..]  take everything available *now*
+
+with the paper's Table-1 status codes (``repro.core.nbb``):
+
+  OK                                   operation committed
+  BUFFER_FULL                          stable:    yield, retry later
+  BUFFER_FULL_BUT_CONSUMER_READING     transient: spin, retry immediately
+  BUFFER_EMPTY                         stable:    yield, retry later
+  BUFFER_EMPTY_BUT_PRODUCER_INSERTING  transient: spin, retry immediately
+
+The split into *stable* and *transient* failures is the paper's retry
+discipline: a transient status means the peer is mid-operation (an odd
+counter) and will commit within a bounded number of instructions, so the
+caller should busy-retry; a stable status means progress depends on the
+peer being scheduled at all, so the caller should yield — and, if the
+condition persists, back off exponentially rather than burn the core.
+:class:`Backoff` packages that policy; :func:`send_blocking` /
+:func:`recv_blocking` are the canonical retry loops built on it.
+
+STATE (NBW) cells join the protocol through :class:`StateTransport`,
+which maps the NBW collision statuses onto Table 1 (a collision *is*
+"producer inserting").  Scalar channels wrap any transport in a
+:class:`CodecTransport` so the packing happens in the transport stack,
+not in per-call ``ChannelType`` dispatch (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, List, Optional, Protocol, Tuple, runtime_checkable
+
+from repro.core import nbb, nbw
+
+# Table-1 status codes, re-exported so transport users need one import.
+OK = nbb.OK
+BUFFER_FULL = nbb.BUFFER_FULL
+BUFFER_FULL_BUT_CONSUMER_READING = nbb.BUFFER_FULL_BUT_CONSUMER_READING
+BUFFER_EMPTY = nbb.BUFFER_EMPTY
+BUFFER_EMPTY_BUT_PRODUCER_INSERTING = nbb.BUFFER_EMPTY_BUT_PRODUCER_INSERTING
+
+#: Statuses where the peer is mid-operation: retry immediately (spin).
+TRANSIENT = frozenset({BUFFER_FULL_BUT_CONSUMER_READING,
+                       BUFFER_EMPTY_BUT_PRODUCER_INSERTING})
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """Anything that moves payloads with Table-1 status codes."""
+
+    def send(self, payload: Any) -> int: ...
+
+    def try_recv(self) -> Tuple[int, Optional[Any]]: ...
+
+    def drain(self, max_items: Optional[int] = None) -> List[Any]: ...
+
+
+class Backoff:
+    """Bounded exponential backoff implementing the Table-1 retry discipline.
+
+    Phase 1 — spin: transient statuses (peer mid-operation) busy-retry up
+    to ``spins`` times; the peer commits within a bounded instruction count.
+    Phase 2 — yield: stable statuses (or exhausted spins) give up the
+    processor with ``sleep(0)`` for ``yields`` attempts.
+    Phase 3 — sleep: persistent emptiness/fullness sleeps, doubling from
+    ``sleep_init`` up to ``sleep_max`` — never a fixed busy-wait, never
+    unbounded latency once work arrives.
+
+    ``reset()`` after successful progress restores phase 1.
+    """
+
+    __slots__ = ("spins", "yields", "sleep_init", "sleep_max", "_attempt")
+
+    def __init__(self, spins: int = 32, yields: int = 16,
+                 sleep_init: float = 50e-6, sleep_max: float = 2e-3):
+        self.spins, self.yields = spins, yields
+        self.sleep_init, self.sleep_max = sleep_init, sleep_max
+        self._attempt = 0
+
+    def reset(self) -> None:
+        self._attempt = 0
+
+    def wait(self, status: int = BUFFER_EMPTY) -> None:
+        """Wait appropriately for ``status``; escalates across calls."""
+        if status in TRANSIENT and self._attempt < self.spins:
+            self._attempt += 1
+            return                       # spin: retry immediately
+        k = self._attempt - self.spins
+        self._attempt += 1
+        if k < self.yields:
+            time.sleep(0)                # yield the processor
+            return
+        delay = min(self.sleep_init * (2 ** min(k - self.yields, 20)),
+                    self.sleep_max)
+        time.sleep(delay)
+
+
+def send_blocking(t: Transport, payload: Any, *,
+                  timeout_s: Optional[float] = None,
+                  should_stop: Optional[Callable[[], bool]] = None) -> bool:
+    """Retry ``t.send`` with :class:`Backoff` until OK.  Returns False on
+    timeout or when ``should_stop()`` turns true (payload not delivered)."""
+    b = Backoff()
+    deadline = None if timeout_s is None else time.monotonic() + timeout_s
+    while True:
+        status = t.send(payload)
+        if status == OK:
+            return True
+        if should_stop is not None and should_stop():
+            return False
+        if deadline is not None and time.monotonic() > deadline:
+            return False
+        b.wait(status)
+
+
+def recv_blocking(t: Transport, *, timeout_s: Optional[float] = None,
+                  should_stop: Optional[Callable[[], bool]] = None
+                  ) -> Tuple[int, Optional[Any]]:
+    """Retry ``t.try_recv`` until OK; returns the last (status, payload) on
+    timeout/stop so callers can distinguish empty from delivered."""
+    b = Backoff()
+    deadline = None if timeout_s is None else time.monotonic() + timeout_s
+    while True:
+        status, payload = t.try_recv()
+        if status == OK:
+            return status, payload
+        if should_stop is not None and should_stop():
+            return status, None
+        if deadline is not None and time.monotonic() > deadline:
+            return status, None
+        b.wait(status)
+
+
+def drain(t: Transport, max_items: Optional[int] = None) -> List[Any]:
+    """Generic drain: repeated try_recv until a non-OK status.  Any
+    transport gets this for free; implementations may override."""
+    out: List[Any] = []
+    while max_items is None or len(out) < max_items:
+        status, payload = t.try_recv()
+        if status != OK:
+            break
+        out.append(payload)
+    return out
+
+
+class StateTransport:
+    """NBW state cell as a Transport (paper §7 state-message policy).
+
+    ``send`` never blocks and never reports FULL (the NBW Non-blocking
+    property).  ``try_recv`` maps NBW statuses onto Table 1: a read
+    collision or in-progress write is "producer inserting" (transient —
+    spin and retry); an unpublished cell is plain EMPTY (stable).  A
+    successful recv returns the *freshest* committed value; re-reads of
+    the same value are legal (state semantics, not FIFO).
+    """
+
+    __slots__ = ("cell",)
+
+    def __init__(self, cell: nbw.HostNBW):
+        self.cell = cell
+
+    def send(self, payload: Any) -> int:
+        self.cell.write(payload)
+        return OK
+
+    def try_recv(self) -> Tuple[int, Optional[Any]]:
+        status, value = self.cell.try_read()
+        if status != nbw.OK:
+            return BUFFER_EMPTY_BUT_PRODUCER_INSERTING, None
+        if value is None:               # nothing published yet
+            return BUFFER_EMPTY, None
+        return OK, value
+
+    def drain(self, max_items: Optional[int] = None) -> List[Any]:
+        """At most one item: the freshest committed value.  Non-blocking:
+        spins only through transient collisions (bounded by the writer's
+        commit, per the NBW Timeliness property); stable EMPTY returns
+        immediately like every other Transport."""
+        for _ in range(64):
+            status, value = self.try_recv()
+            if status == OK:
+                return [value]
+            if status not in TRANSIENT:
+                break
+        return []
+
+
+class CodecTransport:
+    """Encode/decode payloads over an inner transport (e.g. MCAPI scalar
+    packing).  Pure composition: status codes pass through untouched."""
+
+    __slots__ = ("inner", "encode", "decode")
+
+    def __init__(self, inner: Transport, encode: Callable[[Any], Any],
+                 decode: Callable[[Any], Any]):
+        self.inner, self.encode, self.decode = inner, encode, decode
+
+    def send(self, payload: Any) -> int:
+        return self.inner.send(self.encode(payload))
+
+    def try_recv(self) -> Tuple[int, Optional[Any]]:
+        status, payload = self.inner.try_recv()
+        if status == OK:
+            payload = self.decode(payload)
+        return status, payload
+
+    def drain(self, max_items: Optional[int] = None) -> List[Any]:
+        return [self.decode(p) for p in self.inner.drain(max_items)]

@@ -18,7 +18,7 @@ from typing import Dict, Iterator, Optional
 
 import numpy as np
 
-from repro.core import nbb
+from repro.core import nbb, transport
 from repro.core.host_queue import MpscQueue
 
 
@@ -67,17 +67,16 @@ class DataPipeline:
         while not self._stop.is_set():
             item = synth_batch(self.seed, pid, seq_no, self.batch,
                                self.seq_len, self.vocab, self.extras_shape)
-            # Non-blocking insert with bounded immediate retries, then
-            # yield — exactly the paper's Table-1 protocol.
-            while not self._stop.is_set():
-                status = ring.insert_item(item)
-                if status == nbb.OK:
-                    break
-                self._stop.wait(0.0005 if status == nbb.BUFFER_FULL else 0)
+            # Table-1 retry protocol via the shared Transport backoff:
+            # spin on transient statuses, yield, then exponential sleep.
+            transport.send_blocking(ring, item,
+                                    should_stop=self._stop.is_set)
             seq_no += 1
 
     def get(self) -> Dict[str, np.ndarray]:
-        return self._queue.get()
+        status, item = transport.recv_blocking(self._queue)
+        assert status == nbb.OK
+        return item
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         while True:

@@ -161,9 +161,9 @@ def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
         depth = 0
         tok = ""
         for ch in operands:
-            if ch == "(" or ch == "{":
+            if ch in "({[":
                 depth += 1
-            elif ch == ")" or ch == "}":
+            elif ch in ")}]":
                 depth -= 1
             if ch == "," and depth == 0:
                 opnds.append(tok.strip())

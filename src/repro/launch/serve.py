@@ -27,6 +27,9 @@ def main(argv=None) -> ServeEngine:
     ap.add_argument("--max-tokens", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--scheduler", default="slot", choices=["slot", "wave"],
+                    help="slot = iteration-level continuous batching "
+                         "(default); wave = batch-level baseline")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -34,7 +37,8 @@ def main(argv=None) -> ServeEngine:
     params = model.init(jax.random.PRNGKey(0))
     eng = ServeEngine(model, params, max_batch=args.max_batch,
                       max_len=args.max_len, n_clients=args.clients,
-                      pool_pages=max(256, args.clients * 16))
+                      pool_pages=max(256, args.clients * 16),
+                      scheduler=args.scheduler)
     eng_thread = eng.start()
 
     lat: list = []
@@ -73,6 +77,9 @@ def main(argv=None) -> ServeEngine:
     print(f"latency ms: p50 {lat_ms[len(lat_ms) // 2]:.0f} "
           f"p95 {lat_ms[int(len(lat_ms) * 0.95)]:.0f}")
     print(f"engine stats: {eng.stats}")
+    if args.scheduler == "slot":
+        print(f"slot occupancy: {eng.occupancy():.2f}  "
+              f"kv pool: {eng.pool.stats()}")
     return eng
 
 

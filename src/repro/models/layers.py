@@ -142,7 +142,10 @@ def attention(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array,
 
     x: [B, T, D]; positions: [B, T] absolute positions of x tokens.
     window: sliding-window size (0 = global causal).
-    cache/cache_pos: decode-mode ring cache and the write position (scalar).
+    cache/cache_pos: decode-mode ring cache and the write position —
+        a scalar (whole batch in lockstep, wave scheduling) or a [B]
+        vector (per-row positions, the slot-swap continuous batcher:
+        each decode slot advances independently, DESIGN.md §4).
     kv_source: cross-attention source [B, S, D] (no causal mask, no rope).
 
     Returns (out [B,T,D], updated cache or None).
@@ -168,26 +171,49 @@ def attention(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array,
 
     new_cache = None
     if cache is not None:
-        # Decode: write k/v of the T new tokens into the ring slots.
         size = cache["k"].shape[1]
-        slots = (cache_pos + jnp.arange(T)) % size          # [T]
-        k_full = cache["k"].at[:, slots].set(k.astype(cache["k"].dtype))
-        v_full = cache["v"].at[:, slots].set(v.astype(cache["v"].dtype))
+        cp = jnp.asarray(cache_pos)
+        if cp.ndim == 0:
+            # Lockstep decode: write k/v of the T new tokens into the
+            # same ring slots for every batch row.
+            slots = (cp + jnp.arange(T)) % size             # [T]
+            k_full = cache["k"].at[:, slots].set(k.astype(cache["k"].dtype))
+            v_full = cache["v"].at[:, slots].set(v.astype(cache["v"].dtype))
+            total = cp + T                                  # tokens so far
+            slot_ids = jnp.arange(size)
+            valid = slot_ids < jnp.minimum(total, size)     # [S]
+            # Absolute position held by each slot (causal/window masking).
+            wraps = (total - 1) // size
+            slot_pos = jnp.where(
+                slot_ids <= (total - 1) % size,
+                wraps * size + slot_ids,
+                jnp.maximum(wraps - 1, 0) * size + slot_ids,
+            )                                               # [S]
+            kv_pos = jnp.broadcast_to(slot_pos, (B, size))
+            kv_valid = jnp.broadcast_to(valid, (B, size))
+        else:
+            # Per-row decode (slot-swap continuous batching): every batch
+            # row is an independent sequence at its own position; rows
+            # whose slot is idle write to slot 0 but are masked out by
+            # their own row's validity, never by neighbours'.
+            slots = (cp[:, None] + jnp.arange(T)) % size    # [B, T]
+            b_idx = jnp.arange(B)[:, None]
+            k_full = cache["k"].at[b_idx, slots].set(
+                k.astype(cache["k"].dtype))
+            v_full = cache["v"].at[b_idx, slots].set(
+                v.astype(cache["v"].dtype))
+            total = cp[:, None] + T                         # [B, 1]
+            slot_ids = jnp.arange(size)[None, :]            # [1, S]
+            valid = slot_ids < jnp.minimum(total, size)     # [B, S]
+            wraps = (total - 1) // size
+            slot_pos = jnp.where(
+                slot_ids <= (total - 1) % size,
+                wraps * size + slot_ids,
+                jnp.maximum(wraps - 1, 0) * size + slot_ids,
+            )                                               # [B, S]
+            kv_pos, kv_valid = slot_pos, valid
         new_cache = _shard_cache({"k": k_full, "v": v_full})
         k, v = new_cache["k"], new_cache["v"]
-        # Validity: ring slot s holds a token iff it has been written.
-        total = cache_pos + T                               # tokens written so far
-        slot_ids = jnp.arange(size)
-        valid = slot_ids < jnp.minimum(total, size)         # [S]
-        # Absolute position held by each slot (for causal/window masking).
-        wraps = (total - 1) // size
-        slot_pos = jnp.where(
-            slot_ids <= (total - 1) % size,
-            wraps * size + slot_ids,
-            jnp.maximum(wraps - 1, 0) * size + slot_ids,
-        )                                                   # [S]
-        kv_pos = jnp.broadcast_to(slot_pos, (B, size))
-        kv_valid = jnp.broadcast_to(valid, (B, size))
     else:
         kv_pos = positions if not cross else None
         kv_valid = None

@@ -587,10 +587,14 @@ class Model:
         return caches
 
     def decode_step(self, params, caches, tokens, pos):
-        """tokens: [B, 1]; pos: scalar absolute position. Greedy."""
+        """tokens: [B, 1]; pos: absolute position — scalar (lockstep wave
+        decode) or [B] vector (per-slot continuous batching, where each
+        row advances independently).  Greedy."""
         cfg = self.cfg
+        pos = jnp.asarray(pos)
+        start = pos if pos.ndim == 0 else pos[:, None]      # [B,1] broadcasts
         hidden, new_caches, _ = self.forward(
-            params, tokens, caches=caches, cache_pos=pos, start_pos=pos)
+            params, tokens, caches=caches, cache_pos=pos, start_pos=start)
         w_out = unembed_matrix(params["embed"], cfg).astype(cfg.compute_dtype)
         logits = full_logits(hidden, w_out)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)

@@ -1,13 +1,14 @@
-"""Serving engine: lock-free request intake, batched prefill/decode.
+"""Serving engine: lock-free request intake, iteration-level batching.
 
 MCAPI topology, lock-free end to end (paper Figures 1-4 without the red
 lock):
 
-  client threads --SPSC NBB rings--> batcher --> prefill+decode -->
+  client threads --SPSC NBB rings--> slot batcher --> prefill+decode -->
       --per-client SPSC response rings--> clients
 
   * intake      — each client owns a private SPSC ring of an MpscQueue;
-                  submission is InsertItem with Table-1 status codes.
+                  submission is a Transport ``send`` with Table-1 status
+                  codes; the batcher drains via the same protocol.
   * lifecycle   — every request carries a CAS FSM cell (Figure 3):
                   FREE->VALID on submit, ->RECEIVED when batched,
                   ->COMPLETED on finish, ->CANCELLED on reject;
@@ -15,11 +16,22 @@ lock):
   * KV memory   — admission claims pages from the lock-free bitset pool
                   (kv_cache.py); a full pool *rejects* (BUFFER_FULL
                   semantics) instead of blocking the batcher.
-  * decode      — greedy, batched; a `done` mask retires sequences at
-                  EOS/max_tokens; the round ends when all retire
-                  (batch-level continuous batching — the next wave is
-                  admitted immediately; iteration-level slot swap is
-                  future work, noted in DESIGN.md).
+  * decode      — ITERATION-LEVEL continuous batching (the default): a
+                  fixed pool of ``max_batch`` decode slots, each driven
+                  by the paper's Figure-4 buffer FSM
+                  (FREE->RESERVED->ALLOCATED->RECEIVED->FREE).  A slot is
+                  RESERVED when its KV pages are claimed, ALLOCATED once
+                  the prompt is prefilled into its rows of the persistent
+                  batch cache, RECEIVED when the finished sequence is
+                  handed back, then FREE again — all at the granularity
+                  of a *single decode step*, so finished sequences
+                  release their slot and pages immediately and waiting
+                  requests swap in without stopping decode.  No global
+                  wave barrier: the serving-layer analogue of deleting
+                  the queue lock (DESIGN.md §4).
+                  ``scheduler="wave"`` keeps the old batch-level wave
+                  scheduler as the convoying baseline for A/B
+                  benchmarking (benchmarks/bench_serve.py).
 """
 from __future__ import annotations
 
@@ -27,13 +39,13 @@ import dataclasses
 import itertools
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import nbb, states
+from repro.core import nbb, states, transport
 from repro.core.host_queue import MpscQueue, SpscQueue
 from repro.serve.kv_cache import OK as POOL_OK
 from repro.serve.kv_cache import PagedKVPool
@@ -53,13 +65,50 @@ class Request:
     done_t: float = 0.0
 
 
+@dataclasses.dataclass
+class DecodeSlot:
+    """One row of the persistent batch cache, owned by at most one
+    sequence at a time.  ``fsm`` is the paper's Figure-4 buffer cell —
+    every occupancy change is a CAS transition, so a scheduler bug that
+    double-books or early-frees a slot raises instead of corrupting KV."""
+
+    index: int
+    fsm: states.StateCell = dataclasses.field(
+        default_factory=lambda: states.buffer_cell())
+    request: Optional[Request] = None
+    next_tok: int = 0                   # token produced, not yet harvested
+    pos: int = 0                        # tokens written to this row's cache
+    generated: int = 0
+    outs: Optional[np.ndarray] = None
+
+
+def _write_slot_caches(full, one, slot):
+    """Copy a B=1 prefilled cache into row ``slot`` of the batch cache.
+
+    The batch axis of each leaf is located structurally: it is the single
+    axis where the full cache is wider than the single-sequence cache
+    (works for every cache family — attention rings, mamba/rwkv state,
+    nested superblocks — without per-family code)."""
+    def put(f, o):
+        if f.shape == o.shape:          # max_batch == 1
+            return o
+        diff = [i for i in range(f.ndim) if f.shape[i] != o.shape[i]]
+        assert len(diff) == 1 and o.shape[diff[0]] == 1, (f.shape, o.shape)
+        return jax.lax.dynamic_update_slice_in_dim(
+            f, o.astype(f.dtype), slot, axis=diff[0])
+    return jax.tree.map(put, full, one)
+
+
 class ServeEngine:
     def __init__(self, model, params, *, max_batch: int = 4,
                  max_len: int = 128, n_clients: int = 2,
                  pool_pages: int = 64, page_size: int = 16,
-                 intake_depth: int = 32):
+                 intake_depth: int = 32, scheduler: str = "slot"):
+        if scheduler not in ("slot", "wave"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
         self.model, self.params = model, params
         self.max_batch, self.max_len = max_batch, max_len
+        self.scheduler = scheduler
         cfg = model.cfg
         self.intake = MpscQueue(n_clients, capacity_per_producer=intake_depth)
         self.responses = [SpscQueue(intake_depth) for _ in range(n_clients)]
@@ -70,9 +119,18 @@ class ServeEngine:
         self._id = itertools.count()
         self._stop = threading.Event()
         self._jit_decode = jax.jit(model.decode_step)
-        self._prefill_cache: Dict[Any, Any] = {}
+        self._jit_write_slot = jax.jit(_write_slot_caches)
+        # One jitted prefill; jax specializes it per (batch, prompt) shape.
+        self._jit_prefill = jax.jit(
+            lambda p, t: model.prefill(p, t, self.max_len))
+        # Slot state (iteration-level scheduler).
+        self.slots = [DecodeSlot(i) for i in range(max_batch)]
+        self._caches = None             # persistent [max_batch, ...] cache
+        self._cur = np.zeros((max_batch,), np.int32)
+        self._pos = np.zeros((max_batch,), np.int32)
         self.stats = {"served": 0, "rejected": 0, "batches": 0,
-                      "decode_steps": 0}
+                      "decode_steps": 0, "admitted": 0, "prefills": 0,
+                      "slot_busy_steps": 0, "dropped_responses": 0}
 
     # -- client API (any thread) ------------------------------------------------
     def submit(self, client_id: int, prompt: np.ndarray,
@@ -81,27 +139,166 @@ class ServeEngine:
         req = Request(next(self._id), client_id, np.asarray(prompt, np.int32),
                       max_tokens, eos_id, submit_t=time.monotonic())
         req.fsm.transition(states.REQUEST_FREE, states.REQUEST_VALID)
-        status = self.intake.insert_item(client_id, req)
+        status = self.intake.producer(client_id).send(req)
         if status != nbb.OK:
             req.fsm.transition(states.REQUEST_VALID, states.REQUEST_CANCELLED)
             return None
         return req
 
-    # -- engine loop --------------------------------------------------------------
+    # -- shared helpers -----------------------------------------------------------
+    def _respond(self, req: Request) -> None:
+        # Response ring full => bounded backoff, never a spin-pin.  The
+        # send can only fail during shutdown (should_stop); record the
+        # drop so stats never silently overcount deliveries.
+        if not transport.send_blocking(self.responses[req.client_id], req,
+                                       should_stop=self._stop.is_set):
+            self.stats["dropped_responses"] += 1
+
+    def _reject(self, req: Request) -> None:
+        req.fsm.transition(states.REQUEST_VALID, states.REQUEST_CANCELLED)
+        req.done_t = time.monotonic()
+        self.stats["rejected"] += 1
+        self._respond(req)
+
+    # ===========================================================================
+    # Iteration-level scheduler (default): slot swap, no wave barrier.
+    # ===========================================================================
+    def _bucket(self, n: int) -> int:
+        """Pad prompts to power-of-two buckets (>=8) to bound the number
+        of prefill traces; left-padding matches the wave scheduler."""
+        b = 8
+        while b < n:
+            b *= 2
+        return b
+
+    def _ensure_caches(self) -> None:
+        if self._caches is None:
+            self._caches = self.model.init_cache(self.max_batch, self.max_len)
+
+    def _admit_into(self, slot: DecodeSlot) -> bool:
+        """Swap one waiting request into a FREE slot.  Returns False when
+        the intake fan-in is empty; pool-full requests are rejected (the
+        NBB BUFFER_FULL discipline), never queued behind a blocked slot."""
+        while True:
+            status, req = self.intake.try_recv()
+            if status != nbb.OK:
+                return False
+            padded = self._bucket(len(req.prompt))
+            need = padded + req.max_tokens
+            if padded + req.max_tokens > self.max_len or self.pool.try_admit(
+                    req.req_id, need, slot=slot.index) != POOL_OK:
+                self._reject(req)
+                continue
+            break
+        if not any(s.request is not None for s in self.slots):
+            self.stats["batches"] += 1      # new busy period begins
+        # Figure-4 lifecycle: FREE -> RESERVED (pages claimed) ...
+        slot.fsm.transition(states.BUFFER_FREE, states.BUFFER_RESERVED)
+        prompt = np.zeros((padded,), np.int32)
+        prompt[padded - len(req.prompt):] = req.prompt      # left-pad
+        tok, one_cache = self._jit_prefill(self.params,
+                                           jnp.asarray(prompt[None]))
+        self.stats["prefills"] += 1
+        self._ensure_caches()
+        self._caches = self._jit_write_slot(self._caches, one_cache,
+                                            jnp.int32(slot.index))
+        # ... -> ALLOCATED (KV materialized in this slot's cache rows).
+        slot.fsm.transition(states.BUFFER_RESERVED, states.BUFFER_ALLOCATED)
+        req.fsm.transition(states.REQUEST_VALID, states.REQUEST_RECEIVED)
+        slot.request = req
+        slot.next_tok = int(np.asarray(tok)[0])
+        slot.pos = padded
+        slot.generated = 0
+        slot.outs = np.full((req.max_tokens,), -1, np.int64)
+        self._pos[slot.index] = padded
+        self._cur[slot.index] = slot.next_tok
+        self.stats["admitted"] += 1
+        return True
+
+    def _retire(self, slot: DecodeSlot) -> None:
+        """End-of-step release: slot + KV pages return to the pool the
+        moment a sequence finishes — the next tick can swap a waiting
+        request in while the other slots keep decoding."""
+        req = slot.request
+        req.tokens_out = slot.outs[:slot.generated].astype(np.int32)
+        req.done_t = time.monotonic()
+        req.fsm.transition(states.REQUEST_RECEIVED, states.REQUEST_COMPLETED)
+        self.pool.free(req.req_id)
+        self.stats["served"] += 1
+        self._respond(req)
+        # ALLOCATED -> RECEIVED (handed to consumer) -> FREE.
+        slot.fsm.transition(states.BUFFER_ALLOCATED, states.BUFFER_RECEIVED)
+        slot.fsm.transition(states.BUFFER_RECEIVED, states.BUFFER_FREE)
+        slot.request = None
+        slot.outs = None
+        self._cur[slot.index] = 0
+        self._pos[slot.index] = 0
+
+    def tick(self) -> Tuple[int, bool]:
+        """One engine iteration: swap in, harvest+retire, one decode step
+        for the whole slot pool.  Returns (requests served, did work)."""
+        served, worked = 0, False
+        # 1) Swap waiting requests into FREE slots (lock-free intake).
+        for slot in self.slots:
+            if slot.request is None:
+                if not self._admit_into(slot):
+                    break
+                worked = True
+        # 2) Harvest the token each active slot produced (prefill or the
+        #    previous decode step); retire finished sequences NOW.
+        for slot in self.slots:
+            req = slot.request
+            if req is None:
+                continue
+            slot.outs[slot.generated] = slot.next_tok
+            slot.generated += 1
+            worked = True
+            if (slot.next_tok == req.eos_id
+                    or slot.generated >= req.max_tokens
+                    or slot.pos + 1 >= self.max_len):
+                self._retire(slot)
+                served += 1
+        # 3) One decode step over the fixed-shape batch; idle rows are
+        #    masked by their own per-row position (layers.attention).
+        active = [s for s in self.slots if s.request is not None]
+        if active:
+            cur, self._caches = self._jit_decode(
+                self.params, self._caches, jnp.asarray(self._cur)[:, None],
+                jnp.asarray(self._pos))
+            cur = np.asarray(cur)
+            for s in active:
+                s.next_tok = int(cur[s.index])
+                s.pos += 1
+                self._pos[s.index] = s.pos
+                self._cur[s.index] = s.next_tok
+                self.pool.note_tokens(s.request.req_id, s.pos)
+            self.stats["decode_steps"] += 1
+            self.stats["slot_busy_steps"] += len(active)
+            worked = True
+        return served, worked
+
+    def occupancy(self) -> float:
+        """Mean fraction of decode slots doing useful work per step."""
+        steps = self.stats["decode_steps"]
+        return (self.stats["slot_busy_steps"] / (steps * self.max_batch)
+                if steps else 0.0)
+
+    # ===========================================================================
+    # Wave scheduler (baseline): batch-level waves, kept for A/B benchmarks.
+    # ===========================================================================
     def _take_batch(self, timeout_s: float = 0.05) -> List[Request]:
         """Greedy batcher: first request blocks briefly, rest drained free."""
         batch: List[Request] = []
         deadline = time.monotonic() + timeout_s
+        backoff = transport.Backoff()
         while len(batch) < self.max_batch:
-            status, req = self.intake.read_item()
+            status, req = self.intake.try_recv()
             if status == nbb.OK:
+                backoff.reset()
                 # admission control: KV pages for prompt + generation
                 need = len(req.prompt) + req.max_tokens
                 if self.pool.try_admit(req.req_id, need) != POOL_OK:
-                    req.fsm.transition(states.REQUEST_VALID,
-                                       states.REQUEST_CANCELLED)
-                    self.stats["rejected"] += 1
-                    self._respond(req)
+                    self._reject(req)
                     continue
                 req.fsm.transition(states.REQUEST_VALID,
                                    states.REQUEST_RECEIVED)
@@ -109,15 +306,10 @@ class ServeEngine:
             elif batch or time.monotonic() > deadline:
                 break
             else:
-                time.sleep(0.001)
+                # Table-1 discipline: spin on transient, then yield, then
+                # exponential sleep — not a fixed 1 ms busy-wait.
+                backoff.wait(status)
         return batch
-
-    def _prefill_fn(self, prompt_len: int):
-        key = prompt_len
-        if key not in self._prefill_cache:
-            self._prefill_cache[key] = jax.jit(
-                lambda p, t: self.model.prefill(p, t, self.max_len))
-        return self._prefill_cache[key]
 
     def _run_batch(self, batch: List[Request]) -> None:
         B = len(batch)
@@ -125,7 +317,8 @@ class ServeEngine:
         toks = np.zeros((B, plen), np.int32)
         for i, r in enumerate(batch):
             toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
-        tok, caches = self._prefill_fn(plen)(self.params, jnp.asarray(toks))
+        tok, caches = self._jit_prefill(self.params, jnp.asarray(toks))
+        self.stats["prefills"] += 1
 
         max_new = max(r.max_tokens for r in batch)
         outs = np.full((B, max_new), -1, np.int64)
@@ -153,23 +346,37 @@ class ServeEngine:
             self._respond(r)
         self.stats["batches"] += 1
 
-    def _respond(self, req: Request) -> None:
-        ring = self.responses[req.client_id]
-        while ring.insert_item(req) != nbb.OK:
-            time.sleep(0)          # response ring full: yield, retry
-
+    # -- engine loop --------------------------------------------------------------
     def step(self) -> int:
-        """One engine iteration; returns requests served."""
-        batch = self._take_batch()
-        if not batch:
-            return 0
-        self._run_batch(batch)
-        return len(batch)
+        """Drain everything currently runnable; returns requests served.
+
+        Wave scheduler: one fused batch.  Slot scheduler: tick until the
+        slot pool and intake are both idle (each tick is one decode
+        step, so admissions interleave with decode)."""
+        if self.scheduler == "wave":
+            batch = self._take_batch()
+            if not batch:
+                return 0
+            self._run_batch(batch)
+            return len(batch)
+        total = 0
+        while True:
+            served, worked = self.tick()
+            total += served
+            if not worked:
+                return total
 
     def serve_forever(self) -> None:
+        backoff = transport.Backoff()
         while not self._stop.is_set():
-            if self.step() == 0:
-                time.sleep(0.001)
+            if self.scheduler == "wave":
+                worked = self.step() > 0
+            else:
+                _, worked = self.tick()
+            if worked:
+                backoff.reset()
+            else:
+                backoff.wait(nbb.BUFFER_EMPTY)
 
     def start(self) -> threading.Thread:
         t = threading.Thread(target=self.serve_forever, daemon=True)
@@ -182,11 +389,6 @@ class ServeEngine:
     # -- client-side receive -----------------------------------------------------
     def get_response(self, client_id: int, timeout_s: float = 30.0
                      ) -> Optional[Request]:
-        deadline = time.monotonic() + timeout_s
-        ring = self.responses[client_id]
-        while time.monotonic() < deadline:
-            status, req = ring.read_item()
-            if status == nbb.OK:
-                return req
-            time.sleep(0.001)
-        return None
+        status, req = transport.recv_blocking(self.responses[client_id],
+                                              timeout_s=timeout_s)
+        return req if status == nbb.OK else None

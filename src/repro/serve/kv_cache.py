@@ -34,10 +34,18 @@ POOL_FULL = 1
 
 @dataclasses.dataclass
 class PageTable:
-    """Host-side metadata for one sequence's pages."""
+    """Host-side metadata for one sequence's pages.
+
+    ``slot`` is the decode slot the sequence is bound to in the slot-swap
+    engine (None for wave scheduling / unbound sequences); ``n_reserved``
+    records the admission-time reservation so utilization stats can report
+    how much of the reservation a sequence actually consumed.
+    """
     seq_id: int
     pages: List[int]
     n_tokens: int = 0
+    slot: Optional[int] = None
+    n_reserved: int = 0
 
 
 class PagedKVPool:
@@ -64,10 +72,12 @@ class PagedKVPool:
     def pages_needed(self, n_tokens: int) -> int:
         return max(1, math.ceil(n_tokens / self.page_size))
 
-    def try_admit(self, seq_id: int, n_tokens: int) -> int:
+    def try_admit(self, seq_id: int, n_tokens: int,
+                  slot: Optional[int] = None) -> int:
         """Claim pages for a sequence.  OK or POOL_FULL (all-or-nothing;
         claimed pages are rolled back on partial failure, so concurrent
-        admitters can't deadlock each other)."""
+        admitters can't deadlock each other).  ``slot`` binds the
+        reservation to a decode slot for per-slot accounting."""
         need = self.pages_needed(n_tokens)
         got: List[int] = []
         for _ in range(need):
@@ -81,8 +91,14 @@ class PagedKVPool:
                 return POOL_FULL
             self._next_probe = (page + 1) % self.n_pages
             got.append(page)
-        self._tables[seq_id] = PageTable(seq_id, got, n_tokens)
+        self._tables[seq_id] = PageTable(seq_id, got, n_tokens, slot=slot,
+                                         n_reserved=n_tokens)
         return OK
+
+    def note_tokens(self, seq_id: int, n_tokens: int) -> None:
+        """Record decode growth inside the existing reservation (no page
+        traffic; keeps per-slot utilization stats truthful)."""
+        self._tables[seq_id].n_tokens = n_tokens
 
     def grow(self, seq_id: int, new_n_tokens: int) -> int:
         """Extend a sequence (decode appends); claims pages as needed."""
@@ -106,8 +122,25 @@ class PagedKVPool:
     def free_pages(self) -> int:
         return self.n_pages - self._alloc.count()
 
+    def used_pages(self) -> int:
+        return self._alloc.count()
+
+    def n_seqs(self) -> int:
+        return len(self._tables)
+
     def table(self, seq_id: int) -> PageTable:
         return self._tables[seq_id]
+
+    def stats(self) -> Dict[str, object]:
+        """Snapshot for occupancy/utilization reporting: overall page use
+        plus a per-slot breakdown {slot: (pages, tokens, reserved)}."""
+        per_slot = {
+            t.slot: (len(t.pages), t.n_tokens, t.n_reserved)
+            for t in self._tables.values() if t.slot is not None
+        }
+        return {"n_pages": self.n_pages, "used": self.used_pages(),
+                "free": self.free_pages(), "seqs": self.n_seqs(),
+                "per_slot": per_slot}
 
     # -- device data movement ---------------------------------------------------
     def swap_in(self, seq_id: int, max_len: int

@@ -15,6 +15,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.parallel.pipeline import pipeline_apply, pipeline_reference
 from repro.parallel.compression import (compressed_psum, init_error_state)
+from repro.parallel.sharding import shard_map_compat
 
 
 def check_pipeline_schedules():
@@ -87,8 +88,8 @@ def check_compressed_psum():
                                       n_shards=8)
         return mean["w"], new_e["w"][None]
 
-    f = jax.shard_map(body, mesh=mesh, in_specs=(P("data"), P("data")),
-                      out_specs=(P(), P("data")), check_vma=False)
+    f = shard_map_compat(body, mesh=mesh, in_specs=(P("data"), P("data")),
+                         out_specs=(P(), P("data")))
     err = jnp.zeros((8, 32, 16), jnp.float32)
     mean, err1 = f(g_sh, err)
     true_mean = g_sh.mean(0)

@@ -11,7 +11,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dev dependency (requirements-dev.txt); property tests
+    from hypothesis import given, settings, strategies as st  # skip without it
+except ImportError:
+    given = settings = st = None
 
 from repro.core import bitset, nbb, nbw, states
 from repro.core.channels import ChannelType, Domain
@@ -107,68 +111,6 @@ class TestHostNBBThreaded:
 
 
 # ---------------------------------------------------------------------------
-# Property tests: interleaving simulator proves Safety under ANY schedule.
-# ---------------------------------------------------------------------------
-class TestNBBInterleavings:
-    @given(
-        capacity=st.integers(1, 4),
-        schedule=st.lists(st.booleans(), min_size=1, max_size=60),
-    )
-    @settings(max_examples=300, deadline=None)
-    def test_no_torn_reads_any_interleaving(self, capacity, schedule):
-        """Under any producer/consumer interleaving of the micro-ops, a
-        committed read never observes a torn slot, and FIFO order holds."""
-        sim = SimNBB(capacity)
-        p_state, c_state = "idle", "idle"
-        next_val, expect = 1, 1
-        for is_producer in schedule:
-            if is_producer:
-                if p_state == "idle":
-                    if sim.try_begin_insert() == nbb.OK:
-                        sim.write_half(next_val)   # torn intermediate state
-                        p_state = "mid"
-                else:
-                    sim.write_commit(next_val)
-                    next_val += 1
-                    p_state = "idle"
-            else:
-                if c_state == "idle":
-                    if sim.try_begin_read() == nbb.OK:
-                        c_state = "mid"
-                else:
-                    value, torn = sim.read_commit()
-                    assert torn == 0, "SAFETY VIOLATION: torn read committed"
-                    assert value == expect, "FIFO order violated"
-                    expect += 1
-                    c_state = "idle"
-
-    @given(capacity=st.integers(1, 4))
-    @settings(max_examples=50, deadline=None)
-    def test_status_codes_match_table1(self, capacity):
-        sim = SimNBB(capacity)
-        # Fill the ring completely.
-        for v in range(capacity):
-            assert sim.try_begin_insert() == nbb.OK
-            sim.write_commit(v)
-        assert sim.try_begin_insert() == nbb.BUFFER_FULL
-        # Start (but don't finish) a read: producer must see the
-        # "consumer reading" variant -> spin, don't yield.
-        assert sim.try_begin_read() == nbb.OK
-        assert sim.try_begin_insert() == nbb.BUFFER_FULL_BUT_CONSUMER_READING
-        sim.read_commit()
-        # Drain the rest.
-        for _ in range(capacity - 1):
-            assert sim.try_begin_read() == nbb.OK
-            sim.read_commit()
-        assert sim.try_begin_read() == nbb.BUFFER_EMPTY
-        # Start (but don't finish) an insert: consumer sees the
-        # "producer inserting" variant.
-        assert sim.try_begin_insert() == nbb.OK
-        sim.write_half(123)
-        assert sim.try_begin_read() == nbb.BUFFER_EMPTY_BUT_PRODUCER_INSERTING
-
-
-# ---------------------------------------------------------------------------
 # Functional JAX NBB
 # ---------------------------------------------------------------------------
 class TestJaxNBB:
@@ -201,34 +143,6 @@ class TestJaxNBB:
         assert int(status) == nbb.BUFFER_FULL
         _, item, _ = nbb.read_item(s2)
         assert int(item) == 7, "full insert must not overwrite"
-
-    @given(
-        capacity=st.integers(1, 5),
-        ops=st.lists(st.booleans(), min_size=1, max_size=40),
-    )
-    @settings(max_examples=100, deadline=None)
-    def test_matches_reference_fifo(self, capacity, ops):
-        """The functional NBB behaves exactly like a bounded FIFO."""
-        s = nbb.init(capacity, jnp.zeros((), jnp.int32))
-        model: list = []
-        next_val, expect_reads = 0, []
-        for is_insert in ops:
-            if is_insert:
-                s, status = nbb.insert_item(s, jnp.int32(next_val))
-                if len(model) < capacity:
-                    assert int(status) == nbb.OK
-                    model.append(next_val)
-                    next_val += 1
-                else:
-                    assert int(status) == nbb.BUFFER_FULL
-            else:
-                s, item, status = nbb.read_item(s)
-                if model:
-                    assert int(status) == nbb.OK
-                    assert int(item) == model.pop(0)
-                else:
-                    assert int(status) == nbb.BUFFER_EMPTY
-            assert int(nbb.size(s)) == len(model)
 
     def test_usable_as_scan_carry(self):
         def body(s, x):
@@ -338,15 +252,6 @@ class TestBitset:
         bits, s = bitset.claim_first_free(bits, 5)
         assert int(s) == 3
         assert int(bitset.count(bits)) == 5
-
-    @given(n=st.integers(1, 100))
-    @settings(max_examples=30, deadline=None)
-    def test_jax_count_matches(self, n):
-        bits = bitset.init(n)
-        k = min(n, 7)
-        for _ in range(k):
-            bits, _ = bitset.claim_first_free(bits, n)
-        assert int(bitset.count(bits)) == k
 
 
 # ---------------------------------------------------------------------------
@@ -464,3 +369,112 @@ class TestQueuesAndChannels:
         for v in [0, 255, 2 ** 15 - 1, -2 ** 31, 2 ** 63 - 1]:
             ch.send_blocking(v)
             assert ch.recv_blocking() == v
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis): interleaving simulator proves Safety under
+# ANY schedule; functional NBB matches a bounded-FIFO reference model.
+# Defined only when hypothesis is installed; otherwise one skip records it.
+# ---------------------------------------------------------------------------
+if st is None:
+    def test_hypothesis_property_tests():
+        pytest.importorskip("hypothesis")   # records the skip with reason
+else:
+    class TestNBBInterleavings:
+        @given(
+            capacity=st.integers(1, 4),
+            schedule=st.lists(st.booleans(), min_size=1, max_size=60),
+        )
+        @settings(max_examples=300, deadline=None)
+        def test_no_torn_reads_any_interleaving(self, capacity, schedule):
+            """Under any producer/consumer interleaving of the micro-ops, a
+            committed read never observes a torn slot, and FIFO order holds."""
+            sim = SimNBB(capacity)
+            p_state, c_state = "idle", "idle"
+            next_val, expect = 1, 1
+            for is_producer in schedule:
+                if is_producer:
+                    if p_state == "idle":
+                        if sim.try_begin_insert() == nbb.OK:
+                            sim.write_half(next_val)  # torn intermediate
+                            p_state = "mid"
+                    else:
+                        sim.write_commit(next_val)
+                        next_val += 1
+                        p_state = "idle"
+                else:
+                    if c_state == "idle":
+                        if sim.try_begin_read() == nbb.OK:
+                            c_state = "mid"
+                    else:
+                        value, torn = sim.read_commit()
+                        assert torn == 0, "SAFETY VIOLATION: torn read"
+                        assert value == expect, "FIFO order violated"
+                        expect += 1
+                        c_state = "idle"
+
+        @given(capacity=st.integers(1, 4))
+        @settings(max_examples=50, deadline=None)
+        def test_status_codes_match_table1(self, capacity):
+            sim = SimNBB(capacity)
+            # Fill the ring completely.
+            for v in range(capacity):
+                assert sim.try_begin_insert() == nbb.OK
+                sim.write_commit(v)
+            assert sim.try_begin_insert() == nbb.BUFFER_FULL
+            # Start (but don't finish) a read: producer must see the
+            # "consumer reading" variant -> spin, don't yield.
+            assert sim.try_begin_read() == nbb.OK
+            assert (sim.try_begin_insert()
+                    == nbb.BUFFER_FULL_BUT_CONSUMER_READING)
+            sim.read_commit()
+            # Drain the rest.
+            for _ in range(capacity - 1):
+                assert sim.try_begin_read() == nbb.OK
+                sim.read_commit()
+            assert sim.try_begin_read() == nbb.BUFFER_EMPTY
+            # Start (but don't finish) an insert: consumer sees the
+            # "producer inserting" variant.
+            assert sim.try_begin_insert() == nbb.OK
+            sim.write_half(123)
+            assert (sim.try_begin_read()
+                    == nbb.BUFFER_EMPTY_BUT_PRODUCER_INSERTING)
+
+    class TestJaxNBBProperties:
+        @given(
+            capacity=st.integers(1, 5),
+            ops=st.lists(st.booleans(), min_size=1, max_size=40),
+        )
+        @settings(max_examples=100, deadline=None)
+        def test_matches_reference_fifo(self, capacity, ops):
+            """The functional NBB behaves exactly like a bounded FIFO."""
+            s = nbb.init(capacity, jnp.zeros((), jnp.int32))
+            model: list = []
+            next_val = 0
+            for is_insert in ops:
+                if is_insert:
+                    s, status = nbb.insert_item(s, jnp.int32(next_val))
+                    if len(model) < capacity:
+                        assert int(status) == nbb.OK
+                        model.append(next_val)
+                        next_val += 1
+                    else:
+                        assert int(status) == nbb.BUFFER_FULL
+                else:
+                    s, item, status = nbb.read_item(s)
+                    if model:
+                        assert int(status) == nbb.OK
+                        assert int(item) == model.pop(0)
+                    else:
+                        assert int(status) == nbb.BUFFER_EMPTY
+                assert int(nbb.size(s)) == len(model)
+
+    class TestBitsetProperties:
+        @given(n=st.integers(1, 100))
+        @settings(max_examples=30, deadline=None)
+        def test_jax_count_matches(self, n):
+            bits = bitset.init(n)
+            k = min(n, 7)
+            for _ in range(k):
+                bits, _ = bitset.claim_first_free(bits, n)
+            assert int(bitset.count(bits)) == k

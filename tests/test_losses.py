@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dev dependency (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = settings = st = None
 
 from repro.models.losses import chunked_softmax_xent, full_logits
 
@@ -63,15 +67,19 @@ def test_masked_position_has_no_gradient():
     assert float(jnp.abs(g[:, :-1]).max()) > 0
 
 
-@given(st.integers(0, 2**31 - 1))
-@settings(max_examples=10, deadline=None)
-def test_layout_equivalence_property(seed):
-    hidden, w_out, labels = _data(seed, B=1, T=16, D=8, V=32)
-    a = chunked_softmax_xent(hidden, w_out, labels, token_chunk=4,
-                             layout="flat")
-    b = chunked_softmax_xent(hidden, w_out, labels, token_chunk=4,
-                             layout="batched")
-    np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
+if st is None:
+    def test_layout_equivalence_property():
+        pytest.importorskip("hypothesis")  # records the skip with reason
+else:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_layout_equivalence_property(seed):
+        hidden, w_out, labels = _data(seed, B=1, T=16, D=8, V=32)
+        a = chunked_softmax_xent(hidden, w_out, labels, token_chunk=4,
+                                 layout="flat")
+        b = chunked_softmax_xent(hidden, w_out, labels, token_chunk=4,
+                                 layout="batched")
+        np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
 
 
 def test_full_logits_shape():

@@ -137,6 +137,98 @@ def test_engine_rejects_when_pool_full(engine_setup):
     assert eng.pool.free_pages() == 2          # nothing leaked
 
 
+def test_slot_engine_mixed_lengths_no_convoy(engine_setup):
+    """Iteration-level batching: short requests flow through a slot while
+    a long generation keeps decoding — fewer decode steps than the wave
+    scheduler's sum of per-wave maxima."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=2, max_len=64, n_clients=1,
+                      pool_pages=256, scheduler="slot")
+    lengths = [12, 2, 2, 2]            # long first: occupies slot 0
+    for n in lengths:
+        assert eng.submit(0, np.arange(4) % cfg.vocab_size,
+                          max_tokens=n) is not None
+    served = eng.step()
+    assert served == 4
+    # Wave scheduling would convoy: waves [12,2] + [2,2] = 14+ steps.
+    # Slot swap: the long sequence bounds the busy period (~12 steps).
+    assert eng.stats["decode_steps"] < 14, eng.stats
+    assert eng.stats["served"] == 4 and eng.stats["rejected"] == 0
+    got = sorted(len(eng.get_response(0, 10).tokens_out) for _ in range(4))
+    assert got == sorted(lengths)
+    assert eng.pool.free_pages() == eng.pool.n_pages
+    assert 0.0 < eng.occupancy() <= 1.0
+
+
+def test_slot_engine_fifo_per_client(engine_setup):
+    """Slot-swap batcher admits in per-client submission order: with one
+    slot, responses complete strictly in FIFO order."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=1, max_len=32, n_clients=1,
+                      pool_pages=256, scheduler="slot")
+    ids = [eng.submit(0, np.arange(3) % cfg.vocab_size, max_tokens=2).req_id
+           for _ in range(3)]
+    eng.step()
+    got = [eng.get_response(0, 10).req_id for _ in range(3)]
+    assert got == ids, "per-client FIFO violated by slot batcher"
+
+
+def test_slot_fsm_lifecycle_and_illegal_transitions(engine_setup):
+    """Every slot ends a drained step FREE; driving a slot FSM through an
+    illegal transition still raises (the Figure-4 cell is live)."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=2, max_len=32, n_clients=1,
+                      pool_pages=256, scheduler="slot")
+    eng.submit(0, np.arange(4) % cfg.vocab_size, max_tokens=2)
+    eng.step()
+    eng.get_response(0, 10)
+    for slot in eng.slots:
+        assert slot.fsm.state == states.BUFFER_FREE
+        assert slot.request is None
+    with pytest.raises(states.IllegalTransition):
+        eng.slots[0].fsm.cas(states.BUFFER_FREE, states.BUFFER_RECEIVED)
+
+
+def test_slot_engine_admits_while_decoding(engine_setup):
+    """A request submitted mid-generation is swapped in without waiting
+    for the running sequence to finish (no wave barrier)."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=2, max_len=64, n_clients=1,
+                      pool_pages=256, scheduler="slot")
+    eng.submit(0, np.arange(4) % cfg.vocab_size, max_tokens=10)
+    # Run a few ticks: the long request is mid-decode.
+    for _ in range(3):
+        eng.tick()
+    steps_before = eng.stats["decode_steps"]
+    assert eng.slots[0].request is not None and steps_before >= 2
+    eng.submit(0, np.arange(4) % cfg.vocab_size, max_tokens=2)
+    served, _ = eng.tick()               # admission happens this tick...
+    assert eng.slots[1].request is not None, "no mid-decode swap-in"
+    assert eng.stats["batches"] == 1     # same busy period, no new wave
+    while eng.stats["served"] < 2:       # ...and both run to completion
+        eng.tick()
+    # The short request overtakes the long one — the point of slot swap.
+    lens = [len(eng.get_response(0, 10).tokens_out) for _ in range(2)]
+    assert lens == [2, 10], lens
+    assert eng.pool.free_pages() == eng.pool.n_pages
+
+
+def test_wave_scheduler_still_available(engine_setup):
+    """The wave baseline behind scheduler='wave' still serves correctly
+    (it is the A/B baseline for benchmarks/bench_serve.py)."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=4, max_len=32, n_clients=2,
+                      scheduler="wave")
+    for c in range(2):
+        assert eng.submit(c, np.arange(4) % cfg.vocab_size,
+                          max_tokens=3) is not None
+    assert eng.step() == 2
+    assert eng.stats["batches"] == 1
+    for c in range(2):
+        resp = eng.get_response(c, timeout_s=10)
+        assert resp is not None and len(resp.tokens_out) == 3
+
+
 def test_engine_threaded_clients(engine_setup):
     """Concurrent client threads + engine thread: all requests complete."""
     cfg, model, params = engine_setup
