@@ -13,7 +13,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention

@@ -164,7 +164,7 @@ def state_vs_fifo(n_msgs: int = 50_000) -> Dict:
     publishes n values; one reader polls for fresh versions until it has
     seen the final value.  Writer-side throughput is the comparison —
     the NBW writer never blocks or backs off."""
-    from repro.core.channels import Channel, ChannelType, Domain
+    from repro.core.channels import ChannelType, Domain
 
     dom = Domain(lock_free=True)
     results = {}

@@ -13,6 +13,14 @@ Expected result (the serving Figure-8): iteration-level slot swap >=
 wave throughput, with the short requests' completion latency improved
 the most — they no longer wait for long generations.
 
+Streaming metrics (the handle/session API): time-to-first-token is the
+harvest time of token 0 (`Request.first_token_t`, when the token hits
+the client's stream ring) minus submit time; inter-token latency is the
+spacing of `Request.token_ts`.  The wave baseline delivers whole
+responses only, so its TTFT *is* its completion latency — the gap
+between slot TTFT p50 and whole-response p50 is what the streaming API
+buys.
+
 Usage:  PYTHONPATH=src python benchmarks/bench_serve.py [--quick]
 Emits:  BENCH_serve.json (cwd)
 """
@@ -59,29 +67,36 @@ def run_engine(model, params, scheduler: str, workload: List[Dict],
     while eng.stats["served"] + eng.stats["rejected"] < 2:
         eng.step()
     for _ in range(2):
-        eng.get_response(0, timeout_s=10)
+        warm = eng.get_response(0, timeout_s=10)
+        assert warm, "warmup response timed out"
 
     def one_pass() -> Dict:
         for k in eng.stats:
             eng.stats[k] = 0
         t0 = time.monotonic()
         for w in workload:
-            assert eng.submit(0, w["prompt"] % model.cfg.vocab_size,
-                              max_tokens=w["max_tokens"]) is not None
+            submitted = eng.submit(0, w["prompt"] % model.cfg.vocab_size,
+                                   max_tokens=w["max_tokens"])
+            assert submitted is not None, "intake ring full mid-benchmark"
         while eng.stats["served"] + eng.stats["rejected"] < len(workload):
             eng.step()
         dt = time.monotonic() - t0
 
-        lat, toks, short_lat = [], 0, []
+        lat, toks, short_lat, ttft, itl = [], 0, [], [], []
         for _ in range(len(workload)):
             r = eng.get_response(0, timeout_s=10)
-            assert r is not None
+            assert r, "response timed out"
             lat.append(r.done_t - r.submit_t)
+            # rejected/cancelled terminals never set first_token_t
+            ttft.append((r.first_token_t or r.done_t) - r.submit_t)
+            itl.extend(b - a for a, b in zip(r.token_ts, r.token_ts[1:]))
             toks += len(r.tokens_out) if r.tokens_out is not None else 0
             if r.max_tokens <= 2:
                 short_lat.append(r.done_t - r.submit_t)
         lat.sort()
         short_lat.sort()
+        ttft.sort()
+        itl.sort()
         return {
             "scheduler": scheduler,
             "wall_s": dt,
@@ -92,6 +107,13 @@ def run_engine(model, params, scheduler: str, workload: List[Dict],
             "lat_ms_p95": 1e3 * lat[int(len(lat) * 0.95)],
             "short_req_lat_ms_p50": (1e3 * short_lat[len(short_lat) // 2]
                                      if short_lat else float("nan")),
+            # Streaming delivery metrics.  The wave baseline has no
+            # per-token delivery, so its TTFT equals completion latency
+            # (first_token_t is set at delivery) and it has no ITL.
+            "ttft_ms_p50": 1e3 * ttft[len(ttft) // 2],
+            "ttft_ms_p95": 1e3 * ttft[int(len(ttft) * 0.95)],
+            "itl_ms_p50": (1e3 * itl[len(itl) // 2] if itl else None),
+            "itl_ms_p95": (1e3 * itl[int(len(itl) * 0.95)] if itl else None),
             "decode_steps": eng.stats["decode_steps"],
             "prefills": eng.stats["prefills"],
             "served": eng.stats["served"],
@@ -131,31 +153,42 @@ def main(argv=None):
         results[sched] = run_engine(model, params, sched, workload,
                                     max_batch=args.max_batch, max_len=96)
         r = results[sched]
+        itl = (f"{r['itl_ms_p50']:.0f}" if r["itl_ms_p50"] is not None
+               else "-")
         print(f"{sched:5s}: {r['wall_s']:.2f}s  {r['tok_per_s']:.1f} tok/s  "
               f"decode_steps={r['decode_steps']}  "
               f"occupancy={r['slot_occupancy']:.2f}  "
               f"p50={r['lat_ms_p50']:.0f}ms  "
-              f"short-p50={r['short_req_lat_ms_p50']:.0f}ms")
+              f"short-p50={r['short_req_lat_ms_p50']:.0f}ms  "
+              f"ttft-p50={r['ttft_ms_p50']:.0f}ms  itl-p50={itl}ms")
 
+    slot, wave = results["slot"], results["wave"]
     out = {
         "workload": {"n_requests": n_requests, "max_batch": args.max_batch,
                      "mix": "alternating max_tokens 2 / 24, prompts 4 / 8",
                      "arch": args.arch},
-        "wave": results["wave"],
-        "slot": results["slot"],
+        "wave": wave,
+        "slot": slot,
         "speedup": {
-            "throughput_tok_per_s": (results["slot"]["tok_per_s"]
-                                     / results["wave"]["tok_per_s"]),
-            "decode_steps_saved": (results["wave"]["decode_steps"]
-                                   - results["slot"]["decode_steps"]),
-            "short_req_latency": (results["wave"]["short_req_lat_ms_p50"]
-                                  / results["slot"]["short_req_lat_ms_p50"]),
+            "throughput_tok_per_s": (slot["tok_per_s"] / wave["tok_per_s"]),
+            "decode_steps_saved": (wave["decode_steps"]
+                                   - slot["decode_steps"]),
+            "short_req_latency": (wave["short_req_lat_ms_p50"]
+                                  / slot["short_req_lat_ms_p50"]),
+            # Streaming wins: first token vs waiting for the whole
+            # response (same scheduler), and vs the wave baseline.
+            "ttft_vs_whole_response": (slot["lat_ms_p50"]
+                                       / slot["ttft_ms_p50"]),
+            "ttft_vs_wave": wave["ttft_ms_p50"] / slot["ttft_ms_p50"],
+            "ttft_better_than_whole_response": (slot["ttft_ms_p50"]
+                                                < slot["lat_ms_p50"]),
         },
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"\nslot/wave throughput: {out['speedup']['throughput_tok_per_s']:.2f}x"
           f"  short-request latency: {out['speedup']['short_req_latency']:.2f}x"
+          f"  ttft vs whole-response: {out['speedup']['ttft_vs_whole_response']:.2f}x"
           f"  -> {args.out}")
     return out
 

@@ -1,26 +1,79 @@
-"""Serve a small model with batched concurrent requests (deliverable b).
+"""Serve a small model with batched, *streamed* concurrent requests.
 
-Three client threads fire mixed-length requests at the lock-free engine;
-the iteration-level slot batcher swaps sequences in and out of the
-decode pool every step (no wave barrier) and answers over per-client
-SPSC rings.  Pass ``--scheduler wave`` through ``repro.launch.serve`` to
-feel the convoying baseline.
+Demonstrates the handle-based session API end to end: three client
+threads connect sessions to the lock-free engine, submit through
+non-blocking ``submit_i`` handles, and consume tokens one by one via
+``RequestHandle.tokens()`` while the iteration-level slot batcher is
+still decoding other sequences (no wave barrier).  One request is
+cancelled mid-decode to show the CAS cancellation path freeing its KV
+pages without stopping the batcher.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
 import sys
+import threading
+import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.launch.serve import main as serve_main
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.serve.engine import ServeEngine  # noqa: E402
 
 
 def main():
-    return serve_main(["--arch", "smollm-135m", "--smoke",
-                       "--clients", "3", "--requests-per-client", "4",
-                       "--prompt-len", "8", "--max-tokens", "8",
-                       "--scheduler", "slot"])
+    cfg = get_smoke_config("smollm-135m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, max_batch=4, max_len=64,
+                      n_clients=3, pool_pages=256, scheduler="slot")
+    eng_thread = eng.start()
+
+    def client(c: int) -> None:
+        rng = np.random.default_rng(c)
+        session = eng.connect(c)
+        for i in range(2):
+            prompt = rng.integers(0, cfg.vocab_size, 8)
+            handle = session.submit_i(prompt, max_tokens=8)
+            got = []
+            for pos, tok in handle.tokens(timeout_s=300):
+                got.append((pos, tok))     # delivered as decoded, per step
+            r = handle.response
+            print(f"client {c} req {r.req_id}: streamed {len(got)} tokens "
+                  f"({r.fsm.state.split('_')[-1]}), "
+                  f"ttft {1e3 * (r.first_token_t - r.submit_t):.0f}ms")
+            assert [p for p, _ in got] == list(range(len(r.tokens_out)))
+
+    threads = [threading.Thread(target=client, args=(c,)) for c in range(3)]
+    for t in threads:
+        t.start()
+
+    # A fourth stream on client 0's session thread would break the
+    # one-consumer rule, so cancel from the main thread instead: cancel()
+    # is thread-safe (a single CAS) while the stream surface is not.
+    session = eng.connect(2)
+    for t in threads:
+        t.join()
+    handle = session.submit_i(np.arange(8) % cfg.vocab_size, max_tokens=48)
+    time.sleep(0.05)                       # let a few decode steps run
+    handle.cancel()
+    r = handle.wait(timeout_s=30)
+    if not r:                              # typed, falsy TimeoutStatus
+        print(f"cancel demo timed out waiting for the terminal: {r}")
+    else:
+        print(f"cancel mid-decode -> {r.fsm.state.split('_')[-1]} after "
+              f"{len(r.tokens_out)}/48 tokens; kv pool free again: "
+              f"{eng.pool.free_pages() == eng.pool.n_pages}")
+
+    eng.stop()
+    eng_thread.join(timeout=10)
+    print(f"engine stats: {eng.stats}")
+    print(f"slot occupancy: {eng.occupancy():.2f}")
+    return eng
 
 
 if __name__ == "__main__":

@@ -7,7 +7,7 @@ are the public API; ``--arch <id>`` on every launcher resolves here.
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
 from repro.models.config import SHAPES, ModelConfig, ShapeConfig
 

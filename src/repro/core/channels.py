@@ -22,9 +22,9 @@ from __future__ import annotations
 import dataclasses
 import enum
 import struct
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
-from repro.core import nbb, nbw, transport
+from repro.core import nbw, transport
 from repro.core.host_queue import LockedQueue, SpscQueue
 from repro.core.transport import CodecTransport, StateTransport, Transport
 
@@ -79,17 +79,55 @@ class Channel:
     def drain(self, max_items: Optional[int] = None) -> List[Any]:
         return self.transport.drain(max_items)
 
+    # -- non-blocking operation handles (MCAPI ``*_i`` variants) -----------
+    # send_i/recv_i work on any channel type; the MCAPI-named variants
+    # enforce the connection format they are defined for (calling a
+    # packet-channel op on a scalar channel is an API error in MCAPI).
+    def send_i(self, payload: Any) -> transport.OpHandle:
+        return transport.send_i(self.transport, payload)
+
+    def recv_i(self) -> transport.OpHandle:
+        return transport.recv_i(self.transport)
+
+    def _require(self, ctype: "ChannelType", op: str) -> None:
+        if self.ctype is not ctype:
+            raise ValueError(f"{op} on a {self.ctype.value} channel "
+                             f"(needs {ctype.value})")
+
+    def msg_send_i(self, payload: Any) -> transport.OpHandle:
+        self._require(ChannelType.MESSAGE, "msg_send_i")
+        return self.send_i(payload)
+
+    def msg_recv_i(self) -> transport.OpHandle:
+        self._require(ChannelType.MESSAGE, "msg_recv_i")
+        return self.recv_i()
+
+    def pkt_send_i(self, payload: Any) -> transport.OpHandle:
+        self._require(ChannelType.PACKET, "pkt_send_i")
+        return self.send_i(payload)
+
+    def pkt_recv_i(self) -> transport.OpHandle:
+        self._require(ChannelType.PACKET, "pkt_recv_i")
+        return self.recv_i()
+
+    def scalar_send_i(self, value: int) -> transport.OpHandle:
+        self._require(ChannelType.SCALAR, "scalar_send_i")
+        return self.send_i(value)
+
+    def scalar_recv_i(self) -> transport.OpHandle:
+        self._require(ChannelType.SCALAR, "scalar_recv_i")
+        return self.recv_i()
+
+    # -- blocking calls: thin wrappers over handle + wait ------------------
     def send_blocking(self, payload: Any,
                       timeout_s: Optional[float] = None) -> bool:
-        return transport.send_blocking(self.transport, payload,
-                                       timeout_s=timeout_s)
+        return self.send_i(payload).wait(timeout_s=timeout_s)
 
     def recv_blocking(self, timeout_s: Optional[float] = None) -> Any:
-        status, payload = transport.recv_blocking(self.transport,
-                                                  timeout_s=timeout_s)
-        if status != nbb.OK:
+        h = self.recv_i()
+        if not h.wait(timeout_s=timeout_s):
             raise TimeoutError("recv_blocking timed out")
-        return payload
+        return h.result
 
 
 def _pack_scalar(value: int) -> bytes:

@@ -73,6 +73,11 @@ class MpscQueue:
     # which is what keeps the composition lock-free.
     try_recv = read_item
 
+    def recv_i(self) -> transport.OpHandle:
+        """Consumer-side non-blocking receive handle.  (No ``send_i``:
+        producers hold their private rings, each a full Transport.)"""
+        return transport.recv_i(self)
+
     def drain(self, max_items: Optional[int] = None) -> List[Any]:
         return transport.drain(self, max_items)
 
@@ -155,6 +160,12 @@ class LockedQueue:
     # benchmark swaps implementations without touching caller code.
     send = insert_item
     try_recv = read_item
+
+    def send_i(self, payload: Any) -> transport.OpHandle:
+        return transport.send_i(self, payload)
+
+    def recv_i(self) -> transport.OpHandle:
+        return transport.recv_i(self)
 
     def drain(self, max_items: Optional[int] = None) -> List[Any]:
         return transport.drain(self, max_items)

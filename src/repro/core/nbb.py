@@ -121,6 +121,16 @@ class HostNBB:
     send = insert_item
     try_recv = read_item
 
+    def send_i(self, payload: Any):
+        """Non-blocking send returning an OpHandle (mcapi_msg_send_i)."""
+        from repro.core import transport  # late: transport imports this module
+        return transport.send_i(self, payload)
+
+    def recv_i(self):
+        """Non-blocking receive returning an OpHandle (mcapi_msg_recv_i)."""
+        from repro.core import transport
+        return transport.recv_i(self)
+
     def drain(self, max_items: Optional[int] = None) -> list:
         """Consumer-side: take every item available now (non-blocking)."""
         out = []

@@ -6,11 +6,23 @@ transitions are performed with atomic compare-and-swap — "verify with atomic
 compare-and-swap that an object is in the expected state before changing to
 the next state" (Section 3, Figures 3 and 4).
 
-The two FSMs from the paper are reproduced exactly:
+The two FSMs from the paper are reproduced (with one extension):
 
-  Request:  FREE -> VALID -> {RECEIVED -> COMPLETED, COMPLETED, CANCELLED}
+  Request:  FREE -> VALID -> {RECEIVED -> {COMPLETED, CANCELLED},
+                              COMPLETED, CANCELLED}
             COMPLETED -> FREE, CANCELLED -> FREE
   Buffer:   FREE -> RESERVED -> ALLOCATED -> RECEIVED -> FREE
+
+The RECEIVED -> CANCELLED edge extends the paper's Figure 3 for
+client-initiated cancellation of an *in-service* request (the streaming
+session API): the client's ``cancel()`` races the server's completion
+with a single CAS, so exactly one of COMPLETED/CANCELLED wins and the
+server releases resources exactly once either way.
+
+A third, two-state FSM backs the MCAPI-style non-blocking operation
+handles (``repro.core.transport.OpHandle``):
+
+  Op:       PENDING -> {COMPLETED, CANCELLED}          (both terminal)
 
 Host CAS primitive: CPython has no compare-exchange bytecode, so we build
 consensus from the one atomic read-modify-write it does give us —
@@ -24,8 +36,7 @@ request lifecycle tracking.
 from __future__ import annotations
 
 import itertools
-import threading
-from typing import Dict, FrozenSet, Optional, Tuple
+from typing import Dict, FrozenSet, Tuple
 
 # --- Request FSM (paper Figure 3) ------------------------------------------
 REQUEST_FREE = "REQUEST_FREE"
@@ -38,7 +49,7 @@ REQUEST_TRANSITIONS: Dict[str, FrozenSet[str]] = {
     REQUEST_FREE: frozenset({REQUEST_VALID}),
     REQUEST_VALID: frozenset({REQUEST_RECEIVED, REQUEST_COMPLETED,
                               REQUEST_CANCELLED}),
-    REQUEST_RECEIVED: frozenset({REQUEST_COMPLETED}),
+    REQUEST_RECEIVED: frozenset({REQUEST_COMPLETED, REQUEST_CANCELLED}),
     REQUEST_COMPLETED: frozenset({REQUEST_FREE}),
     REQUEST_CANCELLED: frozenset({REQUEST_FREE}),
 }
@@ -54,6 +65,17 @@ BUFFER_TRANSITIONS: Dict[str, FrozenSet[str]] = {
     BUFFER_RESERVED: frozenset({BUFFER_ALLOCATED}),
     BUFFER_ALLOCATED: frozenset({BUFFER_RECEIVED}),
     BUFFER_RECEIVED: frozenset({BUFFER_FREE}),
+}
+
+# --- Operation-handle FSM (MCAPI mcapi_test/mcapi_wait/mcapi_cancel) --------
+OP_PENDING = "OP_PENDING"
+OP_COMPLETED = "OP_COMPLETED"
+OP_CANCELLED = "OP_CANCELLED"
+
+OP_TRANSITIONS: Dict[str, FrozenSet[str]] = {
+    OP_PENDING: frozenset({OP_COMPLETED, OP_CANCELLED}),
+    OP_COMPLETED: frozenset(),          # terminal
+    OP_CANCELLED: frozenset(),          # terminal
 }
 
 
@@ -127,3 +149,7 @@ def request_cell(name: str = "request") -> StateCell:
 
 def buffer_cell(name: str = "buffer") -> StateCell:
     return StateCell(BUFFER_TRANSITIONS, BUFFER_FREE, name)
+
+
+def op_cell(name: str = "op") -> StateCell:
+    return StateCell(OP_TRANSITIONS, OP_PENDING, name)

@@ -30,13 +30,25 @@ which maps the NBW collision statuses onto Table 1 (a collision *is*
 "producer inserting").  Scalar channels wrap any transport in a
 :class:`CodecTransport` so the packing happens in the transport stack,
 not in per-call ``ChannelType`` dispatch (see DESIGN.md §3).
+
+Non-blocking operation handles (MCAPI ``mcapi_*_i`` / ``mcapi_test`` /
+``mcapi_wait`` / ``mcapi_cancel``, paper §2): :func:`send_i` /
+:func:`recv_i` return an :class:`OpHandle` immediately instead of
+retrying inline.  The handle owns a two-state CAS FSM
+(PENDING -> COMPLETED | CANCELLED, ``repro.core.states``); callers
+overlap their own work with the in-flight exchange and poll with
+``test()``, park with ``wait()``, or abandon with ``cancel()`` — a
+concurrent cancel and completion race through one CAS, so exactly one
+terminal state wins.  The blocking calls below (:func:`send_blocking`,
+:func:`recv_blocking`) are thin wrappers: handle + ``wait`` (DESIGN.md
+§5).
 """
 from __future__ import annotations
 
 import time
 from typing import Any, Callable, List, Optional, Protocol, Tuple, runtime_checkable
 
-from repro.core import nbb, nbw
+from repro.core import nbb, nbw, states
 
 # Table-1 status codes, re-exported so transport users need one import.
 OK = nbb.OK
@@ -59,6 +71,10 @@ class Transport(Protocol):
     def try_recv(self) -> Tuple[int, Optional[Any]]: ...
 
     def drain(self, max_items: Optional[int] = None) -> List[Any]: ...
+
+    def send_i(self, payload: Any) -> "OpHandle": ...
+
+    def recv_i(self) -> "OpHandle": ...
 
 
 class Backoff:
@@ -101,40 +117,140 @@ class Backoff:
         time.sleep(delay)
 
 
+class OpHandle:
+    """A non-blocking operation in flight (MCAPI ``mcapi_request_t``).
+
+    Wraps one retriable attempt (a send or a receive) behind the
+    PENDING -> COMPLETED | CANCELLED CAS FSM of ``repro.core.states``:
+
+      * ``test()``   — one poll: run the attempt once, commit on OK
+                       (mcapi_test); never blocks.
+      * ``wait()``   — poll under the Table-1 :class:`Backoff` discipline
+                       until terminal, timeout, or ``should_stop``
+                       (mcapi_wait).  A timeout leaves the handle PENDING
+                       — the operation can still be polled or cancelled.
+      * ``cancel()`` — CAS PENDING -> CANCELLED (mcapi_cancel).  Safe
+                       from any thread; returns True iff this caller's
+                       proposal won (the op will never commit as
+                       COMPLETED).
+
+    Threading contract: ``test``/``wait`` run the underlying queue
+    operation, so they must be called from the thread that owns that
+    side of the transport (the single producer for a send handle, the
+    single consumer for a recv handle).  ``cancel`` only touches the
+    FSM and may race from anywhere.  If an attempt's side effect lands
+    in the same instant a cancel wins the CAS (the unavoidable window
+    between the queue op and the commit CAS), the value is parked in
+    ``late_result`` instead of being lost, and the handle still reports
+    CANCELLED — exactly one terminal state, no double delivery.
+    """
+
+    __slots__ = ("_attempt", "_fsm", "result", "late_result", "last_status",
+                 "attempted_ok")
+
+    def __init__(self, attempt: Callable[[], Tuple[int, Any]],
+                 name: str = "op"):
+        self._attempt = attempt        # () -> (Table-1 status, payload)
+        self._fsm = states.StateCell(states.OP_TRANSITIONS,
+                                     states.OP_PENDING, name)
+        self.result: Any = None        # payload once COMPLETED (None for send)
+        self.late_result: Any = None   # side effect that lost the CAS race
+        self.last_status = BUFFER_EMPTY  # last non-OK status observed
+        self.attempted_ok = False      # the queue op itself committed
+
+    @property
+    def state(self) -> str:
+        return self._fsm.state
+
+    @property
+    def done(self) -> bool:
+        return self._fsm.state != states.OP_PENDING
+
+    @property
+    def completed(self) -> bool:
+        return self._fsm.state == states.OP_COMPLETED
+
+    @property
+    def cancelled(self) -> bool:
+        return self._fsm.state == states.OP_CANCELLED
+
+    def test(self) -> bool:
+        """One non-blocking poll; True iff the operation has completed."""
+        s = self._fsm.state
+        if s == states.OP_COMPLETED:
+            return True
+        if s == states.OP_CANCELLED:
+            return False
+        status, payload = self._attempt()
+        if status != OK:
+            self.last_status = status
+            return False
+        self.attempted_ok = True
+        if self._fsm.cas(states.OP_PENDING, states.OP_COMPLETED):
+            self.result = payload
+            return True
+        self.late_result = payload     # cancel won; don't lose the item
+        return False
+
+    def wait(self, timeout_s: Optional[float] = None,
+             backoff: Optional[Backoff] = None,
+             should_stop: Optional[Callable[[], bool]] = None) -> bool:
+        """Poll until terminal; True iff COMPLETED.  False on cancel,
+        timeout, or ``should_stop`` (the handle stays PENDING on the
+        latter two, so the caller may keep polling or cancel)."""
+        b = backoff if backoff is not None else Backoff()
+        deadline = None if timeout_s is None else time.monotonic() + timeout_s
+        while True:
+            if self.test():
+                return True
+            if self.cancelled:
+                return False
+            if should_stop is not None and should_stop():
+                return False
+            if deadline is not None and time.monotonic() > deadline:
+                return False
+            b.wait(self.last_status)
+
+    def cancel(self) -> bool:
+        """CAS PENDING -> CANCELLED; True iff this caller won."""
+        return self._fsm.cas(states.OP_PENDING, states.OP_CANCELLED)
+
+
+def send_i(t: Transport, payload: Any) -> OpHandle:
+    """Non-blocking send (``mcapi_msg_send_i``): returns an OpHandle after
+    one eager attempt, so the uncontended case is already COMPLETED."""
+    h = OpHandle(lambda: (t.send(payload), None), name="send_i")
+    h.test()
+    return h
+
+
+def recv_i(t: Transport) -> OpHandle:
+    """Non-blocking receive (``mcapi_msg_recv_i``): the received payload
+    lands in ``handle.result``.  One eager attempt before returning."""
+    h = OpHandle(t.try_recv, name="recv_i")
+    h.test()
+    return h
+
+
 def send_blocking(t: Transport, payload: Any, *,
                   timeout_s: Optional[float] = None,
                   should_stop: Optional[Callable[[], bool]] = None) -> bool:
-    """Retry ``t.send`` with :class:`Backoff` until OK.  Returns False on
-    timeout or when ``should_stop()`` turns true (payload not delivered)."""
-    b = Backoff()
-    deadline = None if timeout_s is None else time.monotonic() + timeout_s
-    while True:
-        status = t.send(payload)
-        if status == OK:
-            return True
-        if should_stop is not None and should_stop():
-            return False
-        if deadline is not None and time.monotonic() > deadline:
-            return False
-        b.wait(status)
+    """Blocking send = handle + wait (DESIGN.md §5 layering).  Returns
+    False on timeout or when ``should_stop()`` turns true (payload not
+    delivered)."""
+    return send_i(t, payload).wait(timeout_s=timeout_s,
+                                   should_stop=should_stop)
 
 
 def recv_blocking(t: Transport, *, timeout_s: Optional[float] = None,
                   should_stop: Optional[Callable[[], bool]] = None
                   ) -> Tuple[int, Optional[Any]]:
-    """Retry ``t.try_recv`` until OK; returns the last (status, payload) on
-    timeout/stop so callers can distinguish empty from delivered."""
-    b = Backoff()
-    deadline = None if timeout_s is None else time.monotonic() + timeout_s
-    while True:
-        status, payload = t.try_recv()
-        if status == OK:
-            return status, payload
-        if should_stop is not None and should_stop():
-            return status, None
-        if deadline is not None and time.monotonic() > deadline:
-            return status, None
-        b.wait(status)
+    """Blocking receive = handle + wait; returns the last (status, None)
+    on timeout/stop so callers can distinguish empty from delivered."""
+    h = recv_i(t)
+    if h.wait(timeout_s=timeout_s, should_stop=should_stop):
+        return OK, h.result
+    return h.last_status, None
 
 
 def drain(t: Transport, max_items: Optional[int] = None) -> List[Any]:
@@ -190,6 +306,12 @@ class StateTransport:
                 break
         return []
 
+    def send_i(self, payload: Any) -> OpHandle:
+        return send_i(self, payload)
+
+    def recv_i(self) -> OpHandle:
+        return recv_i(self)
+
 
 class CodecTransport:
     """Encode/decode payloads over an inner transport (e.g. MCAPI scalar
@@ -212,3 +334,9 @@ class CodecTransport:
 
     def drain(self, max_items: Optional[int] = None) -> List[Any]:
         return [self.decode(p) for p in self.inner.drain(max_items)]
+
+    def send_i(self, payload: Any) -> OpHandle:
+        return send_i(self, payload)
+
+    def recv_i(self) -> OpHandle:
+        return recv_i(self)

@@ -25,8 +25,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, list_archs, shapes_for
 from repro.launch import hlo_analysis

@@ -1,7 +1,13 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
 Starts the lock-free ServeEngine and drives it with synthetic client
-threads; prints throughput/latency and the engine's lock-free stats.
+threads over the streaming session API: each client owns a Session,
+submits through non-blocking ``submit_i`` handles, and consumes tokens
+as they are produced via ``RequestHandle.tokens()``.  Per-client results
+travel back to the main thread over private SPSC rings drained through
+the Transport protocol — no lock anywhere in the demo, matching the
+engine it demonstrates.  Prints throughput, completion latency, TTFT,
+and the engine's lock-free stats.
 """
 from __future__ import annotations
 
@@ -13,8 +19,16 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config, list_archs
+from repro.core import nbb
+from repro.core.host_queue import SpscQueue
 from repro.models.model import build_model
 from repro.serve.engine import ServeEngine
+
+
+def _pct(sorted_vals, q: float) -> float:
+    if not sorted_vals:
+        return float("nan")
+    return sorted_vals[min(int(len(sorted_vals) * q), len(sorted_vals) - 1)]
 
 
 def main(argv=None) -> ServeEngine:
@@ -41,22 +55,29 @@ def main(argv=None) -> ServeEngine:
                       scheduler=args.scheduler)
     eng_thread = eng.start()
 
-    lat: list = []
-    lock_free_note = threading.Lock()  # only guards the results list below
+    # One private SPSC result ring per client (client thread produces,
+    # main thread drains after join): the Figure-1 fan-in without its
+    # lock, in the launcher itself.
+    results = [SpscQueue(args.requests_per_client + 1)
+               for _ in range(args.clients)]
 
     def client(c: int) -> None:
         rng = np.random.default_rng(c)
-        done = 0
-        while done < args.requests_per_client:
+        session = eng.connect(c)
+        for _ in range(args.requests_per_client):
             prompt = rng.integers(0, cfg.vocab_size, args.prompt_len)
-            if eng.submit(c, prompt, max_tokens=args.max_tokens) is None:
-                time.sleep(0.001)
-                continue
-            r = eng.get_response(c, timeout_s=300)
-            assert r is not None
-            with lock_free_note:
-                lat.append(r.done_t - r.submit_t)
-            done += 1
+            # submit_i never blocks: a full intake ring just leaves the
+            # handle PENDING and its own polling retries the send.
+            handle = session.submit_i(prompt, max_tokens=args.max_tokens)
+            n_stream = sum(1 for _ in handle.tokens(timeout_s=300))
+            r = handle.response
+            assert r is not None and n_stream == len(r.tokens_out)
+            # Rejected/cancelled requests never produced a first token;
+            # report their ttft as completion time like the wave baseline.
+            ttft_t = r.first_token_t or r.done_t
+            status = results[c].send((r.done_t - r.submit_t,
+                                      ttft_t - r.submit_t))
+            assert status == nbb.OK     # ring is sized to fit every result
 
     t0 = time.monotonic()
     threads = [threading.Thread(target=client, args=(c,))
@@ -69,13 +90,20 @@ def main(argv=None) -> ServeEngine:
     eng.stop()
     eng_thread.join(timeout=10)
 
+    lat, ttft = [], []
+    for ring in results:                 # Transport-protocol drain
+        for total_s, ttft_s in ring.drain():
+            lat.append(total_s * 1e3)
+            ttft.append(ttft_s * 1e3)
+    lat.sort()
+    ttft.sort()
+
     n = args.clients * args.requests_per_client
     toks = sum(args.max_tokens for _ in range(n))
-    lat_ms = sorted(x * 1e3 for x in lat)
     print(f"served {eng.stats['served']} requests in {dt:.2f}s "
           f"({n / dt:.1f} req/s, {toks / dt:.1f} tok/s)")
-    print(f"latency ms: p50 {lat_ms[len(lat_ms) // 2]:.0f} "
-          f"p95 {lat_ms[int(len(lat_ms) * 0.95)]:.0f}")
+    print(f"latency ms: p50 {_pct(lat, 0.5):.0f} p95 {_pct(lat, 0.95):.0f}")
+    print(f"ttft ms:    p50 {_pct(ttft, 0.5):.0f} p95 {_pct(ttft, 0.95):.0f}")
     print(f"engine stats: {eng.stats}")
     if args.scheduler == "slot":
         print(f"slot occupancy: {eng.occupancy():.2f}  "

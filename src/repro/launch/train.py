@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
 from repro.configs import get_config, get_smoke_config, list_archs
 from repro.data.pipeline import DataPipeline

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax.numpy as jnp
 
@@ -109,7 +109,6 @@ class ModelConfig:
             d_in = ss.expand * d
             nh = ss.num_heads or d_in // ss.head_dim
             mamba = d * (2 * d_in + 2 * ss.state_dim + nh) + d_in * d + d_in * ss.conv_kernel
-            n_attn_blocks = (L // self.attn_every) if self.attn_every else 0
             n += L * (mamba + 2 * d * self.d_ff)  # zamba2 blocks have MLPs
             n += attn  # one shared attention block
             return n

@@ -8,7 +8,7 @@ sharding, or (c) abstract shapes for the dry-run — one source of truth.
 from __future__ import annotations
 
 import zlib
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -225,7 +225,6 @@ def attention(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array,
 
     # GQA: fold the group dimension into q.
     group = nh // nkv
-    S = k.shape[1]
     qg = q.reshape(B, T, nkv, group, hd)
 
     softcap = cfg.attn_logit_softcap

@@ -32,7 +32,6 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.parallel.sharding import shard
 
 
 def _clamp(ld: jax.Array, clamp: float) -> jax.Array:

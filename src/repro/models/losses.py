@@ -9,7 +9,7 @@ bounded-slots idea as the paper's ring buffer, applied to the loss.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +42,6 @@ def chunked_softmax_xent(hidden: jax.Array, w_out: jax.Array,
                  2.4 GB/trip on the 256-way smollm cell).
     """
     B, T, D = hidden.shape
-    V = w_out.shape[1]
 
     if layout == "batched":
         w = (jnp.ones((B, T), jnp.float32) if weights is None

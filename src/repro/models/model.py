@@ -16,8 +16,7 @@ cross-attn) scan over *superblocks*.  Every train-mode block is wrapped in
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -342,7 +341,6 @@ class Model:
 
             def superblock(x, inp):
                 sp, c = inp
-                lc = c["local"] if decode else [None] * per
                 new_local = []
                 for i in range(per):
                     lp_i = jax.tree.map(lambda a: a[i], sp["local"])
@@ -440,7 +438,6 @@ class Model:
 
             def body(x, inp):
                 lp, c = inp
-                h = x
                 x, nc = attn_block(lp["self"], cfg, x, positions,
                                    cache=c["self"] if decode else None,
                                    cache_pos=cache_pos)

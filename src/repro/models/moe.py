@@ -19,8 +19,7 @@ Figure 1, with slot-disjoint writes instead of a global lock (DESIGN.md §2).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +28,7 @@ from jax.sharding import PartitionSpec as P
 from repro.models.config import ModelConfig
 from repro.models.layers import ParamBuilder
 from repro.parallel import sharding
-from repro.parallel.sharding import Axes, shard
+from repro.parallel.sharding import Axes
 
 
 def moe_params(make: ParamBuilder, cfg: ModelConfig) -> Dict[str, Any]:

@@ -11,7 +11,7 @@ Decode carries (shift_tm, shift_cm, wkv_state) per layer.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -79,7 +79,6 @@ def compressed_psum(grads: Any, err: Any, axis: str,
     def one(g, e):
         target = g.astype(jnp.float32) + e
         q, scale = quantize_int8(target)
-        recon_local = dequantize_int8(q, scale)
         # shared scale: every shard must use the same dequant factor
         scale_max = jax.lax.pmax(scale, axis)
         # requantize against the shared scale so sums are consistent

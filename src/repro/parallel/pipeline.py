@@ -35,7 +35,6 @@ only in collective schedule — which is the paper's whole point.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

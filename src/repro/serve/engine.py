@@ -32,6 +32,18 @@ lock):
                   ``scheduler="wave"`` keeps the old batch-level wave
                   scheduler as the convoying baseline for A/B
                   benchmarking (benchmarks/bench_serve.py).
+  * streaming   — the client surface is handle-based and per-token
+                  (DESIGN.md §5): ``engine.connect(client_id)`` returns
+                  the client's :class:`Session`;
+                  ``session.submit_i(...)`` returns a
+                  :class:`RequestHandle` whose ``tokens()`` iterator
+                  yields ``(pos, token)`` pairs as the batcher harvests
+                  them — one packed int64 scalar per decode step on the
+                  client's SPSC stream ring — and whose ``cancel()``
+                  CASes the request FSM so the batcher retires the slot
+                  and frees its KV pages *mid-decode*.  The legacy
+                  blocking calls (``submit``/``get_response``) are thin
+                  wrappers over session + handle.
 """
 from __future__ import annotations
 
@@ -39,7 +51,8 @@ import dataclasses
 import itertools
 import threading
 import time
-from typing import List, Optional, Tuple
+from collections import deque
+from typing import Dict, Iterator, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -62,7 +75,271 @@ class Request:
         default_factory=lambda: states.request_cell())
     tokens_out: Optional[np.ndarray] = None
     submit_t: float = 0.0
+    first_token_t: float = 0.0          # harvest time of token 0 (TTFT)
     done_t: float = 0.0
+    token_ts: List[float] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeoutStatus:
+    """Typed timeout from the client receive surface.  Falsy, so callers
+    can write ``if not resp:`` without isinstance checks, and carries the
+    last Table-1 status observed instead of a bare exception."""
+
+    waited_s: float
+    status: int = nbb.BUFFER_EMPTY
+
+    def __bool__(self) -> bool:
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Streaming wire format: one packed int64 scalar per harvested token on the
+# client's SPSC stream ring (the MCAPI scalar channel format), terminal
+# Request objects on the response ring.  req_id rides in the top 16 bits —
+# enough to demultiplex any realistic number of in-flight requests per
+# client; ``pos`` is the output index, so clients reassemble by position.
+# ---------------------------------------------------------------------------
+_REQ_MASK = 0xFFFF
+
+
+def pack_token_event(req_id: int, pos: int, token: int) -> int:
+    return (((req_id & _REQ_MASK) << 48) | ((pos & 0xFFFF) << 32)
+            | (token & 0xFFFFFFFF))
+
+
+def unpack_token_event(ev: int) -> Tuple[int, int, int]:
+    """-> (req_id mod 2^16, output position, token id)."""
+    return (ev >> 48) & _REQ_MASK, (ev >> 32) & 0xFFFF, ev & 0xFFFFFFFF
+
+
+class RequestHandle:
+    """One in-flight request (the serving analogue of an ``OpHandle``).
+
+    Returned by :meth:`Session.submit_i`.  The submission itself is a
+    non-blocking operation handle over the client's private intake ring;
+    ``test``/``wait``/``tokens`` poll it through, so a full intake ring
+    delays — never blocks — the caller.  Thread contract: ``test``,
+    ``wait`` and ``tokens`` belong to the owning client thread (they run
+    the session's ring consumer); ``cancel`` may race from any thread.
+    """
+
+    def __init__(self, session: "Session", req: Request,
+                 submit: transport.OpHandle):
+        self.req = req
+        self._session = session
+        self._submit = submit
+        self._tokens: deque = deque()      # (pos, token) routed by pump
+        self._final: Optional[Request] = None
+
+    @property
+    def req_id(self) -> int:
+        return self.req.req_id
+
+    @property
+    def submitted(self) -> bool:
+        """The request has entered the engine's intake ring."""
+        return self._submit.completed
+
+    @property
+    def done(self) -> bool:
+        return self._final is not None
+
+    @property
+    def response(self) -> Optional[Request]:
+        """The terminal Request (COMPLETED or CANCELLED), once delivered."""
+        return self._final
+
+    def _poll(self) -> bool:
+        """One non-blocking progress attempt; True if anything moved.
+        Owner-thread only — this is also where a cancelled-before-send
+        request is finalized locally: the owner thread set (or didn't
+        set) ``attempted_ok`` itself, so unlike ``cancel()`` it can
+        trust the flag without racing an in-flight attempt."""
+        moved = False
+        if not self._submit.done:
+            moved = self._submit.test() or moved
+        if (self._final is None and self._submit.cancelled
+                and not self._submit.attempted_ok):
+            # The payload never reached the intake ring; the engine will
+            # never answer, so the terminal is produced here.
+            self.req.done_t = time.monotonic()
+            if self.req.tokens_out is None:
+                self.req.tokens_out = np.zeros((0,), np.int32)
+            self._session.forget(self.req.req_id)
+            self._final = self.req
+            return True
+        return self._session.pump() or moved
+
+    def test(self) -> bool:
+        """Non-blocking: True iff the request has reached a terminal
+        state (its final Request is available)."""
+        if self._final is None:
+            self._poll()
+        return self._final is not None
+
+    def wait(self, timeout_s: Optional[float] = None
+             ) -> Union[Request, TimeoutStatus]:
+        """Block (Backoff discipline) until terminal; the final Request,
+        or a falsy TimeoutStatus with the handle still live."""
+        b = transport.Backoff()
+        deadline = (None if timeout_s is None
+                    else time.monotonic() + timeout_s)
+        while self._final is None:
+            if self._poll():
+                b.reset()
+                continue
+            if deadline is not None and time.monotonic() > deadline:
+                return TimeoutStatus(waited_s=timeout_s)
+            b.wait(nbb.BUFFER_EMPTY)
+        return self._final
+
+    def tokens(self, timeout_s: Optional[float] = None
+               ) -> Iterator[Tuple[int, int]]:
+        """Yield ``(pos, token)`` as the batcher produces them.
+
+        Tokens stream over the client's SPSC ring (one scalar per decode
+        step); when backpressure dropped an event mid-stream, the missing
+        positions are filled in from the terminal ``tokens_out`` — every
+        position is delivered exactly once, in nondecreasing order except
+        for those recovered gaps.  ``timeout_s`` is an *idle* timeout:
+        raises TimeoutError only after that long with no progress at all
+        (a slow but advancing generation never trips it)."""
+        b = transport.Backoff()
+        deadline = (None if timeout_s is None
+                    else time.monotonic() + timeout_s)
+        delivered = set()
+        while True:
+            while self._tokens:
+                pos, tok = self._tokens.popleft()
+                if pos not in delivered:
+                    delivered.add(pos)
+                    yield pos, tok
+            if self._final is not None:
+                out = self._final.tokens_out
+                for p in range(0 if out is None else len(out)):
+                    if p not in delivered:
+                        yield p, int(out[p])
+                return
+            if self._poll():
+                b.reset()
+                if deadline is not None:        # progress: push it out
+                    deadline = time.monotonic() + timeout_s
+                continue
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"token stream idle for {timeout_s}s "
+                    f"(request {self.req.req_id} not terminal)")
+            b.wait(nbb.BUFFER_EMPTY)
+
+    def cancel(self) -> bool:
+        """Cancel from any thread.  Pure CAS proposals — no queue or
+        registry mutation here, so it cannot race the owner thread's
+        polling.  Exactly one of cancel()/completion wins the request
+        FSM: on a mid-decode win the batcher retires the slot and frees
+        its KV pages on its next tick, on an intake-pop win the batcher
+        answers with the empty cancelled terminal, and a request whose
+        submission never landed is finalized by the owner thread's next
+        poll (see ``_poll``).  True iff this caller's proposal won
+        somewhere along the pipeline."""
+        sub_won = self._submit.cancel()
+        fsm_won = (self.req.fsm.cas(states.REQUEST_VALID,
+                                    states.REQUEST_CANCELLED)
+                   or self.req.fsm.cas(states.REQUEST_RECEIVED,
+                                       states.REQUEST_CANCELLED))
+        return sub_won or fsm_won
+
+
+class Session:
+    """A client's streaming connection to the engine (``connect``).
+
+    Owns the consumer side of the client's two SPSC rings: the *stream*
+    ring (packed per-token scalars, best-effort) and the *response* ring
+    (terminal Request objects, reliable).  ``pump`` demultiplexes both to
+    the live handles by req_id; terminals without a live handle (legacy
+    ``submit``, which detaches its handle) queue for ``next_response``.
+    One session per client, created eagerly by the engine — the
+    single-consumer invariant of the rings maps onto the one-client-one-
+    thread contract.
+    """
+
+    def __init__(self, engine: "ServeEngine", client_id: int):
+        self.engine = engine
+        self.client_id = client_id
+        # Terminals carry the full Request and route exactly by req_id;
+        # the 16-bit wire id only routes the lossy token stream, where a
+        # (vanishingly rare) mod-2^16 collision costs streamed tokens —
+        # recovered from tokens_out at the terminal — never correctness.
+        self._handles: Dict[int, RequestHandle] = {}    # full req_id
+        self._by_mask: Dict[int, RequestHandle] = {}    # req_id & _REQ_MASK
+        self._completed: deque = deque()
+
+    def submit_i(self, prompt: np.ndarray, max_tokens: int = 16,
+                 eos_id: int = -1) -> RequestHandle:
+        """Non-blocking submit: always returns a handle.  If the intake
+        ring is full the submission stays PENDING and is retried by the
+        handle's own polling (``test``/``wait``/``tokens``)."""
+        eng = self.engine
+        req = Request(next(eng._id), self.client_id,
+                      np.asarray(prompt, np.int32), max_tokens, eos_id,
+                      submit_t=time.monotonic())
+        req.fsm.transition(states.REQUEST_FREE, states.REQUEST_VALID)
+        ring = eng.intake.producer(self.client_id)
+        h = RequestHandle(self, req, transport.send_i(ring, req))
+        self._handles[req.req_id] = h
+        m = req.req_id & _REQ_MASK
+        if m in self._by_mask:
+            # Wire-id collision with a live handle: the 16-bit stream id
+            # cannot distinguish the two, so disable stream routing for
+            # both rather than risk misdelivering a token — each still
+            # receives every token at its terminal.
+            self._by_mask.pop(m)
+        else:
+            self._by_mask[m] = h
+        return h
+
+    def forget(self, req_id: int) -> Optional[RequestHandle]:
+        """Detach a handle: its terminal Request is routed to the
+        ``next_response`` queue instead (the legacy surface)."""
+        h = self._handles.pop(req_id, None)
+        if h is not None and self._by_mask.get(req_id & _REQ_MASK) is h:
+            self._by_mask.pop(req_id & _REQ_MASK, None)
+        return h
+
+    def pump(self) -> bool:
+        """Drain both rings once, non-blocking; route events to handles.
+        Returns True iff anything arrived."""
+        moved = False
+        for ev in self.engine.streams[self.client_id].drain():
+            moved = True
+            rid, pos, tok = unpack_token_event(ev)
+            h = self._by_mask.get(rid)
+            if h is not None:
+                h._tokens.append((pos, tok))
+        for req in self.engine.responses[self.client_id].drain():
+            moved = True
+            h = self.forget(req.req_id)
+            if h is not None:
+                h._final = req
+            else:
+                self._completed.append(req)
+        return moved
+
+    def next_response(self, timeout_s: float = 30.0
+                      ) -> Union[Request, TimeoutStatus]:
+        """Next terminal Request in completion order (whole-response
+        surface).  Falsy TimeoutStatus on timeout — never a bare raise."""
+        b = transport.Backoff()
+        deadline = time.monotonic() + timeout_s
+        while True:
+            if self._completed:
+                return self._completed.popleft()
+            if self.pump():
+                b.reset()
+                continue
+            if time.monotonic() > deadline:
+                return TimeoutStatus(waited_s=timeout_s)
+            b.wait(nbb.BUFFER_EMPTY)
 
 
 @dataclasses.dataclass
@@ -103,7 +380,8 @@ class ServeEngine:
     def __init__(self, model, params, *, max_batch: int = 4,
                  max_len: int = 128, n_clients: int = 2,
                  pool_pages: int = 64, page_size: int = 16,
-                 intake_depth: int = 32, scheduler: str = "slot"):
+                 intake_depth: int = 32, stream_depth: int = 256,
+                 scheduler: str = "slot"):
         if scheduler not in ("slot", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         self.model, self.params = model, params
@@ -112,6 +390,11 @@ class ServeEngine:
         cfg = model.cfg
         self.intake = MpscQueue(n_clients, capacity_per_producer=intake_depth)
         self.responses = [SpscQueue(intake_depth) for _ in range(n_clients)]
+        # Per-token scalars ride a separate SPSC ring so a slow streaming
+        # consumer can never wedge terminal delivery (tokens are lossy
+        # under backpressure, terminals are not — DESIGN.md §5).
+        self.streams = [SpscQueue(stream_depth) for _ in range(n_clients)]
+        self._sessions = [Session(self, c) for c in range(n_clients)]
         self.pool = PagedKVPool(
             pool_pages, page_size, n_layers=cfg.num_layers,
             kv_heads=max(cfg.num_kv_heads, 1), head_dim=cfg.head_dim_ or 1,
@@ -128,22 +411,32 @@ class ServeEngine:
         self._caches = None             # persistent [max_batch, ...] cache
         self._cur = np.zeros((max_batch,), np.int32)
         self._pos = np.zeros((max_batch,), np.int32)
-        self.stats = {"served": 0, "rejected": 0, "batches": 0,
-                      "decode_steps": 0, "admitted": 0, "prefills": 0,
-                      "slot_busy_steps": 0, "dropped_responses": 0}
+        self.stats = {"served": 0, "rejected": 0, "cancelled": 0,
+                      "batches": 0, "decode_steps": 0, "admitted": 0,
+                      "prefills": 0, "slot_busy_steps": 0,
+                      "dropped_responses": 0, "dropped_stream_events": 0}
 
-    # -- client API (any thread) ------------------------------------------------
+    # -- client API (one thread per client) -------------------------------------
+    def connect(self, client_id: int) -> Session:
+        """The client's streaming session.  One per client: the session
+        owns the consumer side of the client's response/stream rings, so
+        all receive-side calls for a client must come from one thread."""
+        return self._sessions[client_id]
+
     def submit(self, client_id: int, prompt: np.ndarray,
                max_tokens: int = 16, eos_id: int = -1) -> Optional[Request]:
-        """Non-blocking submit.  None => intake ring full (caller retries)."""
-        req = Request(next(self._id), client_id, np.asarray(prompt, np.int32),
-                      max_tokens, eos_id, submit_t=time.monotonic())
-        req.fsm.transition(states.REQUEST_FREE, states.REQUEST_VALID)
-        status = self.intake.producer(client_id).send(req)
-        if status != nbb.OK:
-            req.fsm.transition(states.REQUEST_VALID, states.REQUEST_CANCELLED)
+        """Non-blocking submit (legacy whole-response surface): a thin
+        wrapper over ``Session.submit_i`` that detaches the handle, so
+        the terminal Request is delivered through ``get_response``.
+        None => intake ring full (caller retries)."""
+        session = self._sessions[client_id]
+        h = session.submit_i(prompt, max_tokens, eos_id)
+        if not h.submitted:
+            h.cancel()                  # abandon the pending send ...
+            h.test()                    # ... and finalize it (owner thread)
             return None
-        return req
+        session.forget(h.req_id)
+        return h.req
 
     # -- shared helpers -----------------------------------------------------------
     def _respond(self, req: Request) -> None:
@@ -154,10 +447,35 @@ class ServeEngine:
                                        should_stop=self._stop.is_set):
             self.stats["dropped_responses"] += 1
 
+    def _stream_token(self, req: Request, pos: int, token: int) -> None:
+        """Best-effort per-token delivery: one packed scalar on the
+        client's stream ring.  A full ring (client not draining) drops
+        the event — pure backpressure; the position is still delivered
+        exactly once at completion via ``tokens_out`` (handles fill the
+        gaps)."""
+        ev = pack_token_event(req.req_id, pos, token)
+        if self.streams[req.client_id].send(ev) != nbb.OK:
+            self.stats["dropped_stream_events"] += 1
+
     def _reject(self, req: Request) -> None:
-        req.fsm.transition(states.REQUEST_VALID, states.REQUEST_CANCELLED)
+        # A concurrent client cancel() may have won the CAS already; the
+        # request still gets exactly one terminal response either way.
+        if req.fsm.cas(states.REQUEST_VALID, states.REQUEST_CANCELLED):
+            self.stats["rejected"] += 1
+        else:
+            self.stats["cancelled"] += 1
         req.done_t = time.monotonic()
-        self.stats["rejected"] += 1
+        if req.tokens_out is None:      # consistent terminal: empty, not None
+            req.tokens_out = np.zeros((0,), np.int32)
+        self._respond(req)
+
+    def _finish_cancelled(self, req: Request) -> None:
+        """Terminal delivery for a request the client cancelled before it
+        reached a decode slot."""
+        req.done_t = time.monotonic()
+        if req.tokens_out is None:
+            req.tokens_out = np.zeros((0,), np.int32)
+        self.stats["cancelled"] += 1
         self._respond(req)
 
     # ===========================================================================
@@ -189,6 +507,12 @@ class ServeEngine:
                     req.req_id, need, slot=slot.index) != POOL_OK:
                 self._reject(req)
                 continue
+            if not req.fsm.cas(states.REQUEST_VALID, states.REQUEST_RECEIVED):
+                # Client cancelled while queued: give the pages straight
+                # back and answer with the (empty) terminal.
+                self.pool.free(req.req_id)
+                self._finish_cancelled(req)
+                continue
             break
         if not any(s.request is not None for s in self.slots):
             self.stats["batches"] += 1      # new busy period begins
@@ -204,7 +528,6 @@ class ServeEngine:
                                             jnp.int32(slot.index))
         # ... -> ALLOCATED (KV materialized in this slot's cache rows).
         slot.fsm.transition(states.BUFFER_RESERVED, states.BUFFER_ALLOCATED)
-        req.fsm.transition(states.REQUEST_VALID, states.REQUEST_RECEIVED)
         slot.request = req
         slot.next_tok = int(np.asarray(tok)[0])
         slot.pos = padded
@@ -215,18 +538,9 @@ class ServeEngine:
         self.stats["admitted"] += 1
         return True
 
-    def _retire(self, slot: DecodeSlot) -> None:
-        """End-of-step release: slot + KV pages return to the pool the
-        moment a sequence finishes — the next tick can swap a waiting
-        request in while the other slots keep decoding."""
-        req = slot.request
-        req.tokens_out = slot.outs[:slot.generated].astype(np.int32)
-        req.done_t = time.monotonic()
-        req.fsm.transition(states.REQUEST_RECEIVED, states.REQUEST_COMPLETED)
-        self.pool.free(req.req_id)
-        self.stats["served"] += 1
-        self._respond(req)
-        # ALLOCATED -> RECEIVED (handed to consumer) -> FREE.
+    def _release_slot(self, slot: DecodeSlot) -> None:
+        """Figure-4 tail shared by retire and abort: the slot's occupancy
+        ends, the row is clean for the next admission."""
         slot.fsm.transition(states.BUFFER_ALLOCATED, states.BUFFER_RECEIVED)
         slot.fsm.transition(states.BUFFER_RECEIVED, states.BUFFER_FREE)
         slot.request = None
@@ -234,10 +548,48 @@ class ServeEngine:
         self._cur[slot.index] = 0
         self._pos[slot.index] = 0
 
+    def _retire(self, slot: DecodeSlot) -> None:
+        """End-of-step release: slot + KV pages return to the pool the
+        moment a sequence finishes — the next tick can swap a waiting
+        request in while the other slots keep decoding."""
+        req = slot.request
+        req.tokens_out = slot.outs[:slot.generated].astype(np.int32)
+        req.done_t = time.monotonic()
+        # A client cancel() can win the finish-line CAS; either way the
+        # pages are freed exactly once, here, by the batcher.
+        if req.fsm.cas(states.REQUEST_RECEIVED, states.REQUEST_COMPLETED):
+            self.stats["served"] += 1
+        else:
+            self.stats["cancelled"] += 1
+        self.pool.free(req.req_id)
+        self._respond(req)
+        self._release_slot(slot)
+
+    def _abort_slot(self, slot: DecodeSlot) -> None:
+        """Mid-decode cancellation: the client's CAS won, so retire the
+        slot NOW — its KV pages return to the pool and the terminal
+        (partial ``tokens_out``, state CANCELLED) is delivered."""
+        req = slot.request
+        req.tokens_out = slot.outs[:slot.generated].astype(np.int32)
+        req.done_t = time.monotonic()
+        self.pool.free(req.req_id)
+        self.stats["cancelled"] += 1
+        self._respond(req)
+        self._release_slot(slot)
+
     def tick(self) -> Tuple[int, bool]:
-        """One engine iteration: swap in, harvest+retire, one decode step
-        for the whole slot pool.  Returns (requests served, did work)."""
+        """One engine iteration: abort cancelled slots, swap in, harvest
+        + retire, one decode step for the whole slot pool.  Returns
+        (requests retired, did work)."""
         served, worked = 0, False
+        # 0) Client-cancelled sequences: free the slot and its pages
+        #    before admission, so a waiting request can take the slot
+        #    this very tick.
+        for slot in self.slots:
+            req = slot.request
+            if req is not None and req.fsm.state == states.REQUEST_CANCELLED:
+                self._abort_slot(slot)
+                worked = True
         # 1) Swap waiting requests into FREE slots (lock-free intake).
         for slot in self.slots:
             if slot.request is None:
@@ -245,13 +597,19 @@ class ServeEngine:
                     break
                 worked = True
         # 2) Harvest the token each active slot produced (prefill or the
-        #    previous decode step); retire finished sequences NOW.
+        #    previous decode step); stream it to the client; retire
+        #    finished sequences NOW.
         for slot in self.slots:
             req = slot.request
             if req is None:
                 continue
             slot.outs[slot.generated] = slot.next_tok
             slot.generated += 1
+            now = time.monotonic()
+            if slot.generated == 1:
+                req.first_token_t = now     # TTFT measurement point
+            req.token_ts.append(now)
+            self._stream_token(req, slot.generated - 1, int(slot.next_tok))
             worked = True
             if (slot.next_tok == req.eos_id
                     or slot.generated >= req.max_tokens
@@ -300,8 +658,11 @@ class ServeEngine:
                 if self.pool.try_admit(req.req_id, need) != POOL_OK:
                     self._reject(req)
                     continue
-                req.fsm.transition(states.REQUEST_VALID,
-                                   states.REQUEST_RECEIVED)
+                if not req.fsm.cas(states.REQUEST_VALID,
+                                   states.REQUEST_RECEIVED):
+                    self.pool.free(req.req_id)   # cancelled while queued
+                    self._finish_cancelled(req)
+                    continue
                 batch.append(req)
             elif batch or time.monotonic() > deadline:
                 break
@@ -340,9 +701,15 @@ class ServeEngine:
             got = outs[i][outs[i] >= 0].astype(np.int32)
             r.tokens_out = got
             r.done_t = time.monotonic()
-            r.fsm.transition(states.REQUEST_RECEIVED, states.REQUEST_COMPLETED)
+            # No streaming in the wave baseline: the first token reaches
+            # the client with the whole response (this is what the TTFT
+            # benchmark measures against).
+            r.first_token_t = r.done_t
+            if r.fsm.cas(states.REQUEST_RECEIVED, states.REQUEST_COMPLETED):
+                self.stats["served"] += 1
+            else:
+                self.stats["cancelled"] += 1
             self.pool.free(r.req_id)
-            self.stats["served"] += 1
             self._respond(r)
         self.stats["batches"] += 1
 
@@ -388,7 +755,9 @@ class ServeEngine:
 
     # -- client-side receive -----------------------------------------------------
     def get_response(self, client_id: int, timeout_s: float = 30.0
-                     ) -> Optional[Request]:
-        status, req = transport.recv_blocking(self.responses[client_id],
-                                              timeout_s=timeout_s)
-        return req if status == nbb.OK else None
+                     ) -> Union[Request, TimeoutStatus]:
+        """Next terminal Request for this client (legacy whole-response
+        surface): a wrapper over the session's pump.  On timeout returns
+        a falsy :class:`TimeoutStatus` rather than raising or returning a
+        bare None, so callers can branch on the typed status."""
+        return self._sessions[client_id].next_response(timeout_s)

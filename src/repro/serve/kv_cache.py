@@ -19,12 +19,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import threading
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.bitset import HostBitset
 

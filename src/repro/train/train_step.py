@@ -1,8 +1,7 @@
 """The jitted train/serve step functions and their sharding plumbing."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -10,7 +9,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.model import Model
 from repro.parallel import sharding as shlib
-from repro.train.optimizer import AdamW, OptConfig, zero_shard_spec
+from repro.train.optimizer import AdamW, zero_shard_spec
 
 
 def make_train_step(model: Model, opt: AdamW, microbatches: int = 1):
@@ -127,7 +126,6 @@ def cache_shardings(mesh, cache_abs, cfg) -> Any:
     def one(leaf):
         entries = [None] * leaf.ndim
         dims = list(leaf.shape)
-        used_model = False
         # Heuristic: dims equal to known batch size get batch axes; the
         # largest remaining dim divisible by model size gets 'model'.
         for i, d in enumerate(dims):
@@ -138,7 +136,6 @@ def cache_shardings(mesh, cache_abs, cfg) -> Any:
         for i in order:
             if entries[i] is None and dims[i] % msz == 0 and dims[i] >= msz:
                 entries[i] = "model"
-                used_model = True
                 break
         return NamedSharding(mesh, P(*entries))
 

@@ -23,8 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from pathlib import Path
-from typing import Any, Callable, Dict, Iterable, Optional
+from typing import Callable, Dict, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +31,7 @@ import numpy as np
 
 from repro.core import nbw
 from repro.train import checkpoint as ckpt_lib
-from repro.train.optimizer import AdamW, OptConfig
+from repro.train.optimizer import AdamW
 from repro.train.train_step import make_train_step
 
 

@@ -14,7 +14,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel.pipeline import pipeline_apply, pipeline_reference
-from repro.parallel.compression import (compressed_psum, init_error_state)
+from repro.parallel.compression import compressed_psum
 from repro.parallel.sharding import shard_map_compat
 
 

@@ -3,7 +3,6 @@ forward/train step + one prefill/decode step on CPU; asserts shapes and
 finiteness.  Full configs are exercised only via the dry-run."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config, list_archs

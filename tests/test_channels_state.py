@@ -2,7 +2,7 @@
 and Kim'07's pub/sub composition claim)."""
 import threading
 
-from repro.core import nbb
+from repro.core import nbb, states
 from repro.core.channels import ChannelType, Domain
 from repro.core.host_queue import BroadcastChannel
 
@@ -56,6 +56,65 @@ def test_state_channel_threaded_monotone_reads():
     tr.start(); tw.start()
     tw.join(); tr.join(timeout=30)
     assert not errors, errors[0]
+
+
+def test_state_channel_recv_i_handle():
+    """STATE receives through the non-blocking handle API: a recv_i on an
+    unpublished cell stays PENDING, polls to completion once the writer
+    commits, and re-polling a fresh handle re-reads state legally."""
+    dom = Domain()
+    a, b = dom.create_endpoint(0, 7), dom.create_endpoint(1, 7)
+    ch = dom.connect(ChannelType.STATE, a, b)
+    h = ch.recv_i()
+    assert not h.done and h.last_status == nbb.BUFFER_EMPTY
+    assert h.test() is False               # still nothing published
+    for i in range(5):
+        assert ch.send(i) == nbb.OK        # writer never blocks
+    assert h.test() is True                # poll completes on fresh value
+    assert h.completed and h.result == 4   # freshest, not FIFO head
+    assert h.test() is True                # terminal handles stay terminal
+    h2 = ch.recv_i()                       # state re-read via a new handle
+    assert h2.completed and h2.result == 4
+
+
+def test_state_channel_recv_i_rides_out_write_collision():
+    """A recv_i issued while the writer is mid-publish observes the
+    transient Table-1 status and completes via wait() once the write
+    commits (the NBW Timeliness property through the handle API)."""
+    dom = Domain()
+    ch = dom.connect(ChannelType.STATE, dom.create_endpoint(0, 8),
+                     dom.create_endpoint(1, 8))
+    cell = ch.queue
+    cell.write("v0")
+    v = cell._version
+    cell._version = v + 1                  # writer stuck mid-publish
+    h = ch.recv_i()
+    assert not h.done
+    assert h.last_status == nbb.BUFFER_EMPTY_BUT_PRODUCER_INSERTING
+
+    def commit():
+        cell._bufs[((v // 2) + 1) % cell._depth] = "v1"
+        cell._version = v + 2
+
+    timer = threading.Timer(0.02, commit)
+    timer.start()
+    assert h.wait(timeout_s=5) is True
+    timer.join()
+    assert h.result == "v1"
+
+
+def test_state_channel_recv_i_cancel():
+    """cancel() on a pending STATE recv wins the CAS; a later publish no
+    longer completes the handle (exactly one terminal state)."""
+    dom = Domain()
+    ch = dom.connect(ChannelType.STATE, dom.create_endpoint(0, 9),
+                     dom.create_endpoint(1, 9))
+    h = ch.recv_i()
+    assert h.cancel() is True
+    assert h.cancel() is False             # second cancel loses
+    ch.send("late")
+    assert h.test() is False and h.state == states.OP_CANCELLED
+    assert h.result is None
 
 
 def test_broadcast_every_consumer_gets_every_item():

@@ -19,7 +19,7 @@ except ImportError:
 
 from repro.core import bitset, nbb, nbw, states
 from repro.core.channels import ChannelType, Domain
-from repro.core.host_queue import LockedQueue, MpscQueue, SpscQueue
+from repro.core.host_queue import LockedQueue, MpscQueue
 from repro.core.nbb import HostNBB, SimNBB
 
 
@@ -352,7 +352,6 @@ class TestQueuesAndChannels:
     def test_mcapi_channel_roundtrip(self, lock_free):
         dom = Domain(lock_free=lock_free, queue_capacity=8)
         tx = dom.create_endpoint(node=1, port=0)
-        rx = dom.create_endpoint(node=2, port=0)
         for ctype, payload in [
             (ChannelType.MESSAGE, b"hello" * 5),
             (ChannelType.PACKET, bytes(24)),

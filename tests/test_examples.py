@@ -4,7 +4,6 @@ import subprocess
 import sys
 from pathlib import Path
 
-import pytest
 
 ROOT = Path(__file__).resolve().parents[1]
 
@@ -41,8 +40,8 @@ def test_train_e2e_short(tmp_path):
 def test_lockfree_pipeline_demo():
     out = _run("lockfree_pipeline_demo.py")
     rows = {}
-    for l in out.splitlines():
-        parts = l.split()
+    for line in out.splitlines():
+        parts = line.split()
         if (len(parts) >= 4 and parts[0] in ("barrier", "nbb", "nbb2")
                 and parts[1].replace(",", "").isdigit()):
             rows[parts[0]] = parts

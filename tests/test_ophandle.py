@@ -1,0 +1,227 @@
+"""Property tests for the OpHandle CAS FSM (PENDING -> COMPLETED|CANCELLED).
+
+The two properties the streaming session API leans on:
+
+  1. *Exactly one terminal state* — any interleaving of concurrent
+     ``cancel()`` calls and completion polls lands the handle in exactly
+     one of COMPLETED/CANCELLED, and the winner count is exactly one.
+  2. *Never double-free* — a resource released on the terminal
+     transition (the serving engine's KV slot) is released exactly once
+     no matter how the race resolves.
+
+Hypothesis drives randomized interleavings when available; the import is
+guarded (requirements-dev.txt), so the suite still collects and the
+deterministic/threaded cases still run without it.
+"""
+import threading
+
+import pytest
+
+try:  # optional dev dependency; property tests skip without it
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = settings = st = None
+
+from repro.core import nbb, states
+from repro.core.host_queue import SpscQueue
+from repro.core.transport import OpHandle
+
+
+def _spin_barrier(n):
+    return threading.Barrier(n, timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic single-thread sequences.
+# ---------------------------------------------------------------------------
+def test_terminal_states_are_absorbing():
+    c = states.op_cell()
+    assert c.cas(states.OP_PENDING, states.OP_COMPLETED) is True
+    assert c.cas(states.OP_PENDING, states.OP_CANCELLED) is False
+    assert c.state == states.OP_COMPLETED
+    with pytest.raises(states.IllegalTransition):
+        c.cas(states.OP_COMPLETED, states.OP_PENDING)
+
+
+def test_cancel_then_complete_never_completes():
+    q = SpscQueue(2)
+    h = OpHandle(q.try_recv, "t")
+    assert h.cancel()
+    q.send("x")
+    for _ in range(3):
+        assert h.test() is False
+    assert h.state == states.OP_CANCELLED and h.result is None
+
+
+# ---------------------------------------------------------------------------
+# Threaded races: exactly one terminal state, exactly one winner.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_cancellers", [1, 2, 4])
+def test_concurrent_cancel_vs_completion_single_winner(n_cancellers):
+    for _round in range(100):
+        q = SpscQueue(2)
+        q.send("payload")
+        h = OpHandle(q.try_recv, "race")
+        barrier = _spin_barrier(n_cancellers + 1)
+        cancel_wins = []
+
+        def canceller():
+            barrier.wait()
+            if h.cancel():
+                cancel_wins.append(1)
+
+        def poller():
+            barrier.wait()
+            h.test()
+
+        ts = ([threading.Thread(target=canceller)
+               for _ in range(n_cancellers)]
+              + [threading.Thread(target=poller)])
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(10)
+        # exactly one terminal state ...
+        assert h.state in (states.OP_COMPLETED, states.OP_CANCELLED)
+        # ... and exactly one winner across both sides of the race
+        assert len(cancel_wins) == (0 if h.completed else 1)
+        # the payload is never lost: completed -> result, cancelled with
+        # the pop already committed -> parked in late_result
+        if h.completed:
+            assert h.result == "payload"
+        elif h.attempted_ok:
+            assert h.late_result == "payload"
+        else:
+            assert q.drain() == ["payload"]
+
+
+def test_concurrent_cancel_vs_completion_never_double_frees():
+    """Model the serving engine's KV release: the resource owner frees on
+    whichever terminal transition *it* observes won, exactly once."""
+    for _round in range(100):
+        frees = []
+        q = SpscQueue(2)
+        q.send("tok")
+        h = OpHandle(q.try_recv, "kv")
+        barrier = _spin_barrier(2)
+
+        def server():
+            barrier.wait()
+            # the single resource owner: exactly one free per terminal
+            if h.test():
+                frees.append("completed")
+            elif h.cancelled:
+                frees.append("cancelled")
+            else:                       # still pending: poll to terminal
+                while not h.test() and not h.cancelled:
+                    pass
+                frees.append("completed" if h.completed else "cancelled")
+
+        def client():
+            barrier.wait()
+            h.cancel()
+
+        ts = [threading.Thread(target=server), threading.Thread(target=client)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(10)
+        assert len(frees) == 1, frees
+        assert frees[0] == ("completed" if h.completed else "cancelled")
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: randomized interleavings of poll/cancel micro-ops.
+# ---------------------------------------------------------------------------
+if st is not None:
+
+    @settings(max_examples=200, deadline=None)
+    @given(ops=st.lists(st.sampled_from(["poll", "cancel", "feed"]),
+                        min_size=1, max_size=24))
+    def test_any_op_sequence_lands_in_at_most_one_terminal(ops):
+        """Arbitrary sequential interleaving (the linearized form of any
+        concurrent schedule): at most one terminal state, transitions
+        never go terminal -> anything, results consistent with the FSM."""
+        q = SpscQueue(4)
+        h = OpHandle(q.try_recv, "prop")
+        seen_states = [h.state]
+        completions, cancel_wins = 0, 0
+        for op in ops:
+            if op == "feed":
+                q.send("v")
+            elif op == "poll":
+                if h.test():
+                    completions += 1
+            else:
+                if h.cancel():
+                    cancel_wins += 1
+            seen_states.append(h.state)
+        # terminal states are absorbing along the whole trajectory
+        for a, b in zip(seen_states, seen_states[1:]):
+            if a != states.OP_PENDING:
+                assert b == a
+        assert cancel_wins <= 1
+        if h.completed:
+            assert cancel_wins == 0 and h.result == "v"
+        if h.cancelled:
+            assert completions == 0 and cancel_wins == 1
+
+    @settings(max_examples=100, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**32 - 1),
+           n_cancellers=st.integers(min_value=1, max_value=3))
+    def test_threaded_race_property(seed, n_cancellers):
+        """Same exactly-one-terminal/never-double-free property under real
+        threads, with hypothesis choosing the contention shape."""
+        q = SpscQueue(2)
+        q.send(seed)
+        h = OpHandle(q.try_recv, "prop-race")
+        barrier = _spin_barrier(n_cancellers + 1)
+        frees = []
+
+        def canceller():
+            barrier.wait()
+            h.cancel()
+
+        def owner():
+            barrier.wait()
+            while not h.test() and not h.cancelled:
+                pass
+            frees.append(h.state)       # the one release point
+
+        ts = ([threading.Thread(target=canceller)
+               for _ in range(n_cancellers)]
+              + [threading.Thread(target=owner)])
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(10)
+        assert len(frees) == 1
+        assert frees[0] in (states.OP_COMPLETED, states.OP_CANCELLED)
+        assert frees[0] == h.state
+        if h.completed:
+            assert h.result == seed
+        elif not h.attempted_ok:
+            assert q.drain() == [seed]  # payload not consumed
+
+else:  # pragma: no cover - exercised only without hypothesis installed
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_any_op_sequence_lands_in_at_most_one_terminal():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# The OK statuses stay Table-1 compatible through the handle layer.
+# ---------------------------------------------------------------------------
+def test_last_status_reports_table1_codes():
+    q = SpscQueue(1)
+    h = OpHandle(lambda: (q.send("x"), None), "s")
+    assert h.test() is True
+    h2 = OpHandle(lambda: (q.send("y"), None), "s2")
+    assert h2.test() is False
+    assert h2.last_status == nbb.BUFFER_FULL
+    h3 = OpHandle(q.try_recv, "r")
+    assert h3.test() is True and h3.result == "x"
+    h4 = OpHandle(q.try_recv, "r2")
+    assert h4.test() is False
+    assert h4.last_status == nbb.BUFFER_EMPTY

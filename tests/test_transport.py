@@ -12,12 +12,13 @@ import threading
 
 import pytest
 
-from repro.core import nbb, nbw, transport
+from repro.core import nbb, nbw, states, transport
 from repro.core.channels import Channel, ChannelType, Domain
 from repro.core.host_queue import LockedQueue, MpscQueue, SpscQueue
-from repro.core.transport import (Backoff, CodecTransport, StateTransport,
-                                  Transport, drain, recv_blocking,
-                                  send_blocking)
+from repro.core.transport import (Backoff, CodecTransport, OpHandle,
+                                  StateTransport, Transport, drain,
+                                  recv_blocking, recv_i, send_blocking,
+                                  send_i)
 
 
 # ---------------------------------------------------------------------------
@@ -260,3 +261,154 @@ class TestBackoffAndCodec:
             q.send(i)
         assert drain(q, max_items=4) == [0, 1, 2, 3]
         assert drain(q) == [4, 5]
+
+
+# ---------------------------------------------------------------------------
+# Non-blocking operation handles (MCAPI *_i / test / wait / cancel).
+# ---------------------------------------------------------------------------
+class TestOpHandle:
+    def test_uncontended_send_completes_eagerly(self):
+        q = SpscQueue(4)
+        h = q.send_i("x")
+        assert h.completed and h.done and not h.cancelled
+        assert q.drain() == ["x"]
+
+    def test_send_pending_on_full_then_polls_through(self):
+        q = SpscQueue(1)
+        assert q.send_i("a").completed
+        h = q.send_i("b")
+        assert not h.done and h.last_status == nbb.BUFFER_FULL
+        assert h.test() is False            # still full
+        assert q.try_recv() == (nbb.OK, "a")
+        assert h.test() is True             # slot freed -> completes
+        assert q.drain() == ["b"]
+
+    def test_recv_pending_on_empty_then_wait(self):
+        q = SpscQueue(2)
+        h = q.recv_i()
+        assert not h.done and h.last_status == nbb.BUFFER_EMPTY
+        timer = threading.Timer(0.02, lambda: q.send(41))
+        timer.start()
+        assert h.wait(timeout_s=5) is True
+        timer.join()
+        assert h.result == 41
+
+    def test_wait_timeout_leaves_handle_pending(self):
+        """MCAPI wait with timeout: the op is NOT aborted — it can still
+        be polled to completion or cancelled afterwards."""
+        q = SpscQueue(2)
+        h = q.recv_i()
+        assert h.wait(timeout_s=0.02) is False
+        assert h.state == states.OP_PENDING
+        q.send("late")
+        assert h.wait(timeout_s=1) is True and h.result == "late"
+
+    def test_cancel_pending_recv(self):
+        q = SpscQueue(2)
+        h = q.recv_i()
+        assert h.cancel() is True
+        assert h.cancelled and h.cancel() is False
+        q.send("x")
+        assert h.test() is False            # cancelled handles never run
+        assert h.wait(timeout_s=0.05) is False
+        assert q.drain() == ["x"]           # the item was NOT consumed
+
+    def test_cancel_after_completion_loses(self):
+        q = SpscQueue(2)
+        q.send(1)
+        h = q.recv_i()                      # eager attempt completes
+        assert h.completed
+        assert h.cancel() is False          # exactly one terminal state
+        assert h.completed and h.result == 1
+
+    def test_exactly_one_terminal_state_under_race(self):
+        """N cancellers race one poller over many rounds: every handle
+        ends in exactly one terminal state, and an item consumed by a
+        cancelled handle is parked in late_result, never lost."""
+        for _ in range(200):
+            q = SpscQueue(2)
+            q.send("item")
+            # raw OpHandle (no eager attempt), so the race is live
+            h = OpHandle(q.try_recv, "race")
+            results = []
+
+            def poller():
+                results.append(("poll", h.test()))
+
+            def canceller():
+                results.append(("cancel", h.cancel()))
+
+            ts = [threading.Thread(target=f)
+                  for f in (poller, canceller, canceller)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join(10)
+            assert h.state in (states.OP_COMPLETED, states.OP_CANCELLED)
+            cancel_wins = sum(1 for k, r in results if k == "cancel" and r)
+            if h.completed:
+                assert cancel_wins == 0 and h.result == "item"
+            else:
+                assert cancel_wins == 1
+                # if the poll's pop landed anyway, the item is parked
+                if ("poll", False) in results and h.attempted_ok:
+                    assert h.late_result == "item"
+
+    def test_overlap_work_with_inflight_exchange(self):
+        """The point of *_i: the caller issues the op, does other work,
+        then collects — no retry loop at the call site."""
+        q = SpscQueue(1)
+        consumer_got = []
+
+        def consumer():
+            h = recv_i(q)
+            while not h.test():
+                pass                         # overlapped "work"
+            consumer_got.append(h.result)
+
+        t = threading.Thread(target=consumer)
+        t.start()
+        hs = send_i(q, "payload")
+        assert hs.wait(timeout_s=5)
+        t.join(10)
+        assert consumer_got == ["payload"]
+
+    def test_blocking_calls_are_handle_wrappers(self):
+        """send_blocking/recv_blocking are layered over handle + wait."""
+        import inspect
+        src = (inspect.getsource(transport.send_blocking)
+               + inspect.getsource(transport.recv_blocking))
+        assert "send_i" in src and "recv_i" in src and ".wait(" in src
+
+    def test_handles_on_every_transport(self):
+        dom = Domain()
+        scalar = dom.connect(ChannelType.SCALAR, dom.create_endpoint(0, 11),
+                             dom.create_endpoint(1, 11))
+        for t in (SpscQueue(4), LockedQueue(4), scalar.transport):
+            assert t.send_i(3).completed
+            h = t.recv_i()
+            assert h.completed and h.result == 3
+        mp = MpscQueue(2)
+        mp.producer(1).send("m")
+        assert mp.recv_i().result == "m"
+
+    def test_channel_typed_variants_enforce_format(self):
+        dom = Domain()
+        msg = dom.connect(ChannelType.MESSAGE, dom.create_endpoint(0, 12),
+                          dom.create_endpoint(1, 12))
+        pkt = dom.connect(ChannelType.PACKET, dom.create_endpoint(0, 13),
+                          dom.create_endpoint(1, 13))
+        sca = dom.connect(ChannelType.SCALAR, dom.create_endpoint(0, 14),
+                          dom.create_endpoint(1, 14))
+        assert msg.msg_send_i({"k": 1}).completed
+        assert msg.msg_recv_i().result == {"k": 1}
+        assert pkt.pkt_send_i(b"bytes").completed
+        assert pkt.pkt_recv_i().result == b"bytes"
+        assert sca.scalar_send_i(-7).completed
+        assert sca.scalar_recv_i().result == -7
+        with pytest.raises(ValueError):
+            msg.pkt_send_i(b"wrong format")
+        with pytest.raises(ValueError):
+            sca.msg_recv_i()
+        with pytest.raises(ValueError):
+            pkt.scalar_send_i(1)
