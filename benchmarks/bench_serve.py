@@ -1,17 +1,22 @@
-"""Serving-layer lock-convoy benchmark: wave vs iteration-level batching.
+"""Serving-layer lock-convoy benchmark: wave vs slot vs fused-slot.
 
 The paper shows that deleting the queue lock turns multicore contention
 into speedup; the serving-layer analogue of the lock is the *wave
 barrier* — every admitted request convoys behind the slowest sequence in
-its batch.  This benchmark drives both schedulers of
+its batch.  This benchmark drives all three schedulers of
 :class:`repro.serve.engine.ServeEngine` through an identical
 mixed-length workload (short prompts interleaved with long generations,
 the worst case for convoying) and records throughput, latency
 percentiles, decode-step counts, slot occupancy, and rejection stats.
 
-Expected result (the serving Figure-8): iteration-level slot swap >=
-wave throughput, with the short requests' completion latency improved
-the most — they no longer wait for long generations.
+Expected results: iteration-level slot swap >= wave throughput (the
+serving Figure-8), with the short requests' completion latency improved
+the most — they no longer wait for long generations.  And the
+packet-mode comparison (the serving Tables 5-7, DESIGN.md §6):
+``slot_fused`` moves the decode loop on device in K-step blocks, so
+``host_syncs_per_token`` and ``ring_ops_per_token`` drop from ≈1 to
+≈1/K and throughput rises again over ``slot`` — per-exchange host
+overhead, not FLOPs, was the cost.
 
 Streaming metrics (the handle/session API): time-to-first-token is the
 harvest time of token 0 (`Request.first_token_t`, when the token hits
@@ -118,6 +123,15 @@ def run_engine(model, params, scheduler: str, workload: List[Dict],
             "prefills": eng.stats["prefills"],
             "served": eng.stats["served"],
             "rejected": eng.stats["rejected"],
+            # Packet-mode exchange metrics (DESIGN.md §6): device->host
+            # syncs and client-facing ring operations per generated
+            # token — the scalar paths pay one sync per decode *step*
+            # (≈ 1/batch per token), the fused path one per K-step
+            # block (≈ 1/(K·batch)).
+            "host_syncs": eng.stats["host_syncs"],
+            "host_syncs_per_token": eng.stats["host_syncs"] / max(toks, 1),
+            "ring_ops_per_token": eng.stats["ring_ops"] / max(toks, 1),
+            "fused_blocks": eng.stats["fused_blocks"],
             "slot_occupancy": eng.occupancy(),
             "kv_pool": {"n_pages": eng.pool.n_pages,
                         "free_after_drain": eng.pool.free_pages()},
@@ -149,26 +163,28 @@ def main(argv=None):
     workload = make_workload(n_requests)
 
     results = {}
-    for sched in ("wave", "slot"):
+    for sched in ("wave", "slot", "slot_fused"):
         results[sched] = run_engine(model, params, sched, workload,
                                     max_batch=args.max_batch, max_len=96)
         r = results[sched]
-        itl = (f"{r['itl_ms_p50']:.0f}" if r["itl_ms_p50"] is not None
+        itl = (f"{r['itl_ms_p50']:.2f}" if r["itl_ms_p50"] is not None
                else "-")
-        print(f"{sched:5s}: {r['wall_s']:.2f}s  {r['tok_per_s']:.1f} tok/s  "
+        print(f"{sched:10s}: {r['wall_s']:.2f}s  {r['tok_per_s']:.1f} tok/s  "
               f"decode_steps={r['decode_steps']}  "
-              f"occupancy={r['slot_occupancy']:.2f}  "
+              f"syncs/tok={r['host_syncs_per_token']:.2f}  "
+              f"ring-ops/tok={r['ring_ops_per_token']:.2f}  "
               f"p50={r['lat_ms_p50']:.0f}ms  "
               f"short-p50={r['short_req_lat_ms_p50']:.0f}ms  "
               f"ttft-p50={r['ttft_ms_p50']:.0f}ms  itl-p50={itl}ms")
 
-    slot, wave = results["slot"], results["wave"]
+    slot, wave, fused = results["slot"], results["wave"], results["slot_fused"]
     out = {
         "workload": {"n_requests": n_requests, "max_batch": args.max_batch,
                      "mix": "alternating max_tokens 2 / 24, prompts 4 / 8",
                      "arch": args.arch},
         "wave": wave,
         "slot": slot,
+        "slot_fused": fused,
         "speedup": {
             "throughput_tok_per_s": (slot["tok_per_s"] / wave["tok_per_s"]),
             "decode_steps_saved": (wave["decode_steps"]
@@ -182,13 +198,31 @@ def main(argv=None):
             "ttft_vs_wave": wave["ttft_ms_p50"] / slot["ttft_ms_p50"],
             "ttft_better_than_whole_response": (slot["ttft_ms_p50"]
                                                 < slot["lat_ms_p50"]),
+            # Packet-mode decode wins (DESIGN.md §6): fused blocks vs
+            # the per-token slot path on the same workload.
+            "fused_vs_slot_tok_per_s": (fused["tok_per_s"]
+                                        / slot["tok_per_s"]),
+            "fused_host_syncs_per_token": fused["host_syncs_per_token"],
+            "fused_effective_k": (slot["host_syncs_per_token"]
+                                  / fused["host_syncs_per_token"]),
+            "fused_ttft_p50_vs_slot": (fused["ttft_ms_p50"]
+                                       / slot["ttft_ms_p50"]),
+            "fused_itl_p50_vs_slot": ((fused["itl_ms_p50"]
+                                       / slot["itl_ms_p50"])
+                                      if fused["itl_ms_p50"]
+                                      and slot["itl_ms_p50"] else None),
         },
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
-    print(f"\nslot/wave throughput: {out['speedup']['throughput_tok_per_s']:.2f}x"
-          f"  short-request latency: {out['speedup']['short_req_latency']:.2f}x"
-          f"  ttft vs whole-response: {out['speedup']['ttft_vs_whole_response']:.2f}x"
+    sp = out["speedup"]
+    print(f"\nslot/wave throughput: {sp['throughput_tok_per_s']:.2f}x"
+          f"  short-request latency: {sp['short_req_latency']:.2f}x"
+          f"  ttft vs whole-response: {sp['ttft_vs_whole_response']:.2f}x")
+    print(f"fused/slot throughput: {sp['fused_vs_slot_tok_per_s']:.2f}x"
+          f"  syncs/tok: {sp['fused_host_syncs_per_token']:.2f}"
+          f"  effective K: {sp['fused_effective_k']:.1f}"
+          f"  ttft ratio: {sp['fused_ttft_p50_vs_slot']:.2f}"
           f"  -> {args.out}")
     return out
 

@@ -2,11 +2,13 @@
 
 Demonstrates the handle-based session API end to end: three client
 threads connect sessions to the lock-free engine, submit through
-non-blocking ``submit_i`` handles, and consume tokens one by one via
-``RequestHandle.tokens()`` while the iteration-level slot batcher is
-still decoding other sequences (no wave barrier).  One request is
-cancelled mid-decode to show the CAS cancellation path freeing its KV
-pages without stopping the batcher.
+non-blocking ``submit_i`` handles, and consume tokens via
+``RequestHandle.tokens()`` while the packet-mode slot batcher (the
+default ``slot_fused`` scheduler) is still decoding other sequences —
+tokens are produced in fused K-step blocks on device and arrive on the
+client's stream ring as bursts, but the iterator surface is unchanged.
+One request is cancelled mid-decode to show the CAS cancellation path
+freeing its KV pages without stopping the batcher.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -30,7 +32,7 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = ServeEngine(model, params, max_batch=4, max_len=64,
-                      n_clients=3, pool_pages=256, scheduler="slot")
+                      n_clients=3, pool_pages=256)   # slot_fused default
     eng_thread = eng.start()
 
     def client(c: int) -> None:

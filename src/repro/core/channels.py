@@ -79,6 +79,23 @@ class Channel:
     def drain(self, max_items: Optional[int] = None) -> List[Any]:
         return self.transport.drain(max_items)
 
+    # -- packet-mode bursts (paper Tables 5-7): one exchange per block -----
+    def send_burst(self, vals) -> Tuple[int, int]:
+        return self.transport.send_burst(vals)
+
+    def drain_burst(self, max_n: Optional[int] = None) -> List[Any]:
+        return self.transport.drain_burst(max_n)
+
+    def pkt_send_burst(self, vals) -> Tuple[int, int]:
+        """Packet-channel burst — the batched exchange that MCAPI packet
+        mode exists for; format-enforced like the other ``pkt_*`` ops."""
+        self._require(ChannelType.PACKET, "pkt_send_burst")
+        return self.send_burst(vals)
+
+    def pkt_drain_burst(self, max_n: Optional[int] = None) -> List[Any]:
+        self._require(ChannelType.PACKET, "pkt_drain_burst")
+        return self.drain_burst(max_n)
+
     # -- non-blocking operation handles (MCAPI ``*_i`` variants) -----------
     # send_i/recv_i work on any channel type; the MCAPI-named variants
     # enforce the connection format they are defined for (calling a

@@ -81,6 +81,23 @@ class MpscQueue:
     def drain(self, max_items: Optional[int] = None) -> List[Any]:
         return transport.drain(self, max_items)
 
+    def drain_burst(self, max_n: Optional[int] = None) -> List[Any]:
+        """Packet-mode fan-in drain: one span reservation per producer
+        ring, visited in round-robin order from the cursor.  Per-producer
+        FIFO is preserved (each ring is drained as one contiguous span);
+        global order is round-robin by ring, as for scalar reads."""
+        out: List[Any] = []
+        n = len(self._rings)
+        for off in range(n):
+            take = None if max_n is None else max_n - len(out)
+            if take is not None and take <= 0:
+                break
+            out.extend(self._rings[(self._cursor + off) % n]
+                       .drain_burst(take))
+        if n:
+            self._cursor = (self._cursor + 1) % n
+        return out
+
     def get(self) -> Any:
         status, item = transport.recv_blocking(self)
         assert status == nbb.OK
@@ -155,6 +172,30 @@ class LockedQueue:
             if not self._dq:
                 return nbb.BUFFER_EMPTY, None
             return nbb.OK, self._dq.popleft()
+
+    def send_burst(self, vals) -> Tuple[int, int]:
+        """Burst insert under the one lock — the packet-mode baseline:
+        the copy is amortized but every burst still serializes behind
+        the same mutex the scalar ops take."""
+        if not len(vals):               # NBB parity: empty burst is OK
+            return nbb.OK, 0
+        with self._lock:
+            space = self._capacity - len(self._dq)
+            if space <= 0:
+                return nbb.BUFFER_FULL, 0
+            m = min(space, len(vals))
+            self._dq.extend(vals[i] for i in range(m))
+            if self._blocking and m:
+                self._not_empty.notify_all()
+            return (nbb.OK, m) if m == len(vals) else (nbb.BUFFER_FULL, m)
+
+    def drain_burst(self, max_n: Optional[int] = None) -> List[Any]:
+        with self._lock:
+            m = len(self._dq) if max_n is None else min(max_n, len(self._dq))
+            out = [self._dq.popleft() for _ in range(max(m, 0))]
+            if self._blocking and out:
+                self._not_full.notify_all()
+            return out
 
     # Transport protocol: the baseline speaks the same surface, so the A/B
     # benchmark swaps implementations without touching caller code.

@@ -115,6 +115,63 @@ class HostNBB:
         self._ac = ac + 2                       # acknowledge
         return OK, item
 
+    # -- packet-mode burst operations (paper Tables 5-7) ---------------------
+    # One counter announce/commit pair moves a whole contiguous span, so a
+    # K-item block costs one ring exchange instead of K scalar exchanges.
+    # Safety is unchanged: the span only becomes visible to the peer at the
+    # single commit store, and the peer cannot enter the span before it
+    # (mid-burst, the odd counter reads as the Table-1 transient status).
+    def send_burst(self, vals) -> Tuple[int, int]:
+        """Producer-side packet insert of ``vals`` (a sequence).
+
+        Reserves the longest prefix that fits and copies it with at most
+        two slice assignments (wrap-around).  Returns ``(status, n)``
+        where ``n`` items were enqueued: OK iff every item fit, else the
+        Table-1 full status with ``n`` possibly 0 (full-ring refusal) —
+        all-at-once visibility either way.
+        """
+        want = len(vals)
+        uc = self._uc
+        ac = self._ac  # single racy read — fine: AC only grows
+        space = self._n - ((uc // 2) - (ac // 2))
+        full = (BUFFER_FULL_BUT_CONSUMER_READING if ac & 1 else BUFFER_FULL)
+        if want == 0:
+            return OK, 0
+        if space <= 0:
+            return full, 0
+        m = min(space, want)
+        self._uc = uc + 1                       # announce burst-in-progress
+        start = (uc // 2) % self._n
+        head = min(m, self._n - start)
+        self._slots[start:start + head] = vals[:head]
+        if m > head:                            # wrap-around: second slice
+            self._slots[:m - head] = vals[head:m]
+        self._uc = uc + 2 * m                   # commit the whole span
+        return (OK, m) if m == want else (full, m)
+
+    def drain_burst(self, max_n: Optional[int] = None) -> list:
+        """Consumer-side packet read: everything available now (bounded
+        by ``max_n``), one announce/ack counter pair, at most two slice
+        copies.  Empty list when nothing is committed."""
+        ac = self._ac
+        uc = self._uc  # single racy read — UC only grows
+        avail = (uc // 2) - (ac // 2)
+        if avail <= 0:
+            return []
+        m = avail if max_n is None else min(avail, max_n)
+        if m <= 0:
+            return []
+        self._ac = ac + 1                       # announce read-in-progress
+        start = (ac // 2) % self._n
+        head = min(m, self._n - start)
+        out = self._slots[start:start + head]
+        self._slots[start:start + head] = [None] * head     # help GC
+        if m > head:
+            out += self._slots[:m - head]
+            self._slots[:m - head] = [None] * (m - head)
+        self._ac = ac + 2 * m                   # acknowledge the span
+        return out
+
     # -- Transport protocol (repro.core.transport) ---------------------------
     # insert/read already speak Table-1 statuses; the aliases make HostNBB a
     # structural Transport so channels/engines need no per-type dispatch.

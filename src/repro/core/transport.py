@@ -7,6 +7,8 @@ three operations:
   send(payload) -> status            non-blocking insert/publish
   try_recv()    -> (status, payload) non-blocking read
   drain(max_items) -> [payload, ..]  take everything available *now*
+  send_burst(vals) -> (status, n)    packet-mode insert of a block
+  drain_burst(max_n) -> [payload,..] packet-mode read of a block
 
 with the paper's Table-1 status codes (``repro.core.nbb``):
 
@@ -24,6 +26,13 @@ peer being scheduled at all, so the caller should yield — and, if the
 condition persists, back off exponentially rather than burn the core.
 :class:`Backoff` packages that policy; :func:`send_blocking` /
 :func:`recv_blocking` are the canonical retry loops built on it.
+
+The burst pair is the paper's *packet mode* (Tables 5-7): per-exchange
+overhead dominates when data moves one scalar at a time, so ring
+transports reserve a contiguous slot span with ONE counter
+announce/commit pair and move the whole block (``HostNBB.send_burst`` /
+``drain_burst``); non-ring transports fall back to the generic loops
+below, keeping the surface uniform.
 
 STATE (NBW) cells join the protocol through :class:`StateTransport`,
 which maps the NBW collision statuses onto Table 1 (a collision *is*
@@ -75,6 +84,10 @@ class Transport(Protocol):
     def send_i(self, payload: Any) -> "OpHandle": ...
 
     def recv_i(self) -> "OpHandle": ...
+
+    def send_burst(self, vals) -> Tuple[int, int]: ...
+
+    def drain_burst(self, max_n: Optional[int] = None) -> List[Any]: ...
 
 
 class Backoff:
@@ -265,6 +278,31 @@ def drain(t: Transport, max_items: Optional[int] = None) -> List[Any]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Packet-mode burst exchange (paper Tables 5-7).  Ring transports override
+# these with a true span reservation (one counter announce/commit pair and
+# two slice copies — ``HostNBB.send_burst``/``drain_burst``); the generic
+# forms below give every other transport the same surface by looping the
+# scalar ops, so callers can always hand over a block and let the transport
+# decide how much of the exchange is amortized.
+# ---------------------------------------------------------------------------
+def send_burst(t: Transport, vals) -> Tuple[int, int]:
+    """Generic burst send: the longest prefix of ``vals`` the transport
+    accepts.  Returns ``(status, n_sent)`` — OK iff everything landed,
+    else the first non-OK status observed."""
+    for i, v in enumerate(vals):
+        status = t.send(v)
+        if status != OK:
+            return status, i
+    return OK, len(vals)
+
+
+def drain_burst(t: Transport, max_n: Optional[int] = None) -> List[Any]:
+    """Generic burst drain: alias of :func:`drain` for transports with no
+    native span reservation."""
+    return drain(t, max_n)
+
+
 class StateTransport:
     """NBW state cell as a Transport (paper §7 state-message policy).
 
@@ -306,6 +344,17 @@ class StateTransport:
                 break
         return []
 
+    def send_burst(self, vals) -> Tuple[int, int]:
+        """State semantics: every value is published (writes never block);
+        only the last one survives as the freshest committed state."""
+        return send_burst(self, vals)
+
+    def drain_burst(self, max_n: Optional[int] = None) -> List[Any]:
+        """At most one item — the freshest committed value (see drain)."""
+        if max_n is not None and max_n <= 0:
+            return []
+        return self.drain(max_n)
+
     def send_i(self, payload: Any) -> OpHandle:
         return send_i(self, payload)
 
@@ -334,6 +383,18 @@ class CodecTransport:
 
     def drain(self, max_items: Optional[int] = None) -> List[Any]:
         return [self.decode(p) for p in self.inner.drain(max_items)]
+
+    def send_burst(self, vals) -> Tuple[int, int]:
+        """Encode the block once, hand it to the inner ring's native span
+        reservation — the packing rides the packet, not per-item calls.
+        The whole block is encoded before the ring reports how much fits,
+        so a caller retrying a rejected suffix re-encodes it; fine for
+        the fire-and-forget streaming path, something to know for a
+        tight retry loop under sustained backpressure."""
+        return self.inner.send_burst([self.encode(v) for v in vals])
+
+    def drain_burst(self, max_n: Optional[int] = None) -> List[Any]:
+        return [self.decode(p) for p in self.inner.drain_burst(max_n)]
 
     def send_i(self, payload: Any) -> OpHandle:
         return send_i(self, payload)

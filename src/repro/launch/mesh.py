@@ -1,4 +1,4 @@
-"""Production mesh construction (DESIGN.md §6).
+"""Production mesh construction (DESIGN.md §7).
 
 Defined as functions (never module-level constants) so importing this module
 never touches jax device state.

@@ -41,9 +41,13 @@ def main(argv=None) -> ServeEngine:
     ap.add_argument("--max-tokens", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
-    ap.add_argument("--scheduler", default="slot", choices=["slot", "wave"],
-                    help="slot = iteration-level continuous batching "
-                         "(default); wave = batch-level baseline")
+    ap.add_argument("--scheduler", default="slot_fused",
+                    choices=["slot_fused", "slot", "wave"],
+                    help="slot_fused = packet-mode fused K-step decode "
+                         "(default); slot = per-token iteration-level "
+                         "batching; wave = batch-level baseline")
+    ap.add_argument("--k-max", type=int, default=8,
+                    help="max fused decode steps per block (slot_fused)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -52,7 +56,7 @@ def main(argv=None) -> ServeEngine:
     eng = ServeEngine(model, params, max_batch=args.max_batch,
                       max_len=args.max_len, n_clients=args.clients,
                       pool_pages=max(256, args.clients * 16),
-                      scheduler=args.scheduler)
+                      scheduler=args.scheduler, k_max=args.k_max)
     eng_thread = eng.start()
 
     # One private SPSC result ring per client (client thread produces,
@@ -105,8 +109,10 @@ def main(argv=None) -> ServeEngine:
     print(f"latency ms: p50 {_pct(lat, 0.5):.0f} p95 {_pct(lat, 0.95):.0f}")
     print(f"ttft ms:    p50 {_pct(ttft, 0.5):.0f} p95 {_pct(ttft, 0.95):.0f}")
     print(f"engine stats: {eng.stats}")
-    if args.scheduler == "slot":
+    if args.scheduler != "wave":
+        syncs_tok = eng.stats["host_syncs"] / max(toks, 1)
         print(f"slot occupancy: {eng.occupancy():.2f}  "
+              f"host syncs/token: {syncs_tok:.2f}  "
               f"kv pool: {eng.pool.stats()}")
     return eng
 

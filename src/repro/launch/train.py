@@ -6,7 +6,7 @@ restart, straggler detection, NBW telemetry).
 
 On this CPU container run smoke-size archs (``--smoke``); on a TPU fleet
 drop ``--smoke`` and pass ``--mesh single|multi`` to get the production
-mesh of DESIGN.md §6 (the dry-run proves every full config compiles).
+mesh of DESIGN.md §7 (the dry-run proves every full config compiles).
 """
 from __future__ import annotations
 

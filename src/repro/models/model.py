@@ -6,6 +6,8 @@
   loss(params, batch) -> (scalar, metrics)          [train step body]
   prefill(params, batch, max_len) -> (cache, last_tok)
   decode_step(params, cache, tokens, pos) -> (next_tok, cache)
+  decode_loop(params, cache, cur, pos, rem, eos, k=, max_len=)
+      -> (token block [B, k], cache)        [fused packet-mode decode]
   init_cache(batch, max_len) -> abstract cache (zeros)
 
 Layer stacks are scanned (stacked params) so HLO size is O(1) in depth;
@@ -596,6 +598,56 @@ class Model:
         logits = full_logits(hidden, w_out)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_tok, new_caches
+
+    def decode_loop(self, params, caches, cur, pos, rem, eos, *,
+                    k: int, max_len: int):
+        """Fused ``k``-step greedy decode: one device call emits a whole
+        token *block* (packet-mode decode, DESIGN.md §6).
+
+        A ``jax.lax.scan`` over :meth:`decode_step`, with the per-token
+        retire conditions of the serving engine applied on device so the
+        host syncs once per block instead of once per token:
+
+          cur [B] int32 — last emitted token per row (prefill output or
+              the previous block's tail);
+          pos [B] int32 — tokens written to each row's cache so far;
+          rem [B] int32 — tokens the row may still emit (0 = idle row);
+          eos [B] int32 — per-row stop token (-1: never; greedy ids are
+              always >= 0 so -1 can never match).
+
+        Each step decodes the whole fixed-shape batch, then emits the
+        produced token for rows still *alive*; a row dies after emitting
+        its EOS, its last allowed token, or on hitting ``max_len``.
+        Finished/idle rows emit -1 and stop advancing ``pos`` — their
+        cache writes land on a stale slot that the next prefill
+        overwrites (the same masking discipline as idle slots in the
+        scalar path).  Emissions form a per-row *prefix* of the block,
+        so ``n_valid = (block >= 0).sum(axis=1)`` and the row's next
+        ``cur`` is ``block[i, n_valid[i]-1]``.
+
+        Returns ``(block [B, k] int32 with -1 padding, new caches)``.
+        :meth:`decode_step` is exactly the k=1 special case (one step,
+        no masking needed: the engine only feeds rows that owe >= 1
+        token).
+        """
+        eos = jnp.asarray(eos, jnp.int32)
+
+        def body(carry, _):
+            caches, cur, pos, rem, alive = carry
+            nxt, caches = self.decode_step(params, caches, cur[:, None], pos)
+            emit = jnp.where(alive, nxt, -1)
+            pos = jnp.where(alive, pos + 1, pos)
+            rem = jnp.where(alive, rem - 1, rem)
+            alive = (alive & (nxt != eos) & (rem > 0)
+                     & (pos + 1 < max_len))
+            cur = jnp.where(alive, nxt, cur)
+            return (caches, cur, pos, rem, alive), emit
+
+        carry = (caches, jnp.asarray(cur, jnp.int32),
+                 jnp.asarray(pos, jnp.int32), jnp.asarray(rem, jnp.int32),
+                 jnp.asarray(rem, jnp.int32) > 0)
+        (caches, *_), block = jax.lax.scan(body, carry, None, length=k)
+        return jnp.swapaxes(block, 0, 1), caches
 
     def prefill(self, params, tokens, max_len, extras=None):
         """Process a prompt, producing a filled cache + next token."""

@@ -29,7 +29,7 @@ def shard_map_compat(f, *, mesh, in_specs, out_specs, check: bool = False):
     return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                      check_rep=check)
 
-# Default rules for the production meshes of DESIGN.md §6.
+# Default rules for the production meshes of DESIGN.md §7.
 # "batch" spreads over pod+data; "model"-parallel dims over the model axis.
 DEFAULT_RULES: Dict[str, MeshAxes] = {
     "batch": ("pod", "data"),

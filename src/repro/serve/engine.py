@@ -16,30 +16,42 @@ lock):
   * KV memory   — admission claims pages from the lock-free bitset pool
                   (kv_cache.py); a full pool *rejects* (BUFFER_FULL
                   semantics) instead of blocking the batcher.
-  * decode      — ITERATION-LEVEL continuous batching (the default): a
-                  fixed pool of ``max_batch`` decode slots, each driven
-                  by the paper's Figure-4 buffer FSM
+  * decode      — ITERATION-LEVEL continuous batching: a fixed pool of
+                  ``max_batch`` decode slots, each driven by the paper's
+                  Figure-4 buffer FSM
                   (FREE->RESERVED->ALLOCATED->RECEIVED->FREE).  A slot is
                   RESERVED when its KV pages are claimed, ALLOCATED once
                   the prompt is prefilled into its rows of the persistent
                   batch cache, RECEIVED when the finished sequence is
-                  handed back, then FREE again — all at the granularity
-                  of a *single decode step*, so finished sequences
-                  release their slot and pages immediately and waiting
-                  requests swap in without stopping decode.  No global
-                  wave barrier: the serving-layer analogue of deleting
-                  the queue lock (DESIGN.md §4).
-                  ``scheduler="wave"`` keeps the old batch-level wave
-                  scheduler as the convoying baseline for A/B
-                  benchmarking (benchmarks/bench_serve.py).
+                  handed back, then FREE again — finished sequences
+                  release their slot and pages at block granularity and
+                  waiting requests swap in without stopping decode.  No
+                  global wave barrier: the serving-layer analogue of
+                  deleting the queue lock (DESIGN.md §4).
+  * packet mode — the default scheduler (``"slot_fused"``) runs decode
+                  in FUSED BLOCKS of K steps (``Model.decode_loop``, a
+                  lax.scan on device): one jitted dispatch, one
+                  device->host sync, one page-accounting call and one
+                  stream-ring burst per block instead of per token — the
+                  paper's scalar-vs-packet exchange amortization
+                  (Tables 5-7) applied to the decode loop (DESIGN.md
+                  §6).  K adapts per block: capped by the smallest
+                  remaining token budget (blocks end exactly when the
+                  first sequence finishes) and by ``k_free`` while a
+                  slot is FREE (bounded admission latency for arrivals).
+                  ``scheduler="slot"`` keeps the per-token scalar path
+                  and ``scheduler="wave"`` the batch-level wave
+                  scheduler as baselines for A/B benchmarking
+                  (benchmarks/bench_serve.py).
   * streaming   — the client surface is handle-based and per-token
                   (DESIGN.md §5): ``engine.connect(client_id)`` returns
                   the client's :class:`Session`;
                   ``session.submit_i(...)`` returns a
                   :class:`RequestHandle` whose ``tokens()`` iterator
                   yields ``(pos, token)`` pairs as the batcher harvests
-                  them — one packed int64 scalar per decode step on the
-                  client's SPSC stream ring — and whose ``cancel()``
+                  them — packed int64 scalars delivered in per-block
+                  BURSTS on the client's SPSC stream ring and drained in
+                  bursts per wakeup — and whose ``cancel()``
                   CASes the request FSM so the batcher retires the slot
                   and frees its KV pages *mid-decode*.  The legacy
                   blocking calls (``submit``/``get_response``) are thin
@@ -308,15 +320,19 @@ class Session:
 
     def pump(self) -> bool:
         """Drain both rings once, non-blocking; route events to handles.
-        Returns True iff anything arrived."""
+        Both drains are packet-mode bursts: one counter announce/commit
+        pair takes every queued event per wakeup, so a client that slept
+        through a whole token block pays one ring exchange to catch up,
+        not one round trip per token.  Returns True iff anything
+        arrived."""
         moved = False
-        for ev in self.engine.streams[self.client_id].drain():
+        for ev in self.engine.streams[self.client_id].drain_burst():
             moved = True
             rid, pos, tok = unpack_token_event(ev)
             h = self._by_mask.get(rid)
             if h is not None:
                 h._tokens.append((pos, tok))
-        for req in self.engine.responses[self.client_id].drain():
+        for req in self.engine.responses[self.client_id].drain_burst():
             moved = True
             h = self.forget(req.req_id)
             if h is not None:
@@ -381,12 +397,19 @@ class ServeEngine:
                  max_len: int = 128, n_clients: int = 2,
                  pool_pages: int = 64, page_size: int = 16,
                  intake_depth: int = 32, stream_depth: int = 256,
-                 scheduler: str = "slot"):
-        if scheduler not in ("slot", "wave"):
+                 scheduler: str = "slot_fused", k_max: int = 8,
+                 k_free: int = 2):
+        if scheduler not in ("slot_fused", "slot", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
+        if k_max < 1 or k_free < 1:
+            raise ValueError(f"need k_max >= 1 and k_free >= 1, "
+                             f"got {k_max}/{k_free}")
         self.model, self.params = model, params
         self.max_batch, self.max_len = max_batch, max_len
         self.scheduler = scheduler
+        # k_max=1 is the legitimate scalar-equivalent fused setting;
+        # clamp the under-capacity cap instead of rejecting it.
+        self.k_max, self.k_free = k_max, min(k_free, k_max)
         cfg = model.cfg
         self.intake = MpscQueue(n_clients, capacity_per_producer=intake_depth)
         self.responses = [SpscQueue(intake_depth) for _ in range(n_clients)]
@@ -402,6 +425,11 @@ class ServeEngine:
         self._id = itertools.count()
         self._stop = threading.Event()
         self._jit_decode = jax.jit(model.decode_step)
+        # Fused K-step decode traces, one per K actually used (K is a
+        # static scan length).  The caches are donated: each block's
+        # input cache buffers are reused for its output, so the
+        # persistent [max_batch, ...] cache is never copied per block.
+        self._jit_loops: Dict[int, object] = {}
         self._jit_write_slot = jax.jit(_write_slot_caches)
         # One jitted prefill; jax specializes it per (batch, prompt) shape.
         self._jit_prefill = jax.jit(
@@ -414,7 +442,8 @@ class ServeEngine:
         self.stats = {"served": 0, "rejected": 0, "cancelled": 0,
                       "batches": 0, "decode_steps": 0, "admitted": 0,
                       "prefills": 0, "slot_busy_steps": 0,
-                      "dropped_responses": 0, "dropped_stream_events": 0}
+                      "dropped_responses": 0, "dropped_stream_events": 0,
+                      "host_syncs": 0, "ring_ops": 0, "fused_blocks": 0}
 
     # -- client API (one thread per client) -------------------------------------
     def connect(self, client_id: int) -> Session:
@@ -443,19 +472,26 @@ class ServeEngine:
         # Response ring full => bounded backoff, never a spin-pin.  The
         # send can only fail during shutdown (should_stop); record the
         # drop so stats never silently overcount deliveries.
+        self.stats["ring_ops"] += 1
         if not transport.send_blocking(self.responses[req.client_id], req,
                                        should_stop=self._stop.is_set):
             self.stats["dropped_responses"] += 1
 
-    def _stream_token(self, req: Request, pos: int, token: int) -> None:
-        """Best-effort per-token delivery: one packed scalar on the
-        client's stream ring.  A full ring (client not draining) drops
-        the event — pure backpressure; the position is still delivered
-        exactly once at completion via ``tokens_out`` (handles fill the
-        gaps)."""
-        ev = pack_token_event(req.req_id, pos, token)
-        if self.streams[req.client_id].send(ev) != nbb.OK:
-            self.stats["dropped_stream_events"] += 1
+    def _stream_tokens(self, req: Request, first_pos: int, toks) -> None:
+        """Best-effort packet-mode delivery: the whole harvested block
+        for one request rides the client's stream ring as ONE burst (one
+        counter announce/commit pair) instead of ``len(toks)`` scalar
+        exchanges — the paper's packet-vs-scalar amortization applied to
+        the token plane.  Backpressure stays pure: whatever suffix does
+        not fit is dropped (counted), and every dropped position is
+        still delivered exactly once at completion via ``tokens_out``
+        (handles fill the gaps)."""
+        evs = [pack_token_event(req.req_id, first_pos + j, int(t))
+               for j, t in enumerate(toks)]
+        _, n = self.streams[req.client_id].send_burst(evs)
+        self.stats["ring_ops"] += 1
+        if n < len(evs):
+            self.stats["dropped_stream_events"] += len(evs) - n
 
     def _reject(self, req: Request) -> None:
         # A concurrent client cancel() may have won the CAS already; the
@@ -523,6 +559,7 @@ class ServeEngine:
         tok, one_cache = self._jit_prefill(self.params,
                                            jnp.asarray(prompt[None]))
         self.stats["prefills"] += 1
+        self.stats["host_syncs"] += 1   # the int(...) fetch below
         self._ensure_caches()
         self._caches = self._jit_write_slot(self._caches, one_cache,
                                             jnp.int32(slot.index))
@@ -578,24 +615,158 @@ class ServeEngine:
         self._release_slot(slot)
 
     def tick(self) -> Tuple[int, bool]:
-        """One engine iteration: abort cancelled slots, swap in, harvest
-        + retire, one decode step for the whole slot pool.  Returns
-        (requests retired, did work)."""
-        served, worked = 0, False
-        # 0) Client-cancelled sequences: free the slot and its pages
-        #    before admission, so a waiting request can take the slot
-        #    this very tick.
+        """One engine iteration (micro-batch): abort cancelled slots,
+        swap in, harvest + retire, then one *fused block* of K decode
+        steps (``slot_fused``) or a single decode step (``slot``, the
+        K=1 baseline).  Returns (requests retired, did work)."""
+        if self.scheduler == "slot_fused":
+            return self._tick_fused()
+        return self._tick_scalar()
+
+    def _finished(self, req: Request, tok: int, generated: int,
+                  pos: int) -> bool:
+        """THE per-token retire predicate, shared by every host-side
+        harvest (scalar tick, fused prefill harvest, fused block
+        harvest).  ``Model.decode_loop`` masks the same three conditions
+        on device — keep that pair in lockstep: the fused==scalar
+        token-sequence equivalence depends on it."""
+        return (tok == req.eos_id or generated >= req.max_tokens
+                or pos + 1 >= self.max_len)
+
+    # -- adaptive K (DESIGN.md §6) ---------------------------------------------
+    def _choose_k(self, active: List[DecodeSlot]) -> int:
+        """Block length for this tick.  K never exceeds the smallest
+        remaining *budget* over active slots, so a block ends exactly on
+        the step the first budget-bounded sequence finishes — for those,
+        retirement and the admission of queued work are never delayed
+        past the unfused schedule.  An unpredictable mid-block EOS can
+        still retire up to K-1 steps later than the scalar path (the row
+        is dead on device but its slot frees at the block boundary) —
+        bounded by ``k_max``.  When the pool is under capacity (a FREE
+        slot exists), K is further capped at ``k_free`` so a request
+        arriving mid-block waits at most ``k_free`` decode steps for
+        admission — the bounded-TTFT half of the rule."""
+        k = min(self.k_max,
+                min(s.request.max_tokens - s.generated for s in active))
+        if len(active) < self.max_batch:
+            k = min(k, self.k_free)
+        return max(1, k)
+
+    def _loop_fn(self, k: int):
+        fn = self._jit_loops.get(k)
+        if fn is None:
+            model, max_len = self.model, self.max_len
+            fn = jax.jit(
+                lambda p, c, cur, pos, rem, eos: model.decode_loop(
+                    p, c, cur, pos, rem, eos, k=k, max_len=max_len),
+                donate_argnums=(1,))
+            self._jit_loops[k] = fn
+        return fn
+
+    def _sweep_in(self) -> bool:
+        """Tick head shared by both slot schedulers: (0) abort
+        client-cancelled slots — their pages return before admission, so
+        a waiting request can take the slot this very tick (for the
+        fused scheduler this bounds cancel latency to one block); then
+        (1) swap waiting requests into FREE slots (lock-free intake).
+        Returns True iff anything moved."""
+        worked = False
         for slot in self.slots:
             req = slot.request
             if req is not None and req.fsm.state == states.REQUEST_CANCELLED:
                 self._abort_slot(slot)
                 worked = True
-        # 1) Swap waiting requests into FREE slots (lock-free intake).
         for slot in self.slots:
             if slot.request is None:
                 if not self._admit_into(slot):
                     break
                 worked = True
+        return worked
+
+    def _tick_fused(self) -> Tuple[int, bool]:
+        """One packet-mode iteration: swap-in and the exact-TTFT harvest
+        of prefill tokens stay per-request, then ONE fused device call
+        runs K decode steps for the whole slot pool and ONE device→host
+        sync harvests the [B, K] token block — per-token host cost
+        (jitted-call dispatch + sync + ring push) drops to ≈ 1/K."""
+        served = 0
+        worked = self._sweep_in()
+        # 2) Harvest each fresh admission's prefill token NOW, at K=1 —
+        #    TTFT stays exact (measured at real harvest time, never
+        #    interpolated); sequences done after one token retire here.
+        for slot in self.slots:
+            req = slot.request
+            if req is None or slot.generated > 0:
+                continue
+            tok = int(slot.next_tok)
+            slot.outs[0] = tok
+            slot.generated = 1
+            now = time.monotonic()
+            req.first_token_t = now
+            req.token_ts.append(now)
+            self._stream_tokens(req, 0, [tok])
+            worked = True
+            if self._finished(req, tok, slot.generated, slot.pos):
+                self._retire(slot)
+                served += 1
+        # 3) One fused block over the fixed-shape pool.
+        active = [s for s in self.slots if s.request is not None]
+        if not active:
+            return served, worked
+        k = self._choose_k(active)
+        rem_v = np.zeros((self.max_batch,), np.int32)
+        eos_v = np.full((self.max_batch,), -1, np.int32)
+        for s in active:
+            rem_v[s.index] = s.request.max_tokens - s.generated
+            eos_v[s.index] = s.request.eos_id
+        t0 = time.monotonic()
+        # K=1 rides the same donated decode_loop trace (a scan of one
+        # decode_step): uniform harvest below, and the persistent cache
+        # is updated in place for every block size, never copied.
+        blk_dev, self._caches = self._loop_fn(k)(
+            self.params, self._caches, jnp.asarray(self._cur),
+            jnp.asarray(self._pos), jnp.asarray(rem_v),
+            jnp.asarray(eos_v))
+        blk = np.asarray(blk_dev).astype(np.int64)
+        self.stats["host_syncs"] += 1   # the ONE sync for the whole block
+        t1 = time.monotonic()
+        # 4) Harvest the block: valid tokens form a per-row prefix
+        #    (device masking stops emission at EOS/budget/max_len).
+        for s in active:
+            req = s.request
+            row = blk[s.index]
+            n_valid = int((row >= 0).sum())
+            first_pos = s.generated
+            for j in range(n_valid):
+                s.outs[s.generated] = row[j]
+                s.generated += 1
+                # Per-token timestamps interpolated within the block:
+                # the block produced its tokens at a uniform device
+                # cadence between t0 and t1.
+                req.token_ts.append(t0 + (j + 1) * (t1 - t0) / k)
+            s.pos += n_valid
+            self._pos[s.index] = s.pos
+            self._cur[s.index] = int(row[n_valid - 1])
+            # ONE page-accounting call per block (note_tokens is
+            # idempotent growth inside the admission reservation).
+            self.pool.note_tokens(req.req_id, s.pos)
+            # ONE stream-ring burst per block per request.
+            self._stream_tokens(req, first_pos, row[:n_valid])
+            self.stats["slot_busy_steps"] += n_valid
+            last = int(row[n_valid - 1])
+            if n_valid < k or self._finished(req, last, s.generated, s.pos):
+                self._retire(s)
+                served += 1
+        self.stats["decode_steps"] += k
+        self.stats["fused_blocks"] += 1
+        return served, True
+
+    def _tick_scalar(self) -> Tuple[int, bool]:
+        """The unfused baseline (scheduler="slot"): one decode step and
+        one host sync per tick — the scalar-channel side of the paper's
+        packet-vs-scalar comparison, kept for A/B benchmarking."""
+        served = 0
+        worked = self._sweep_in()       # 0-1) aborts + admissions
         # 2) Harvest the token each active slot produced (prefill or the
         #    previous decode step); stream it to the client; retire
         #    finished sequences NOW.
@@ -609,11 +780,11 @@ class ServeEngine:
             if slot.generated == 1:
                 req.first_token_t = now     # TTFT measurement point
             req.token_ts.append(now)
-            self._stream_token(req, slot.generated - 1, int(slot.next_tok))
+            self._stream_tokens(req, slot.generated - 1,
+                                [int(slot.next_tok)])
             worked = True
-            if (slot.next_tok == req.eos_id
-                    or slot.generated >= req.max_tokens
-                    or slot.pos + 1 >= self.max_len):
+            if self._finished(req, int(slot.next_tok), slot.generated,
+                              slot.pos):
                 self._retire(slot)
                 served += 1
         # 3) One decode step over the fixed-shape batch; idle rows are
@@ -624,6 +795,7 @@ class ServeEngine:
                 self.params, self._caches, jnp.asarray(self._cur)[:, None],
                 jnp.asarray(self._pos))
             cur = np.asarray(cur)
+            self.stats["host_syncs"] += 1   # one sync per decode step
             for s in active:
                 s.next_tok = int(cur[s.index])
                 s.pos += 1
@@ -687,6 +859,7 @@ class ServeEngine:
         cur = tok
         for step in range(max_new):
             outs[~done, step] = np.asarray(cur)[~done]
+            self.stats["host_syncs"] += 1
             for i, r in enumerate(batch):
                 if not done[i] and (outs[i, step] == r.eos_id
                                     or step + 1 >= r.max_tokens):
@@ -717,9 +890,10 @@ class ServeEngine:
     def step(self) -> int:
         """Drain everything currently runnable; returns requests served.
 
-        Wave scheduler: one fused batch.  Slot scheduler: tick until the
-        slot pool and intake are both idle (each tick is one decode
-        step, so admissions interleave with decode)."""
+        Wave scheduler: one fused batch.  Slot schedulers: tick until
+        the slot pool and intake are both idle (each tick is one decode
+        block — a single step for "slot", K steps for "slot_fused" — so
+        admissions interleave with decode)."""
         if self.scheduler == "wave":
             batch = self._take_batch()
             if not batch:

@@ -413,6 +413,153 @@ def test_submit_i_pending_on_full_intake_then_recovers(engine_setup):
     assert eng.stats["served"] == 3
 
 
+# ---------------------------------------------------------------------------
+# packet-mode fused decode (scheduler="slot_fused", the default)
+# ---------------------------------------------------------------------------
+def _run_workload(model, params, scheduler, lengths, vocab, eos_id=-1):
+    """Serve a fixed workload; returns (engine, per-request sequences in
+    submission order)."""
+    eng = ServeEngine(model, params, max_batch=2, max_len=64, n_clients=1,
+                      pool_pages=256, scheduler=scheduler)
+    rids = []
+    for i, n in enumerate(lengths):
+        r = eng.submit(0, (np.arange(4) + i) % vocab, max_tokens=n,
+                       eos_id=eos_id)
+        assert r is not None
+        rids.append(r.req_id)
+    while eng.stats["served"] + eng.stats["rejected"] < len(lengths):
+        eng.step()
+    got = {}
+    for _ in range(len(lengths)):
+        r = eng.get_response(0, timeout_s=10)
+        assert r, "response timed out"
+        got[r.req_id] = list(map(int, r.tokens_out))
+    return eng, [got[r] for r in rids]
+
+
+def test_fused_equals_unfused_token_sequences(engine_setup):
+    """The acceptance property: for a fixed seed the fused block decoder
+    produces exactly the token sequences of the per-token slot path —
+    packet mode changes the exchange granularity, never the tokens."""
+    cfg, model, params = engine_setup
+    lengths = [12, 2, 7, 2, 1, 9, 24, 3]    # mixed, forces adaptive K
+    e_slot, s_slot = _run_workload(model, params, "slot", lengths,
+                                   cfg.vocab_size)
+    e_fused, s_fused = _run_workload(model, params, "slot_fused", lengths,
+                                     cfg.vocab_size)
+    assert s_fused == s_slot
+    assert [len(s) for s in s_slot] == lengths
+    assert e_fused.pool.free_pages() == e_fused.pool.n_pages
+    # and the point of the exercise: fewer host syncs for the same tokens
+    toks = sum(lengths)
+    assert e_fused.stats["host_syncs"] < e_slot.stats["host_syncs"]
+    assert e_fused.stats["fused_blocks"] > 0
+    assert e_slot.stats["fused_blocks"] == 0
+    # every non-prefill token is exactly one busy row-step of a block
+    assert e_fused.stats["slot_busy_steps"] == toks - len(lengths)
+
+
+def test_fused_eos_masking_matches_scalar(engine_setup):
+    """Per-row EOS masking inside the fused block: rows that emit their
+    stop token mid-block stop exactly where the scalar path stops."""
+    cfg, model, params = engine_setup
+    # discover the greedy token stream, then use its value as EOS
+    _, seqs = _run_workload(model, params, "slot_fused", [6], cfg.vocab_size)
+    eos = seqs[0][0]
+    e_slot, s_slot = _run_workload(model, params, "slot", [6, 17],
+                                   cfg.vocab_size, eos_id=eos)
+    e_fused, s_fused = _run_workload(model, params, "slot_fused", [6, 17],
+                                     cfg.vocab_size, eos_id=eos)
+    assert s_fused == s_slot
+    assert all(s[-1] == eos or len(s) in (6, 17) for s in s_fused)
+
+
+def test_fused_block_amortizes_syncs_and_ring_ops(engine_setup):
+    """A saturated pool of long generations decodes in K>=3 blocks: host
+    syncs and stream-ring operations per token drop well below 1."""
+    cfg, model, params = engine_setup
+    eng, seqs = _run_workload(model, params, "slot_fused", [24, 24, 24, 24],
+                              cfg.vocab_size)
+    toks = sum(len(s) for s in seqs)
+    assert toks == 96
+    assert eng.stats["host_syncs"] / toks <= 0.35, eng.stats
+    assert eng.stats["ring_ops"] / toks < 1.0, eng.stats
+    assert eng.occupancy() > 0.5
+
+
+def test_fused_streaming_delivers_every_position_once(engine_setup):
+    """tokens() over the burst-filled stream ring: every output position
+    exactly once, in order, with per-token timestamps covering the whole
+    generation (interpolated inside blocks, exact at the first token)."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=2, max_len=64, n_clients=1,
+                      pool_pages=256)          # slot_fused is the default
+    assert eng.scheduler == "slot_fused"
+    eng_thread = eng.start()
+    try:
+        h = eng.connect(0).submit_i(np.arange(5) % cfg.vocab_size,
+                                    max_tokens=11)
+        got = list(h.tokens(timeout_s=60))
+        final = h.response
+        assert [p for p, _ in got] == list(range(11))
+        assert [t for _, t in got] == list(final.tokens_out)
+        assert final.first_token_t >= final.submit_t
+        assert len(final.token_ts) == 11
+        assert final.token_ts == sorted(final.token_ts)   # monotone ITL
+    finally:
+        eng.stop()
+        eng_thread.join(timeout=10)
+    assert eng.pool.free_pages() == eng.pool.n_pages
+
+
+def test_fused_cancel_mid_decode_bounded_by_one_block(engine_setup):
+    """cancel() against the fused batcher: the abort sweep runs at the
+    next block boundary, KV pages return to baseline, and the batcher
+    keeps serving."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=2, max_len=64, n_clients=1,
+                      pool_pages=256, scheduler="slot_fused")
+    baseline = eng.pool.stats()
+    session = eng.connect(0)
+    h = session.submit_i(np.arange(4) % cfg.vocab_size, max_tokens=40)
+    for _ in range(3):
+        eng.tick()                      # request is mid-generation
+    assert eng.slots[0].request is not None
+    assert h.cancel() is True
+    eng.tick()                          # abort sweep: next block boundary
+    assert eng.pool.stats() == baseline, "KV pages not returned"
+    r = h.wait(timeout_s=10)
+    assert r.fsm.state == states.REQUEST_CANCELLED
+    assert 0 < len(r.tokens_out) < 40
+    h2 = session.submit_i(np.arange(4) % cfg.vocab_size, max_tokens=3)
+    eng.step()
+    r2 = h2.wait(timeout_s=10)
+    assert r2 and r2.fsm.state == states.REQUEST_COMPLETED
+    assert eng.pool.stats() == baseline
+
+
+def test_note_tokens_per_block_matches_per_step():
+    """Regression for block-batched page accounting: one idempotent
+    note_tokens(seq, final) call per block leaves the pool in exactly
+    the state the per-step path produced."""
+    def drive(step_sizes):
+        pool = PagedKVPool(16, page_size=4, n_layers=2, kv_heads=2,
+                           head_dim=8)
+        assert pool.try_admit(7, 20, slot=3) == OK
+        n = 4                                   # prompt tokens
+        pool.note_tokens(7, n)
+        for k in step_sizes:
+            n += k
+            pool.note_tokens(7, n)              # one call per "block"
+        return pool.stats(), n
+
+    per_step, n1 = drive([1] * 12)              # the scalar path
+    per_block, n2 = drive([2, 8, 1, 1])         # fused blocks, same total
+    assert n1 == n2 == 16
+    assert per_step == per_block
+    assert per_step["per_slot"][3] == (5, 16, 20)   # pages, tokens, reserved
+
+
 def test_engine_threaded_clients(engine_setup):
     """Concurrent client threads + engine thread: all requests complete."""
     cfg, model, params = engine_setup

@@ -6,11 +6,19 @@ Covers the satellite requirements of the transport refactor:
   * the STATE channel recv path (collision -> retry -> freshest value)
     exercised through the shared Transport protocol,
   * the Table-1 Backoff discipline (spin on transient, yield/sleep on
-    stable) and the generic drain/blocking helpers.
+    stable) and the generic drain/blocking helpers,
+  * packet-mode burst operations (send_burst/drain_burst): FIFO across
+    wrap-around, partial drain, full-ring refusal, and SPSC
+    producer/consumer races (hypothesis-guarded).
 """
 import threading
 
 import pytest
+
+try:  # optional dev dependency; property tests skip without it
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = settings = st = None
 
 from repro.core import nbb, nbw, states, transport
 from repro.core.channels import Channel, ChannelType, Domain
@@ -261,6 +269,138 @@ class TestBackoffAndCodec:
             q.send(i)
         assert drain(q, max_items=4) == [0, 1, 2, 3]
         assert drain(q) == [4, 5]
+
+
+# ---------------------------------------------------------------------------
+# Packet-mode bursts (paper Tables 5-7): one counter pair per block.
+# ---------------------------------------------------------------------------
+class TestBurstOps:
+    def test_fifo_across_wraparound(self):
+        """Alternating bursts through an 8-slot ring force every span
+        shape (head-only, wrapped two-slice); FIFO must hold across all
+        of them."""
+        q = SpscQueue(8)
+        sent, got = [], []
+        i = 0
+        for size in (5, 6, 7, 3, 8, 1, 6, 4):
+            vals = list(range(i, i + size))
+            status, n = q.send_burst(vals)
+            assert n == size and status == nbb.OK
+            sent += vals
+            i += size
+            got += q.drain_burst()
+        assert got == sent
+        assert q.drain_burst() == [] and len(q) == 0
+
+    def test_partial_drain_leaves_remainder_in_order(self):
+        q = SpscQueue(8)
+        assert q.send_burst(list(range(6))) == (nbb.OK, 6)
+        assert q.drain_burst(2) == [0, 1]
+        assert q.drain_burst(3) == [2, 3, 4]
+        # remainder still FIFO-composable with scalar ops
+        assert q.try_recv() == (nbb.OK, 5)
+        assert q.drain_burst(4) == []
+
+    def test_full_ring_send_burst_refusal(self):
+        q = SpscQueue(2)
+        assert q.send_burst(["a", "b"]) == (nbb.OK, 2)
+        status, n = q.send_burst(["c"])
+        assert status == nbb.BUFFER_FULL and n == 0
+        assert q.drain_burst() == ["a", "b"]    # nothing leaked in
+
+    def test_partial_send_accepts_longest_prefix(self):
+        q = SpscQueue(4)
+        q.send("x")
+        status, n = q.send_burst(list(range(5)))
+        assert status == nbb.BUFFER_FULL and n == 3
+        assert q.drain_burst() == ["x", 0, 1, 2]
+
+    def test_burst_interops_with_scalar_ops(self):
+        """Bursts and scalar insert/read share the same counters, so they
+        interleave freely on one ring."""
+        q = SpscQueue(8)
+        q.send(0)
+        assert q.send_burst([1, 2, 3]) == (nbb.OK, 3)
+        assert q.try_recv() == (nbb.OK, 0)
+        q.send(4)
+        assert q.drain_burst() == [1, 2, 3, 4]
+
+    def test_mpsc_drain_burst_preserves_per_producer_fifo(self):
+        q = MpscQueue(3, capacity_per_producer=8)
+        for pid in range(3):
+            assert q.producer(pid).send_burst(
+                [(pid, i) for i in range(4)]) == (nbb.OK, 4)
+        got = q.drain_burst()
+        assert len(got) == 12
+        for pid in range(3):
+            assert [i for (p, i) in got if p == pid] == list(range(4))
+
+    def test_locked_queue_burst_parity(self):
+        """The mutex baseline speaks the same burst surface (A/B swaps
+        stay caller-transparent)."""
+        q = LockedQueue(4)
+        assert q.send_burst([1, 2, 3, 4, 5]) == (nbb.BUFFER_FULL, 4)
+        assert q.drain_burst(2) == [1, 2]
+        assert q.send_burst([5]) == (nbb.OK, 1)
+        assert q.drain_burst() == [3, 4, 5]
+
+    def test_codec_burst_encodes_whole_block(self):
+        t = CodecTransport(SpscQueue(8), encode=lambda x: x * 2,
+                           decode=lambda x: x // 2)
+        assert t.send_burst([1, 2, 3]) == (nbb.OK, 3)
+        assert t.inner.drain_burst(1) == [2]    # encoded on the wire
+        assert t.drain_burst() == [2, 3]
+
+    def test_state_burst_keeps_freshest_only(self):
+        t = StateTransport(nbw.HostNBW(depth=4))
+        assert t.send_burst([1, 2, 3]) == (nbb.OK, 3)   # writes never block
+        assert t.drain_burst() == [3]           # state semantics, not FIFO
+
+    def _race(self, burst_sizes, capacity=8):
+        """One producer sending bursts of the given sizes races one
+        consumer draining bursts: every item arrives exactly once, in
+        FIFO order, through spans that wrap the ring arbitrarily."""
+        q = SpscQueue(capacity)
+        total = sum(burst_sizes)
+        got = []
+
+        def producer():
+            i = 0
+            for size in burst_sizes:
+                vals = list(range(i, i + size))
+                while vals:
+                    _, n = q.send_burst(vals)
+                    vals = vals[n:]
+                i += size
+
+        def consumer():
+            while len(got) < total:
+                got.extend(q.drain_burst())
+
+        # daemon: a lost-item bug must fail the assert, not hang the
+        # interpreter at exit behind a spinning consumer thread
+        ts = [threading.Thread(target=producer, daemon=True),
+              threading.Thread(target=consumer, daemon=True)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=60)
+        assert not any(t.is_alive() for t in ts), "burst race livelocked"
+        assert got == list(range(total)), "burst FIFO violated under race"
+
+    def test_spsc_burst_race_deterministic(self):
+        self._race([3, 8, 1, 5, 12, 2, 7, 9, 4, 6] * 20)
+
+    if st is not None:
+
+        @settings(max_examples=25, deadline=None)
+        @given(sizes=st.lists(st.integers(min_value=1, max_value=12),
+                              min_size=1, max_size=40),
+               capacity=st.integers(min_value=1, max_value=9))
+        def test_spsc_burst_race_property(self, sizes, capacity):
+            """Hypothesis chooses the burst shapes and ring capacity; the
+            exactly-once FIFO property must hold for all of them."""
+            self._race(sizes, capacity=capacity)
 
 
 # ---------------------------------------------------------------------------
