@@ -17,7 +17,10 @@ The RECEIVED -> CANCELLED edge extends the paper's Figure 3 for
 client-initiated cancellation of an *in-service* request (the streaming
 session API): the client's ``cancel()`` races the server's completion
 with a single CAS, so exactly one of COMPLETED/CANCELLED wins and the
-server releases resources exactly once either way.
+server releases resources exactly once either way.  The buffer FSM
+likewise gains a RESERVED -> FREE edge so a chunked admission whose
+prompt is still streaming into the cache can be aborted without ever
+reaching ALLOCATED (DESIGN.md §9).
 
 A third, two-state FSM backs the MCAPI-style non-blocking operation
 handles (``repro.core.transport.OpHandle``):
@@ -62,7 +65,12 @@ BUFFER_RECEIVED = "BUFFER_RECEIVED"
 
 BUFFER_TRANSITIONS: Dict[str, FrozenSet[str]] = {
     BUFFER_FREE: frozenset({BUFFER_RESERVED}),
-    BUFFER_RESERVED: frozenset({BUFFER_ALLOCATED}),
+    # RESERVED -> FREE extends Figure 4 for chunked admission (DESIGN.md
+    # §9): a slot whose prompt is still streaming in (pages claimed,
+    # cache rows only partially materialized) can be aborted — client
+    # cancel or mid-stream pool exhaustion — without ever having been
+    # ALLOCATED.  The release is a single CAS, same as every other edge.
+    BUFFER_RESERVED: frozenset({BUFFER_ALLOCATED, BUFFER_FREE}),
     BUFFER_ALLOCATED: frozenset({BUFFER_RECEIVED}),
     BUFFER_RECEIVED: frozenset({BUFFER_FREE}),
 }

@@ -41,22 +41,35 @@ def main(argv=None) -> ServeEngine:
     ap.add_argument("--max-tokens", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
-    ap.add_argument("--scheduler", default="slot_fused",
-                    choices=["slot_fused", "slot", "wave"],
-                    help="slot_fused = packet-mode fused K-step decode "
-                         "(default); slot = per-token iteration-level "
-                         "batching; wave = batch-level baseline")
+    ap.add_argument("--scheduler", default=None,
+                    choices=["slot_chunked", "slot_fused", "slot", "wave"],
+                    help="slot_chunked = chunked zero-copy admission fused "
+                         "into the decode micro-batch (default; falls back "
+                         "to slot_fused for recurrent-state archs); "
+                         "slot_fused = packet-mode fused K-step decode; "
+                         "slot = per-token iteration-level batching; "
+                         "wave = batch-level baseline")
     ap.add_argument("--k-max", type=int, default=8,
-                    help="max fused decode steps per block (slot_fused)")
+                    help="max fused decode steps per block (slot_fused/"
+                         "slot_chunked)")
+    ap.add_argument("--chunk-tokens", type=int, default=16,
+                    help="prompt tokens streamed per dispatch "
+                         "(slot_chunked)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    scheduler = args.scheduler
+    if scheduler is None:
+        # Chunked admission needs position-indexed caches; recurrent
+        # archs (mamba/rwkv) keep the fused monolithic-prefill default.
+        scheduler = "slot_chunked" if model.chunkable else "slot_fused"
     eng = ServeEngine(model, params, max_batch=args.max_batch,
                       max_len=args.max_len, n_clients=args.clients,
                       pool_pages=max(256, args.clients * 16),
-                      scheduler=args.scheduler, k_max=args.k_max)
+                      scheduler=scheduler, k_max=args.k_max,
+                      chunk_tokens=min(args.chunk_tokens, args.max_len))
     eng_thread = eng.start()
 
     # One private SPSC result ring per client (client thread produces,
@@ -109,10 +122,13 @@ def main(argv=None) -> ServeEngine:
     print(f"latency ms: p50 {_pct(lat, 0.5):.0f} p95 {_pct(lat, 0.95):.0f}")
     print(f"ttft ms:    p50 {_pct(ttft, 0.5):.0f} p95 {_pct(ttft, 0.95):.0f}")
     print(f"engine stats: {eng.stats}")
-    if args.scheduler != "wave":
+    if scheduler != "wave":
         syncs_tok = eng.stats["host_syncs"] / max(toks, 1)
         print(f"slot occupancy: {eng.occupancy():.2f}  "
               f"host syncs/token: {syncs_tok:.2f}  "
+              f"admission stall steps: "
+              f"{eng.stats['admission_stall_steps']}  "
+              f"oversize rejects: {len(eng.oversize_log)}  "
               f"kv pool: {eng.pool.stats()}")
     return eng
 

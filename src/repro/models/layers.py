@@ -137,6 +137,7 @@ def attention(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array,
               cache: Optional[Dict[str, jax.Array]] = None,
               cache_pos: Optional[jax.Array] = None,
               kv_source: Optional[jax.Array] = None,
+              write_mask: Optional[jax.Array] = None,
               ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """GQA attention.
 
@@ -147,6 +148,11 @@ def attention(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array,
         vector (per-row positions, the slot-swap continuous batcher:
         each decode slot advances independently, DESIGN.md §4).
     kv_source: cross-attention source [B, S, D] (no causal mask, no rope).
+    write_mask: [B, T] bool, per-token cache-write validity (chunked
+        zero-copy admission, DESIGN.md §9): positions where the mask is
+        False keep the cache's old value, so a fixed-shape prompt chunk
+        can be written in place into only the admitting rows of the
+        batch cache.  Requires a [B]-vector cache_pos.
 
     Returns (out [B,T,D], updated cache or None).
     """
@@ -174,6 +180,9 @@ def attention(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array,
         size = cache["k"].shape[1]
         cp = jnp.asarray(cache_pos)
         if cp.ndim == 0:
+            if write_mask is not None:
+                raise ValueError("write_mask requires a [B] vector "
+                                 "cache_pos (per-row chunked admission)")
             # Lockstep decode: write k/v of the T new tokens into the
             # same ring slots for every batch row.
             slots = (cp + jnp.arange(T)) % size             # [T]
@@ -198,11 +207,29 @@ def attention(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array,
             # their own row's validity, never by neighbours'.
             slots = (cp[:, None] + jnp.arange(T)) % size    # [B, T]
             b_idx = jnp.arange(B)[:, None]
-            k_full = cache["k"].at[b_idx, slots].set(
-                k.astype(cache["k"].dtype))
-            v_full = cache["v"].at[b_idx, slots].set(
-                v.astype(cache["v"].dtype))
-            total = cp[:, None] + T                         # [B, 1]
+            k_new = k.astype(cache["k"].dtype)
+            v_new = v.astype(cache["v"].dtype)
+            if write_mask is not None:
+                # Chunked admission: only slots actually carrying prompt
+                # tokens are written; every other (row, slot) keeps its
+                # old value via a gather+where on the T touched slots —
+                # the full cache is never copied.
+                wm = write_mask[:, :, None, None]
+                k_new = jnp.where(wm, k_new, cache["k"][b_idx, slots])
+                v_new = jnp.where(wm, v_new, cache["v"][b_idx, slots])
+            k_full = cache["k"].at[b_idx, slots].set(k_new)
+            v_full = cache["v"].at[b_idx, slots].set(v_new)
+            if write_mask is not None:
+                # The row's true extent is its VALID token count, not T:
+                # counting a final chunk's padded tail would (a) mark
+                # never-written slots valid and (b) push ``total`` past
+                # the ring size, bumping the wrap epoch and mislabeling
+                # the oldest slots' positions — causally masking real
+                # prompt KV from the chunk's own queries.
+                total = cp[:, None] + jnp.sum(write_mask, axis=1,
+                                              keepdims=True)  # [B, 1]
+            else:
+                total = cp[:, None] + T                     # [B, 1]
             slot_ids = jnp.arange(size)[None, :]            # [1, S]
             valid = slot_ids < jnp.minimum(total, size)     # [B, S]
             wraps = (total - 1) // size

@@ -8,6 +8,10 @@
   decode_step(params, cache, tokens, pos) -> (next_tok, cache)
   decode_loop(params, cache, cur, pos, rem, eos, k=, max_len=)
       -> (token block [B, k], cache)        [fused packet-mode decode]
+  prefill_chunk_into(params, cache, chunk, start, n_valid)
+      -> (next_tok [B], cache)     [chunked zero-copy in-place admission]
+  chunked_block(...same..., cur, pos, rem, eos, k=, max_len=)
+      -> (next_tok, block, cache)  [one dispatch: chunk + K decode steps]
   init_cache(batch, max_len) -> abstract cache (zeros)
 
 Layer stacks are scanned (stacked params) so HLO size is O(1) in depth;
@@ -81,7 +85,7 @@ def attn_block_params(make: ParamBuilder, cfg: ModelConfig,
 
 def attn_block(p, cfg: ModelConfig, x, positions, window=0, cache=None,
                cache_pos=None, kv_source=None, causal=True,
-               static_cache=False):
+               static_cache=False, write_mask=None):
     h = rms_norm(p["ln1"], x, cfg.norm_eps)
     if static_cache:
         # Cross-attention against precomputed (cached) K/V.
@@ -89,7 +93,7 @@ def attn_block(p, cfg: ModelConfig, x, positions, window=0, cache=None,
     else:
         a, new_cache = attention(p["attn"], cfg, h, positions, window=window,
                                  cache=cache, cache_pos=cache_pos,
-                                 kv_source=kv_source)
+                                 kv_source=kv_source, write_mask=write_mask)
     x = x + a
     if "mlp" in p:
         x = x + mlp(p["mlp"], rms_norm(p["ln2"], x, cfg.norm_eps))
@@ -134,10 +138,11 @@ def moe_block_params(make: ParamBuilder, cfg: ModelConfig):
     return p
 
 
-def moe_layer(p, cfg: ModelConfig, x, positions, cache=None, cache_pos=None):
+def moe_layer(p, cfg: ModelConfig, x, positions, cache=None, cache_pos=None,
+              write_mask=None):
     h = rms_norm(p["ln1"], x, cfg.norm_eps)
     a, new_cache = attention(p["attn"], cfg, h, positions, cache=cache,
-                             cache_pos=cache_pos)
+                             cache_pos=cache_pos, write_mask=write_mask)
     x = x + a
     h = rms_norm(p["ln2"], x, cfg.norm_eps)
     y, aux = moe_block(p["moe"], cfg, h)
@@ -303,7 +308,7 @@ class Model:
         return jax.checkpoint(fn)
 
     def _run_stack(self, params, x, positions, caches, cache_pos, train,
-                   extras=None):
+                   extras=None, write_mask=None):
         """Returns (hidden, new_caches, aux_loss)."""
         cfg = self.cfg
         fam = self._structure()
@@ -315,7 +320,8 @@ class Model:
                 lp, c = inp
                 out, nc = attn_block(lp, cfg, x, positions,
                                      window=cfg.sliding_window,
-                                     cache=c, cache_pos=cache_pos)
+                                     cache=c, cache_pos=cache_pos,
+                                     write_mask=write_mask)
                 return out, nc
             f = body if decode else self._remat(body)
             x, new_caches = jax.lax.scan(f, x, (params["layers"], caches))
@@ -325,7 +331,8 @@ class Model:
                 x, aux = carry
                 lp, c = inp
                 out, nc, a = moe_layer(lp, cfg, x, positions, cache=c,
-                                       cache_pos=cache_pos)
+                                       cache_pos=cache_pos,
+                                       write_mask=write_mask)
                 return (out, aux + a), nc
             f = body if decode else self._remat(body)
             (x, aux), new_caches = jax.lax.scan(
@@ -349,11 +356,13 @@ class Model:
                     ci = jax.tree.map(lambda a: a[i], c["local"]) if decode else None
                     x, nc = attn_block(lp_i, cfg, x, positions,
                                        window=cfg.sliding_window,
-                                       cache=ci, cache_pos=cache_pos)
+                                       cache=ci, cache_pos=cache_pos,
+                                       write_mask=write_mask)
                     new_local.append(nc)
                 x, ngc = attn_block(sp["global"], cfg, x, positions, window=0,
                                     cache=c["global"] if decode else None,
-                                    cache_pos=cache_pos)
+                                    cache_pos=cache_pos,
+                                    write_mask=write_mask)
                 if decode:
                     stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_local)
                     return x, {"local": stacked, "global": ngc}
@@ -368,7 +377,8 @@ class Model:
                     lp, c = inp
                     return attn_block(lp, cfg, x, positions,
                                       window=cfg.sliding_window,
-                                      cache=c, cache_pos=cache_pos)
+                                      cache=c, cache_pos=cache_pos,
+                                      write_mask=write_mask)
                 ft = tailbody if decode else self._remat(tailbody)
                 x, new_tail = jax.lax.scan(
                     ft, x, (params["tail"], caches["tail"] if decode else None))
@@ -423,7 +433,8 @@ class Model:
                         ci = (jax.tree.map(lambda a: a[si], c["selfs"])
                               if decode else None)
                         x, nc = attn_block(lp_i, cfg, x, positions,
-                                           cache=ci, cache_pos=cache_pos)
+                                           cache=ci, cache_pos=cache_pos,
+                                           write_mask=write_mask)
                         new_selfs.append(nc)
                         si += 1
                 if decode:
@@ -442,7 +453,8 @@ class Model:
                 lp, c = inp
                 x, nc = attn_block(lp["self"], cfg, x, positions,
                                    cache=c["self"] if decode else None,
-                                   cache_pos=cache_pos)
+                                   cache_pos=cache_pos,
+                                   write_mask=write_mask)
                 if decode:
                     x, _ = attn_block(lp["cross"], cfg, x, positions,
                                       cache=c["cross"], static_cache=True)
@@ -478,7 +490,7 @@ class Model:
 
     # -- public API ----------------------------------------------------------
     def forward(self, params, tokens, extras=None, caches=None,
-                cache_pos=None, start_pos=None):
+                cache_pos=None, start_pos=None, write_mask=None):
         cfg = self.cfg
         B, T = tokens.shape
         tokens = shard(tokens, "batch", "seq")
@@ -491,7 +503,8 @@ class Model:
             extras = self._encode(params, extras)
         x, new_caches, aux = self._run_stack(params, x, positions, caches,
                                              cache_pos, train=caches is None,
-                                             extras=extras)
+                                             extras=extras,
+                                             write_mask=write_mask)
         x = rms_norm(params["final_norm"], x, cfg.norm_eps)
         return x, new_caches, aux
 
@@ -643,11 +656,98 @@ class Model:
             cur = jnp.where(alive, nxt, cur)
             return (caches, cur, pos, rem, alive), emit
 
-        carry = (caches, jnp.asarray(cur, jnp.int32),
-                 jnp.asarray(pos, jnp.int32), jnp.asarray(rem, jnp.int32),
-                 jnp.asarray(rem, jnp.int32) > 0)
+        cur = jnp.asarray(cur, jnp.int32)
+        pos = jnp.asarray(pos, jnp.int32)
+        rem = jnp.asarray(rem, jnp.int32)
+        # Initial liveness mirrors the per-step mask: a row only decodes
+        # if its budget, stop token, and cache extent all allow another
+        # emission.  Rows the host feeds always pass (it retires
+        # finished rows first); rows joining straight from an on-device
+        # prefill (chunked admission, whose first token the host has not
+        # seen yet) rely on the eos/max_len terms.
+        alive = (rem > 0) & (cur != eos) & (pos + 1 < max_len)
+        carry = (caches, cur, pos, rem, alive)
         (caches, *_), block = jax.lax.scan(body, carry, None, length=k)
         return jnp.swapaxes(block, 0, 1), caches
+
+    @property
+    def chunkable(self) -> bool:
+        """Chunked zero-copy prefill needs every cache write to be
+        position-indexed (attention rings / static cross caches);
+        recurrent state (mamba, rwkv) folds every token into one carry
+        and cannot be write-masked per position."""
+        return self.cfg.ssm is None and self.cfg.rwkv is None
+
+    def prefill_chunk_into(self, params, caches, chunk, start, n_valid):
+        """Chunked zero-copy prefill (DESIGN.md §9): attend one
+        fixed-shape prompt chunk per admitting row and write its KV
+        *directly into the (donated) batch-cache rows* — no B=1 side
+        cache and no copy-into-slot dispatch afterwards.
+
+          chunk   [B, C] int32 — per-row prompt slices (content beyond
+                  ``n_valid[b]`` is ignored);
+          start   [B] int32 — absolute position of each row's chunk;
+          n_valid [B] int32 — real prompt tokens this chunk carries for
+                  the row; 0 marks a row that is not admitting (nothing
+                  is written to its cache and its output is garbage).
+
+        The fixed [B, C] shape is what bounds the trace count: every
+        prompt length streams through the same compiled function, so
+        the per-bucket prefill retrace zoo collapses to one trace per
+        (C, K) pair.  Returns ``(next_tok [B] int32 — the greedy token
+        after each row's last valid position, new caches)``; the engine
+        uses ``next_tok`` only for rows whose final chunk this was.
+        """
+        cfg = self.cfg
+        if not self.chunkable:
+            raise NotImplementedError(
+                f"{cfg.name}: chunked prefill needs position-indexed "
+                "caches; recurrent state cannot be write-masked")
+        B, C = chunk.shape
+        start = jnp.asarray(start, jnp.int32)
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        write_mask = jnp.arange(C)[None, :] < n_valid[:, None]      # [B, C]
+        hidden, new_caches, _ = self.forward(
+            params, chunk, caches=caches, cache_pos=start,
+            start_pos=start[:, None], write_mask=write_mask)
+        w_out = unembed_matrix(params["embed"], cfg).astype(cfg.compute_dtype)
+        last = jnp.clip(n_valid - 1, 0, C - 1)                      # [B]
+        last_h = hidden[jnp.arange(B), last][:, None]               # [B,1,D]
+        logits = full_logits(last_h, w_out)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_caches
+
+    def chunked_block(self, params, caches, chunk, start, n_valid,
+                      cur, pos, rem, eos, *, k: int, max_len: int):
+        """One Sarathi-style fused admission+decode dispatch: stream a
+        prompt chunk into the admitting rows of the batch cache
+        (:meth:`prefill_chunk_into`), then advance the decoding rows
+        ``k`` steps (:meth:`decode_loop`) — one device call and one
+        host fetch cover both the chunk's next-token vector and the
+        [B, k] token block, so admission costs zero extra host syncs.
+
+        A row whose FINAL chunk rides this dispatch (``n_valid > 0`` and
+        ``rem > 0`` — the engine sets ``rem`` to the row's generation
+        budget minus the prefill token) JOINS the decode block in the
+        same dispatch: its ``cur`` is replaced by the chunk's on-device
+        next token, so admission costs zero turnaround dispatches —
+        prefill output feeds decode without ever visiting the host.
+
+        Ordering matters: the chunk lands first, so the idle-row writes
+        of the decode scan (rows with ``rem == 0`` emit -1 but still
+        touch their ``pos`` slot) fall on the *post-chunk* extent of a
+        streaming row — a slot the next chunk or the row's own first
+        decode step overwrites before it is ever attended.
+        """
+        next_tok, caches = self.prefill_chunk_into(params, caches, chunk,
+                                                   start, n_valid)
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        rem = jnp.asarray(rem, jnp.int32)
+        joins = (n_valid > 0) & (rem > 0)
+        cur = jnp.where(joins, next_tok, jnp.asarray(cur, jnp.int32))
+        block, caches = self.decode_loop(params, caches, cur, pos, rem, eos,
+                                         k=k, max_len=max_len)
+        return next_tok, block, caches
 
     def prefill(self, params, tokens, max_len, extras=None):
         """Process a prompt, producing a filled cache + next token."""

@@ -43,6 +43,23 @@ lock):
                   and ``scheduler="wave"`` the batch-level wave
                   scheduler as baselines for A/B benchmarking
                   (benchmarks/bench_serve.py).
+  * admission   — ``scheduler="slot_chunked"`` extends the fused path
+                  with CHUNKED ZERO-COPY ADMISSION (DESIGN.md §9): a
+                  RESERVED slot streams its prompt ``chunk_tokens`` at a
+                  time *in the same jitted dispatch* that advances the
+                  active rows K decode steps
+                  (``Model.chunked_block``, Sarathi-style
+                  piggybacking).  Each chunk's KV is written in place
+                  into the slot's rows of the persistent batch cache —
+                  no B=1 side cache, no copy-into-slot dispatch, no
+                  per-admission host sync (the prefill's first token
+                  rides the regular block fetch) — and KV pages are
+                  claimed chunk by chunk as positions materialize.  A
+                  long prompt therefore never stalls active decode:
+                  every one of its dispatches also carries a decode
+                  block (``stats["admission_stall_steps"]`` stays 0,
+                  where the monolithic prefill stalls every active slot
+                  once per admission).
   * streaming   — the client surface is handle-based and per-token
                   (DESIGN.md §5): ``engine.connect(client_id)`` returns
                   the client's :class:`Session`;
@@ -105,6 +122,23 @@ class TimeoutStatus:
         return False
 
 
+@dataclasses.dataclass(frozen=True)
+class OversizeStatus:
+    """Typed fail-fast rejection from :meth:`Session.submit_i`: the
+    request's KV footprint (bucketed prompt + generation budget) can
+    never fit the engine's cache, so it is refused at the session layer
+    without an intake round-trip — the batcher never sees it.  Falsy,
+    like :class:`TimeoutStatus`."""
+
+    prompt_len: int
+    padded_len: int
+    max_tokens: int
+    max_len: int
+
+    def __bool__(self) -> bool:
+        return False
+
+
 # ---------------------------------------------------------------------------
 # Streaming wire format: one packed int64 scalar per harvested token on the
 # client's SPSC stream ring (the MCAPI scalar channel format), terminal
@@ -137,12 +171,16 @@ class RequestHandle:
     """
 
     def __init__(self, session: "Session", req: Request,
-                 submit: transport.OpHandle):
+                 submit: Optional[transport.OpHandle]):
         self.req = req
         self._session = session
-        self._submit = submit
+        self._submit = submit              # None: rejected at submit time
         self._tokens: deque = deque()      # (pos, token) routed by pump
         self._final: Optional[Request] = None
+        # Typed fail-fast status (OversizeStatus) when the session layer
+        # refused the request without an intake round-trip; None for
+        # every request that actually reached the engine.
+        self.status: Optional[OversizeStatus] = None
 
     @property
     def req_id(self) -> int:
@@ -151,7 +189,7 @@ class RequestHandle:
     @property
     def submitted(self) -> bool:
         """The request has entered the engine's intake ring."""
-        return self._submit.completed
+        return self._submit is not None and self._submit.completed
 
     @property
     def done(self) -> bool:
@@ -168,6 +206,8 @@ class RequestHandle:
         request is finalized locally: the owner thread set (or didn't
         set) ``attempted_ok`` itself, so unlike ``cancel()`` it can
         trust the flag without racing an in-flight attempt."""
+        if self._submit is None:            # fail-fast reject: terminal
+            return False                    # was produced at submit time
         moved = False
         if not self._submit.done:
             moved = self._submit.test() or moved
@@ -254,7 +294,7 @@ class RequestHandle:
         submission never landed is finalized by the owner thread's next
         poll (see ``_poll``).  True iff this caller's proposal won
         somewhere along the pipeline."""
-        sub_won = self._submit.cancel()
+        sub_won = self._submit.cancel() if self._submit is not None else False
         fsm_won = (self.req.fsm.cas(states.REQUEST_VALID,
                                     states.REQUEST_CANCELLED)
                    or self.req.fsm.cas(states.REQUEST_RECEIVED,
@@ -290,12 +330,34 @@ class Session:
                  eos_id: int = -1) -> RequestHandle:
         """Non-blocking submit: always returns a handle.  If the intake
         ring is full the submission stays PENDING and is retried by the
-        handle's own polling (``test``/``wait``/``tokens``)."""
+        handle's own polling (``test``/``wait``/``tokens``).
+
+        A request whose KV footprint can never fit the engine's cache
+        (``padded prompt + max_tokens > max_len``) fails FAST, here at
+        the session layer: the returned handle is already terminal
+        (state CANCELLED, empty output) and carries a typed
+        :class:`OversizeStatus` in ``handle.status`` — no intake
+        round-trip, no batcher work, no pages touched."""
         eng = self.engine
         req = Request(next(eng._id), self.client_id,
                       np.asarray(prompt, np.int32), max_tokens, eos_id,
                       submit_t=time.monotonic())
         req.fsm.transition(states.REQUEST_FREE, states.REQUEST_VALID)
+        padded = eng._footprint(len(req.prompt))
+        if padded + max_tokens > eng.max_len:
+            req.fsm.transition(states.REQUEST_VALID,
+                               states.REQUEST_CANCELLED)
+            req.done_t = time.monotonic()
+            req.tokens_out = np.zeros((0,), np.int32)
+            # Append-only log (the lock-free counter idiom): client
+            # threads record fail-fast rejects without a read-modify-
+            # write race against the batcher's stats dict.
+            eng.oversize_log.append(req.req_id)
+            h = RequestHandle(self, req, None)
+            h._final = req
+            h.status = OversizeStatus(len(req.prompt), padded, max_tokens,
+                                      eng.max_len)
+            return h
         ring = eng.intake.producer(self.client_id)
         h = RequestHandle(self, req, transport.send_i(ring, req))
         self._handles[req.req_id] = h
@@ -373,6 +435,8 @@ class DecodeSlot:
     pos: int = 0                        # tokens written to this row's cache
     generated: int = 0
     outs: Optional[np.ndarray] = None
+    prompt: Optional[np.ndarray] = None  # bucketed prompt being prefilled
+    prefill_pos: int = 0                # prompt tokens streamed so far
 
 
 def _write_slot_caches(full, one, slot):
@@ -398,15 +462,24 @@ class ServeEngine:
                  pool_pages: int = 64, page_size: int = 16,
                  intake_depth: int = 32, stream_depth: int = 256,
                  scheduler: str = "slot_fused", k_max: int = 8,
-                 k_free: int = 2):
-        if scheduler not in ("slot_fused", "slot", "wave"):
+                 k_free: int = 2, chunk_tokens: int = 16):
+        if scheduler not in ("slot_chunked", "slot_fused", "slot", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if k_max < 1 or k_free < 1:
             raise ValueError(f"need k_max >= 1 and k_free >= 1, "
                              f"got {k_max}/{k_free}")
+        if not 1 <= chunk_tokens <= max_len:
+            raise ValueError(f"need 1 <= chunk_tokens <= max_len, "
+                             f"got {chunk_tokens}/{max_len}")
+        if scheduler == "slot_chunked" and not model.chunkable:
+            raise ValueError(
+                f"{model.cfg.name}: slot_chunked needs position-indexed "
+                "caches (recurrent mamba/rwkv state cannot be chunk-"
+                "prefilled in place); use scheduler='slot_fused'")
         self.model, self.params = model, params
         self.max_batch, self.max_len = max_batch, max_len
         self.scheduler = scheduler
+        self.chunk_tokens = chunk_tokens
         # k_max=1 is the legitimate scalar-equivalent fused setting;
         # clamp the under-capacity cap instead of rejecting it.
         self.k_max, self.k_free = k_max, min(k_free, k_max)
@@ -430,6 +503,10 @@ class ServeEngine:
         # input cache buffers are reused for its output, so the
         # persistent [max_batch, ...] cache is never copied per block.
         self._jit_loops: Dict[int, object] = {}
+        # Chunked admission traces, one per K (0 = chunk-only, no active
+        # decode rows).  The fixed [B, chunk_tokens] chunk shape bounds
+        # the trace count at k_max + 2 regardless of prompt lengths.
+        self._jit_chunked: Dict[int, object] = {}
         self._jit_write_slot = jax.jit(_write_slot_caches)
         # One jitted prefill; jax specializes it per (batch, prompt) shape.
         self._jit_prefill = jax.jit(
@@ -443,7 +520,22 @@ class ServeEngine:
                       "batches": 0, "decode_steps": 0, "admitted": 0,
                       "prefills": 0, "slot_busy_steps": 0,
                       "dropped_responses": 0, "dropped_stream_events": 0,
-                      "host_syncs": 0, "ring_ops": 0, "fused_blocks": 0}
+                      "host_syncs": 0, "ring_ops": 0, "fused_blocks": 0,
+                      # Admission-plane counters (DESIGN.md §9), honest
+                      # for every scheduler: device dispatches that
+                      # carried prefill work, prompt chunks materialized
+                      # (monolithic prefill = one whole-prompt chunk),
+                      # extra dispatches that only copy a side cache into
+                      # the batch cache (zero for slot_chunked), and
+                      # decode-step opportunities active slots lost while
+                      # a serial prefill ran (zero for slot_chunked:
+                      # chunks ride the decode dispatch).
+                      "prefill_dispatches": 0, "prefill_chunks": 0,
+                      "cache_copy_dispatches": 0,
+                      "admission_stall_steps": 0}
+        # Append-only log of fail-fast oversize rejects (written by
+        # client threads in submit_i; list.append is the atomic).
+        self.oversize_log: List[int] = []
 
     # -- client API (one thread per client) -------------------------------------
     def connect(self, client_id: int) -> Session:
@@ -460,6 +552,11 @@ class ServeEngine:
         None => intake ring full (caller retries)."""
         session = self._sessions[client_id]
         h = session.submit_i(prompt, max_tokens, eos_id)
+        if h.status is not None:
+            # Rejected fast at the session layer (oversize): route the
+            # already-terminal Request to the legacy get_response queue.
+            session._completed.append(h.response)
+            return h.req
         if not h.submitted:
             h.cancel()                  # abandon the pending send ...
             h.test()                    # ... and finalize it (owner thread)
@@ -519,28 +616,53 @@ class ServeEngine:
     # ===========================================================================
     def _bucket(self, n: int) -> int:
         """Pad prompts to power-of-two buckets (>=8) to bound the number
-        of prefill traces; left-padding matches the wave scheduler."""
+        of prefill traces; left-padding matches the wave scheduler.  The
+        chunked scheduler streams the same bucketed prompt (so its token
+        sequences stay byte-identical to the other slot schedulers) but
+        through ONE fixed [B, chunk_tokens] trace — the bucket no longer
+        multiplies compiled programs, only chunk count."""
         b = 8
         while b < n:
             b *= 2
         return b
 
+    def _footprint(self, prompt_len: int) -> int:
+        """Cache positions a prompt occupies before generation starts,
+        for the session layer's fail-fast oversize check: the bucketed
+        length for the slot schedulers (they really write at bucketed
+        positions), the raw length for the wave scheduler (it pads only
+        to the batch max and self-truncates decode at ``max_len``, so
+        bucketing would reject requests it used to serve)."""
+        if self.scheduler == "wave":
+            return prompt_len
+        return self._bucket(prompt_len)
+
     def _ensure_caches(self) -> None:
         if self._caches is None:
             self._caches = self.model.init_cache(self.max_batch, self.max_len)
 
-    def _admit_into(self, slot: DecodeSlot) -> bool:
-        """Swap one waiting request into a FREE slot.  Returns False when
-        the intake fan-in is empty; pool-full requests are rejected (the
-        NBB BUFFER_FULL discipline), never queued behind a blocked slot."""
+    def _pop_next(self, slot: DecodeSlot) -> Optional[Request]:
+        """Pop the next admissible request for ``slot``: pool-full
+        requests are rejected (the NBB BUFFER_FULL discipline), requests
+        cancelled while queued are answered with their empty terminal —
+        the batcher never blocks behind either.  Returns None when the
+        intake fan-in is empty.
+
+        Page claim at admission: the full prompt+generation reservation
+        for the monolithic-prefill schedulers; only the FIRST CHUNK for
+        ``slot_chunked`` — the rest of the reservation is extended chunk
+        by chunk as positions materialize (DESIGN.md §9)."""
         while True:
             status, req = self.intake.try_recv()
             if status != nbb.OK:
-                return False
+                return None
             padded = self._bucket(len(req.prompt))
-            need = padded + req.max_tokens
-            if padded + req.max_tokens > self.max_len or self.pool.try_admit(
-                    req.req_id, need, slot=slot.index) != POOL_OK:
+            if self.scheduler == "slot_chunked":
+                need = min(self.chunk_tokens, padded)
+            else:
+                need = padded + req.max_tokens
+            if self.pool.try_admit(req.req_id, need,
+                                   slot=slot.index) != POOL_OK:
                 self._reject(req)
                 continue
             if not req.fsm.cas(states.REQUEST_VALID, states.REQUEST_RECEIVED):
@@ -549,39 +671,70 @@ class ServeEngine:
                 self.pool.free(req.req_id)
                 self._finish_cancelled(req)
                 continue
-            break
-        if not any(s.request is not None for s in self.slots):
-            self.stats["batches"] += 1      # new busy period begins
-        # Figure-4 lifecycle: FREE -> RESERVED (pages claimed) ...
+            return req
+
+    def _bind_slot(self, slot: DecodeSlot, req: Request) -> None:
+        """Figure-4 head shared by all slot schedulers: FREE -> RESERVED
+        (pages claimed), the bucketed prompt staged for prefill."""
         slot.fsm.transition(states.BUFFER_FREE, states.BUFFER_RESERVED)
+        padded = self._bucket(len(req.prompt))
         prompt = np.zeros((padded,), np.int32)
         prompt[padded - len(req.prompt):] = req.prompt      # left-pad
+        slot.request = req
+        slot.prompt = prompt
+        slot.prefill_pos = 0
+        slot.pos = 0
+        slot.generated = 0
+        slot.outs = np.full((req.max_tokens,), -1, np.int64)
+        self._pos[slot.index] = 0
+        self._cur[slot.index] = 0
+        self.stats["admitted"] += 1
+
+    def _prefill_slot(self, slot: DecodeSlot) -> None:
+        """Monolithic admission tail (``slot``/``slot_fused``): one B=1
+        prefill dispatch, one dedicated host sync for the first token,
+        and one extra device dispatch copying the B=1 cache into the
+        batch-cache row — the serializing intermediary the chunked
+        scheduler deletes.  Every active slot loses one decode-step
+        opportunity while this runs (``admission_stall_steps``)."""
+        req = slot.request
+        self.stats["admission_stall_steps"] += sum(
+            1 for s in self.slots
+            if s is not slot and s.request is not None and s.generated > 0)
         tok, one_cache = self._jit_prefill(self.params,
-                                           jnp.asarray(prompt[None]))
+                                           jnp.asarray(slot.prompt[None]))
         self.stats["prefills"] += 1
+        self.stats["prefill_dispatches"] += 1
+        self.stats["prefill_chunks"] += 1   # one whole-prompt chunk
         self.stats["host_syncs"] += 1   # the int(...) fetch below
         self._ensure_caches()
         self._caches = self._jit_write_slot(self._caches, one_cache,
                                             jnp.int32(slot.index))
+        self.stats["cache_copy_dispatches"] += 1
         # ... -> ALLOCATED (KV materialized in this slot's cache rows).
         slot.fsm.transition(states.BUFFER_RESERVED, states.BUFFER_ALLOCATED)
-        slot.request = req
+        padded = len(slot.prompt)
         slot.next_tok = int(np.asarray(tok)[0])
         slot.pos = padded
-        slot.generated = 0
-        slot.outs = np.full((req.max_tokens,), -1, np.int64)
+        slot.prefill_pos = padded
         self._pos[slot.index] = padded
         self._cur[slot.index] = slot.next_tok
-        self.stats["admitted"] += 1
-        return True
 
     def _release_slot(self, slot: DecodeSlot) -> None:
         """Figure-4 tail shared by retire and abort: the slot's occupancy
-        ends, the row is clean for the next admission."""
-        slot.fsm.transition(states.BUFFER_ALLOCATED, states.BUFFER_RECEIVED)
-        slot.fsm.transition(states.BUFFER_RECEIVED, states.BUFFER_FREE)
+        ends, the row is clean for the next admission.  A slot aborted
+        while its prompt was still streaming in (chunked admission) is
+        still RESERVED and takes the direct RESERVED -> FREE edge."""
+        if slot.fsm.state == states.BUFFER_RESERVED:
+            slot.fsm.transition(states.BUFFER_RESERVED, states.BUFFER_FREE)
+        else:
+            slot.fsm.transition(states.BUFFER_ALLOCATED,
+                                states.BUFFER_RECEIVED)
+            slot.fsm.transition(states.BUFFER_RECEIVED, states.BUFFER_FREE)
         slot.request = None
         slot.outs = None
+        slot.prompt = None
+        slot.prefill_pos = 0
         self._cur[slot.index] = 0
         self._pos[slot.index] = 0
 
@@ -618,7 +771,11 @@ class ServeEngine:
         """One engine iteration (micro-batch): abort cancelled slots,
         swap in, harvest + retire, then one *fused block* of K decode
         steps (``slot_fused``) or a single decode step (``slot``, the
-        K=1 baseline).  Returns (requests retired, did work)."""
+        K=1 baseline); ``slot_chunked`` additionally streams one prompt
+        chunk per admitting slot inside the same dispatch.  Returns
+        (requests retired, did work)."""
+        if self.scheduler == "slot_chunked":
+            return self._tick_chunked()
         if self.scheduler == "slot_fused":
             return self._tick_fused()
         return self._tick_scalar()
@@ -645,7 +802,13 @@ class ServeEngine:
         bounded by ``k_max``.  When the pool is under capacity (a FREE
         slot exists), K is further capped at ``k_free`` so a request
         arriving mid-block waits at most ``k_free`` decode steps for
-        admission — the bounded-TTFT half of the rule."""
+        admission — the bounded-TTFT half of the rule.  A slot whose
+        prompt is still *streaming in* (chunked admission) counts the
+        same as FREE here: its chunks ride the decode dispatches either
+        way, so a long block would only let the rows already decoding
+        race ahead solo — throttling to ``k_free`` keeps them co-batched
+        with the arrival once its prefill lands (and bounds the
+        arrival's time-to-first-block)."""
         k = min(self.k_max,
                 min(s.request.max_tokens - s.generated for s in active))
         if len(active) < self.max_batch:
@@ -663,24 +826,76 @@ class ServeEngine:
             self._jit_loops[k] = fn
         return fn
 
+    def _chunked_fn(self, k: int):
+        """Fused chunk+decode trace for block length ``k`` (``k == 0``:
+        chunk-only, used when no row is decoding).  Caches donated: the
+        chunk is written in place, never copied."""
+        fn = self._jit_chunked.get(k)
+        if fn is None:
+            model, max_len = self.model, self.max_len
+            if k == 0:
+                fn = jax.jit(
+                    lambda p, c, ch, st, nv: model.prefill_chunk_into(
+                        p, c, ch, st, nv),
+                    donate_argnums=(1,))
+            else:
+                fn = jax.jit(
+                    lambda p, c, ch, st, nv, cur, pos, rem, eos:
+                    model.chunked_block(p, c, ch, st, nv, cur, pos, rem,
+                                        eos, k=k, max_len=max_len),
+                    donate_argnums=(1,))
+            self._jit_chunked[k] = fn
+        return fn
+
+    def _reject_streaming(self, slot: DecodeSlot) -> None:
+        """Mid-stream pool exhaustion (chunked admission): the whole
+        admission rolls back — pages freed, RESERVED slot released, the
+        rejected terminal delivered — rather than holding a half-claimed
+        reservation while other slots decode."""
+        req = slot.request
+        self.pool.free(req.req_id)
+        if req.fsm.cas(states.REQUEST_RECEIVED, states.REQUEST_CANCELLED):
+            self.stats["rejected"] += 1
+        else:
+            self.stats["cancelled"] += 1    # client cancel won the race
+        req.done_t = time.monotonic()
+        req.tokens_out = np.zeros((0,), np.int32)
+        self._respond(req)
+        self._release_slot(slot)
+
     def _sweep_in(self) -> bool:
-        """Tick head shared by both slot schedulers: (0) abort
+        """Tick head shared by all slot schedulers: (0) abort
         client-cancelled slots — their pages return before admission, so
         a waiting request can take the slot this very tick (for the
         fused scheduler this bounds cancel latency to one block); then
-        (1) swap waiting requests into FREE slots (lock-free intake).
-        Returns True iff anything moved."""
+        (1) drain the intake fan-in into ALL free slots (binding them
+        RESERVED) before any device work; then (2) for the monolithic-
+        prefill schedulers, prefill the newly bound slots.  Draining
+        first means a burst of arrivals costs one admission sweep per
+        busy period — and under ``slot_chunked`` the reserved slots need
+        no dispatch at all here: their first chunks ride the next fused
+        block.  Returns True iff anything moved."""
         worked = False
         for slot in self.slots:
             req = slot.request
             if req is not None and req.fsm.state == states.REQUEST_CANCELLED:
                 self._abort_slot(slot)
                 worked = True
+        was_idle = not any(s.request is not None for s in self.slots)
+        newly: List[DecodeSlot] = []
         for slot in self.slots:
             if slot.request is None:
-                if not self._admit_into(slot):
+                req = self._pop_next(slot)
+                if req is None:
                     break
+                self._bind_slot(slot, req)
+                newly.append(slot)
                 worked = True
+        if newly and was_idle:
+            self.stats["batches"] += 1      # new busy period begins
+        if self.scheduler != "slot_chunked":
+            for slot in newly:
+                self._prefill_slot(slot)
         return worked
 
     def _tick_fused(self) -> Tuple[int, bool]:
@@ -730,20 +945,33 @@ class ServeEngine:
         blk = np.asarray(blk_dev).astype(np.int64)
         self.stats["host_syncs"] += 1   # the ONE sync for the whole block
         t1 = time.monotonic()
-        # 4) Harvest the block: valid tokens form a per-row prefix
-        #    (device masking stops emission at EOS/budget/max_len).
+        served += self._harvest_block(active, blk, k, t0, t1)
+        return served, True
+
+    def _harvest_block(self, active: List[DecodeSlot], blk: np.ndarray,
+                       k: int, t0: float, t1: float,
+                       joined: Tuple[DecodeSlot, ...] = ()) -> int:
+        """Harvest one fetched [B, K] token block (shared by the fused
+        and chunked schedulers): valid tokens form a per-row prefix
+        (device masking stops emission at EOS/budget/max_len).  Rows in
+        ``joined`` also produced their prefill token in this same
+        dispatch, so their k+1 tokens share the interpolation window.
+        Returns requests retired."""
+        served = 0
         for s in active:
             req = s.request
             row = blk[s.index]
             n_valid = int((row >= 0).sum())
             first_pos = s.generated
+            nb = 1 if s in joined else 0
             for j in range(n_valid):
                 s.outs[s.generated] = row[j]
                 s.generated += 1
                 # Per-token timestamps interpolated within the block:
                 # the block produced its tokens at a uniform device
                 # cadence between t0 and t1.
-                req.token_ts.append(t0 + (j + 1) * (t1 - t0) / k)
+                req.token_ts.append(
+                    t0 + (j + 1 + nb) * (t1 - t0) / (k + nb))
             s.pos += n_valid
             self._pos[s.index] = s.pos
             self._cur[s.index] = int(row[n_valid - 1])
@@ -759,6 +987,154 @@ class ServeEngine:
                 served += 1
         self.stats["decode_steps"] += k
         self.stats["fused_blocks"] += 1
+        return served
+
+    def _tick_chunked(self) -> Tuple[int, bool]:
+        """One chunked-admission iteration (DESIGN.md §9): every slot
+        whose prompt is still streaming contributes its next fixed-shape
+        chunk, every decoding slot its next K steps, and BOTH ride ONE
+        jitted dispatch and ONE host fetch — admission costs zero
+        dedicated syncs, zero cache-copy dispatches, and stalls active
+        decode by zero steps (the monolithic path stalls every active
+        slot once per admission and pays a sync + copy dispatch)."""
+        served = 0
+        worked = self._sweep_in()
+        B, C = self.max_batch, self.chunk_tokens
+        # 2) Assemble this dispatch's chunk rows.  The page reservation
+        #    is extended to cover exactly the positions this chunk will
+        #    materialize (plus the decode budget with the final chunk)
+        #    BEFORE any device work, so pool exhaustion aborts the
+        #    admission cleanly pre-dispatch.
+        chunk = np.zeros((B, C), np.int32)
+        start_v = np.zeros((B,), np.int32)
+        nval_v = np.zeros((B,), np.int32)
+        chunks: List[Tuple[DecodeSlot, int, bool]] = []
+        for s in self.slots:
+            if s.request is None or s.generated > 0:
+                continue
+            req = s.request
+            n_rem = len(s.prompt) - s.prefill_pos
+            v = min(C, n_rem)
+            final = v == n_rem
+            need = (len(s.prompt) + req.max_tokens if final
+                    else s.prefill_pos + v)
+            if self.pool.extend_reservation(req.req_id, need) != POOL_OK:
+                self._reject_streaming(s)
+                worked = True
+                continue
+            chunk[s.index, :v] = s.prompt[s.prefill_pos:s.prefill_pos + v]
+            start_v[s.index] = s.prefill_pos
+            nval_v[s.index] = v
+            chunks.append((s, v, final))
+        active = [s for s in self.slots
+                  if s.request is not None and s.generated > 0]
+        if not chunks and not active:
+            return served, worked
+        self._ensure_caches()
+        pos_v = self._pos.copy()
+        for s, v, _ in chunks:
+            # Streaming rows pass their POST-chunk extent: the decode
+            # scan's idle-row junk write lands on the next *unwritten*
+            # slot, overwritten by the next chunk (or the row's own
+            # first decode step) before it is ever attended.
+            pos_v[s.index] = s.prefill_pos + v
+        rem_v = np.zeros((B,), np.int32)
+        eos_v = np.full((B,), -1, np.int32)
+        for s in active:
+            rem_v[s.index] = s.request.max_tokens - s.generated
+            eos_v[s.index] = s.request.eos_id
+        # Rows whose FINAL chunk rides this dispatch JOIN the decode
+        # block immediately (Model.chunked_block feeds them their
+        # on-device prefill token): rem is the budget minus that first
+        # token, so a max_tokens=1 row correctly stays out of the scan.
+        for s, v, final in chunks:
+            if final:
+                rem_v[s.index] = s.request.max_tokens - 1
+                eos_v[s.index] = s.request.eos_id
+        # Adaptive K over everything that will decode this dispatch
+        # (continuing rows AND joiners); capped at k_free while a slot
+        # is FREE or a prompt is still mid-stream, so arrivals and
+        # later chunks never wait behind a long solo block.
+        budgets = ([s.request.max_tokens - s.generated for s in active]
+                   + [s.request.max_tokens - 1 for s, _, final in chunks
+                      if final and s.request.max_tokens > 1])
+        if budgets:
+            k = min(self.k_max, min(budgets))
+            if (any(s.request is None for s in self.slots)
+                    or any(not final for _, _, final in chunks)):
+                k = min(k, self.k_free)
+            k = max(1, k)
+        else:
+            k = 0
+        # 3) ONE dispatch: chunk and K-step block fused when both exist.
+        t0 = time.monotonic()
+        tok_pf = blk = None
+        if chunks and k:
+            tok_dev, blk_dev, self._caches = self._chunked_fn(k)(
+                self.params, self._caches, jnp.asarray(chunk),
+                jnp.asarray(start_v), jnp.asarray(nval_v),
+                jnp.asarray(self._cur), jnp.asarray(pos_v),
+                jnp.asarray(rem_v), jnp.asarray(eos_v))
+            tok_pf = np.asarray(tok_dev)
+            blk = np.asarray(blk_dev).astype(np.int64)
+        elif chunks:
+            tok_dev, self._caches = self._chunked_fn(0)(
+                self.params, self._caches, jnp.asarray(chunk),
+                jnp.asarray(start_v), jnp.asarray(nval_v))
+            tok_pf = np.asarray(tok_dev)
+        else:
+            blk_dev, self._caches = self._loop_fn(k)(
+                self.params, self._caches, jnp.asarray(self._cur),
+                jnp.asarray(pos_v), jnp.asarray(rem_v),
+                jnp.asarray(eos_v))
+            blk = np.asarray(blk_dev).astype(np.int64)
+        self.stats["host_syncs"] += 1   # ONE fetch covers chunk AND block
+        if chunks:
+            self.stats["prefills"] += 1
+            self.stats["prefill_dispatches"] += 1
+        t1 = time.monotonic()
+        # 4) Harvest chunks.  A final chunk delivers the prefill's first
+        #    token straight from the regular block fetch (exact TTFT, no
+        #    dedicated host sync), flips the slot ALLOCATED, and — when
+        #    the dispatch carried a decode block — the row's first K
+        #    decode tokens are already in it (it joined on device).
+        joined: List[DecodeSlot] = []
+        for s, v, final in chunks:
+            req = s.request
+            s.prefill_pos += v
+            self.stats["prefill_chunks"] += 1
+            if not final:
+                self.pool.note_tokens(req.req_id, s.prefill_pos)
+                continue
+            tok = int(tok_pf[s.index])
+            s.fsm.transition(states.BUFFER_RESERVED,
+                             states.BUFFER_ALLOCATED)
+            s.pos = s.prefill_pos
+            self._pos[s.index] = s.pos
+            self._cur[s.index] = tok
+            s.outs[0] = tok
+            s.generated = 1
+            # The first token came back with the block fetch: when the
+            # dispatch also decoded (k > 0) its timestamp is the first
+            # point of the dispatch's interpolation window, keeping
+            # token_ts monotone with the decode tokens that followed it
+            # on device; a chunk-only dispatch stamps real harvest time.
+            ts0 = (t0 + (t1 - t0) / (k + 1)) if k else time.monotonic()
+            req.first_token_t = ts0
+            req.token_ts.append(ts0)
+            self.pool.note_tokens(req.req_id, s.pos)
+            self._stream_tokens(req, 0, [tok])
+            if self._finished(req, tok, s.generated, s.pos):
+                # Done at the prefill token: the device's initial
+                # liveness mask kept this row out of the block.
+                self._retire(s)
+                served += 1
+            elif k:
+                joined.append(s)
+        # 5) Harvest the decode block (continuing rows + joiners).
+        if k:
+            served += self._harvest_block(active + joined, blk, k, t0, t1,
+                                          joined=tuple(joined))
         return served, True
 
     def _tick_scalar(self) -> Tuple[int, bool]:
@@ -852,6 +1228,8 @@ class ServeEngine:
             toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
         tok, caches = self._jit_prefill(self.params, jnp.asarray(toks))
         self.stats["prefills"] += 1
+        self.stats["prefill_dispatches"] += 1
+        self.stats["prefill_chunks"] += B   # one whole-prompt chunk each
 
         max_new = max(r.max_tokens for r in batch)
         outs = np.full((B, max_new), -1, np.int64)

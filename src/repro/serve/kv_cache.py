@@ -70,15 +70,13 @@ class PagedKVPool:
     def pages_needed(self, n_tokens: int) -> int:
         return max(1, math.ceil(n_tokens / self.page_size))
 
-    def try_admit(self, seq_id: int, n_tokens: int,
-                  slot: Optional[int] = None) -> int:
-        """Claim pages for a sequence.  OK or POOL_FULL (all-or-nothing;
-        claimed pages are rolled back on partial failure, so concurrent
-        admitters can't deadlock each other).  ``slot`` binds the
-        reservation to a decode slot for per-slot accounting."""
-        need = self.pages_needed(n_tokens)
+    def _claim_pages(self, n: int) -> Optional[List[int]]:
+        """THE page-claim loop (every reservation path goes through it):
+        claim ``n`` pages lock-free, all-or-nothing — on shortage the
+        partial claim is rolled back and None returned, so concurrent
+        admitters can't deadlock each other or strand half-claims."""
         got: List[int] = []
-        for _ in range(need):
+        for _ in range(n):
             # fresh token per claim: setdefault-CAS must not recognize our
             # own earlier claims as "won again"
             page = self._alloc.try_claim(owner=object(),
@@ -86,9 +84,19 @@ class PagedKVPool:
             if page is None:
                 for p in got:      # roll back — nobody waits on us
                     self._alloc.release(p)
-                return POOL_FULL
+                return None
             self._next_probe = (page + 1) % self.n_pages
             got.append(page)
+        return got
+
+    def try_admit(self, seq_id: int, n_tokens: int,
+                  slot: Optional[int] = None) -> int:
+        """Claim pages for a sequence.  OK or POOL_FULL (all-or-nothing).
+        ``slot`` binds the reservation to a decode slot for per-slot
+        accounting."""
+        got = self._claim_pages(self.pages_needed(n_tokens))
+        if got is None:
+            return POOL_FULL
         self._tables[seq_id] = PageTable(seq_id, got, n_tokens, slot=slot,
                                          n_reserved=n_tokens)
         return OK
@@ -98,17 +106,30 @@ class PagedKVPool:
         traffic; keeps per-slot utilization stats truthful)."""
         self._tables[seq_id].n_tokens = n_tokens
 
+    def extend_reservation(self, seq_id: int, n_tokens: int) -> int:
+        """Grow a sequence's *reservation* to cover ``n_tokens`` without
+        recording them as written (chunked admission, DESIGN.md §9: pages
+        are claimed chunk by chunk as prompt positions materialize, then
+        the decode budget is reserved with the final chunk).  All-or-
+        nothing, so a mid-stream admission under memory pressure aborts
+        cleanly instead of holding half its pages.  ``note_tokens``
+        still reports actual written growth."""
+        t = self._tables[seq_id]
+        got = self._claim_pages(self.pages_needed(n_tokens) - len(t.pages))
+        if got is None:
+            return POOL_FULL
+        t.pages.extend(got)
+        t.n_reserved = max(t.n_reserved, n_tokens)
+        return OK
+
     def grow(self, seq_id: int, new_n_tokens: int) -> int:
         """Extend a sequence (decode appends); claims pages as needed."""
         t = self._tables[seq_id]
-        need = self.pages_needed(new_n_tokens)
-        while len(t.pages) < need:
-            page = self._alloc.try_claim(owner=object(),
-                                         start=self._next_probe)
-            if page is None:
-                return POOL_FULL
-            self._next_probe = (page + 1) % self.n_pages
-            t.pages.append(page)
+        got = self._claim_pages(self.pages_needed(new_n_tokens)
+                                - len(t.pages))
+        if got is None:
+            return POOL_FULL
+        t.pages.extend(got)
         t.n_tokens = new_n_tokens
         return OK
 

@@ -9,7 +9,7 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.core import states
 from repro.models.model import build_model
-from repro.serve.engine import (ServeEngine, TimeoutStatus,
+from repro.serve.engine import (OversizeStatus, ServeEngine, TimeoutStatus,
                                 pack_token_event, unpack_token_event)
 from repro.serve.kv_cache import OK, POOL_FULL, PagedKVPool
 
@@ -416,11 +416,12 @@ def test_submit_i_pending_on_full_intake_then_recovers(engine_setup):
 # ---------------------------------------------------------------------------
 # packet-mode fused decode (scheduler="slot_fused", the default)
 # ---------------------------------------------------------------------------
-def _run_workload(model, params, scheduler, lengths, vocab, eos_id=-1):
+def _run_workload(model, params, scheduler, lengths, vocab, eos_id=-1,
+                  **engine_kw):
     """Serve a fixed workload; returns (engine, per-request sequences in
     submission order)."""
     eng = ServeEngine(model, params, max_batch=2, max_len=64, n_clients=1,
-                      pool_pages=256, scheduler=scheduler)
+                      pool_pages=256, scheduler=scheduler, **engine_kw)
     rids = []
     for i, n in enumerate(lengths):
         r = eng.submit(0, (np.arange(4) + i) % vocab, max_tokens=n,
@@ -558,6 +559,365 @@ def test_note_tokens_per_block_matches_per_step():
     assert n1 == n2 == 16
     assert per_step == per_block
     assert per_step["per_slot"][3] == (5, 16, 20)   # pages, tokens, reserved
+
+
+# ---------------------------------------------------------------------------
+# chunked zero-copy admission (scheduler="slot_chunked", DESIGN.md §9)
+# ---------------------------------------------------------------------------
+def test_chunked_equals_slot_across_chunk_sizes(engine_setup):
+    """The acceptance property: for every chunk size (1, 4, and a whole
+    bucketed prompt) the chunked scheduler emits token sequences
+    byte-identical to the scalar slot path AND the fused path — in-place
+    chunk admission changes the exchange plan, never the tokens."""
+    cfg, model, params = engine_setup
+    lengths = [12, 2, 7, 2, 1, 9, 24, 3]     # mixed, forces adaptive K
+    e_slot, s_slot = _run_workload(model, params, "slot", lengths,
+                                   cfg.vocab_size)
+    _, s_fused = _run_workload(model, params, "slot_fused", lengths,
+                               cfg.vocab_size)
+    assert s_fused == s_slot
+    for chunk in (1, 4, 8):                  # prompts bucket to 8
+        e_c, s_c = _run_workload(model, params, "slot_chunked", lengths,
+                                 cfg.vocab_size, chunk_tokens=chunk)
+        assert s_c == s_slot, f"chunk_tokens={chunk} diverged"
+        # Zero-copy: no B=1 side cache was ever copied into the batch
+        # cache, and no dedicated per-admission sync was paid.
+        assert e_c.stats["cache_copy_dispatches"] == 0
+        assert e_c.stats["admission_stall_steps"] == 0
+        assert e_c.pool.free_pages() == e_c.pool.n_pages
+        # Dispatches carrying prefill work are bounded by the chunk
+        # count: sum over admissions of ceil(padded / chunk).
+        bound = sum(-(-8 // chunk) for _ in lengths)
+        assert e_c.stats["prefill_dispatches"] <= bound
+        assert e_c.stats["prefill_chunks"] == bound
+    # The monolithic paths pay a copy dispatch and stall active slots.
+    assert e_slot.stats["cache_copy_dispatches"] == len(lengths)
+    assert e_slot.stats["admission_stall_steps"] > 0
+
+
+def test_chunked_equivalence_when_padded_tail_wraps_ring(engine_setup):
+    """Regression: a final chunk whose PADDED tail pushes start + chunk
+    past the cache ring size must not bump the wrap epoch — validity and
+    slot positions are computed from the true valid extent, so the
+    chunk's queries still see the whole prompt."""
+    cfg, model, params = engine_setup
+    def serve(scheduler, **kw):
+        eng = ServeEngine(model, params, max_batch=2, max_len=96,
+                          n_clients=1, pool_pages=512,
+                          scheduler=scheduler, **kw)
+        rids = []
+        for i, (plen, mt) in enumerate([(48, 4), (4, 8)]):
+            r = eng.submit(0, (np.arange(plen) + i) % cfg.vocab_size,
+                           max_tokens=mt)
+            rids.append(r.req_id)
+        while eng.stats["served"] < 2:
+            eng.step()
+        got = {}
+        for _ in range(2):
+            r = eng.get_response(0, timeout_s=10)
+            got[r.req_id] = list(map(int, r.tokens_out))
+        return [got[r] for r in rids]
+
+    base = serve("slot")
+    # bucket(48) = 64; the final chunk starts at 50, and 50 + 50 > 96.
+    assert serve("slot_chunked", chunk_tokens=50) == base
+    assert serve("slot_chunked", chunk_tokens=96) == base
+
+
+def test_wave_oversize_check_uses_raw_prompt_len(engine_setup):
+    """Regression: the fail-fast footprint must not bucket for the wave
+    scheduler — bucket(17)=32 would reject a 17-token prompt that wave
+    (which pads only to the batch max) serves in full."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=2, max_len=32, n_clients=1,
+                      scheduler="wave")
+    req = eng.submit(0, np.arange(17) % cfg.vocab_size, max_tokens=8)
+    assert req is not None and req.fsm.state == states.REQUEST_VALID
+    eng.step()
+    resp = eng.get_response(0, timeout_s=10)
+    assert resp.fsm.state == states.REQUEST_COMPLETED
+    assert len(resp.tokens_out) == 8
+    assert len(eng.oversize_log) == 0
+
+
+def test_chunked_eos_masking_matches_scalar(engine_setup):
+    """A row that joins the decode block in the same dispatch as its
+    final chunk still stops exactly at EOS (the scan's initial liveness
+    mask sees the on-device prefill token)."""
+    cfg, model, params = engine_setup
+    _, seqs = _run_workload(model, params, "slot_chunked", [6],
+                            cfg.vocab_size, chunk_tokens=4)
+    eos = seqs[0][0]
+    _, s_slot = _run_workload(model, params, "slot", [6, 17],
+                              cfg.vocab_size, eos_id=eos)
+    _, s_c = _run_workload(model, params, "slot_chunked", [6, 17],
+                           cfg.vocab_size, eos_id=eos, chunk_tokens=4)
+    assert s_c == s_slot
+
+
+def test_chunked_long_prompt_does_not_stall_decode(engine_setup):
+    """The interference property: while a long prompt streams in chunk
+    by chunk, the already-active slot keeps decoding — at least one
+    decode step lands in every chunk-carrying dispatch, and the stall
+    counter stays at zero (the fused path stalls the active slot once
+    per admission)."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=2, max_len=128, n_clients=1,
+                      pool_pages=256, scheduler="slot_chunked",
+                      chunk_tokens=4)
+    eng.submit(0, np.arange(4) % cfg.vocab_size, max_tokens=60)
+    while not any(s.generated > 0 for s in eng.slots):
+        eng.tick()
+    eng.submit(0, np.arange(33) % cfg.vocab_size, max_tokens=4)  # bucket 64
+    eng.tick()                      # admission sweep binds the slot
+    streamer = [s for s in eng.slots
+                if s.request is not None and s.request.max_tokens == 4]
+    assert streamer and streamer[0].prefill_pos > 0, "not streaming"
+    active = [s for s in eng.slots
+              if s.request is not None and s.request.max_tokens == 60][0]
+    chunk_ticks = 0
+    while streamer[0].generated == 0 and streamer[0].request is not None:
+        before = active.generated
+        eng.tick()
+        chunk_ticks += 1
+        assert active.generated >= before + 1, \
+            "active slot stalled during a prefill chunk"
+    assert chunk_ticks >= 10            # 64-token bucket in 4-token chunks
+    assert eng.stats["admission_stall_steps"] == 0
+    while eng.stats["served"] < 2:
+        eng.tick()
+    got = sorted(len(eng.get_response(0, 10).tokens_out) for _ in range(2))
+    assert got == [4, 60]
+    assert eng.pool.free_pages() == eng.pool.n_pages
+
+
+def test_chunked_batched_multi_slot_admission_sweep(engine_setup):
+    """A burst of arrivals from idle is drained into ALL free slots
+    before the first dispatch: their first chunks share ONE device
+    dispatch and ONE host sync, and the burst costs one busy-period
+    stats bump, not one per request."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=4, max_len=64, n_clients=1,
+                      pool_pages=256, scheduler="slot_chunked",
+                      chunk_tokens=8)
+    for i in range(4):
+        assert eng.submit(0, (np.arange(4) + i) % cfg.vocab_size,
+                          max_tokens=3) is not None
+    eng.tick()
+    assert eng.stats["admitted"] == 4
+    assert eng.stats["batches"] == 1
+    assert eng.stats["prefill_dispatches"] == 1     # 4 admissions, 1 dispatch
+    assert eng.stats["prefill_chunks"] == 4
+    assert eng.stats["host_syncs"] == 1
+    while eng.stats["served"] < 4:
+        eng.tick()
+    for _ in range(4):
+        assert len(eng.get_response(0, 10).tokens_out) == 3
+    assert eng.pool.free_pages() == eng.pool.n_pages
+
+
+def test_chunked_page_accounting_per_chunk(engine_setup):
+    """Pages are claimed chunk by chunk as positions materialize: after
+    every streaming tick the sequence holds exactly
+    ``pages_needed(extent)`` pages, and the decode budget is reserved
+    with the final chunk."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=1, max_len=128, n_clients=1,
+                      pool_pages=64, page_size=4, scheduler="slot_chunked",
+                      chunk_tokens=4)
+    req = eng.submit(0, np.arange(9) % cfg.vocab_size, max_tokens=20)
+    padded = 16                                     # bucket of 9
+    extents = []
+    while eng.slots[0].generated == 0:
+        eng.tick()
+        assert eng.slots[0].request is not None
+        t = eng.pool.table(req.req_id)
+        extents.append((eng.slots[0].prefill_pos, len(t.pages),
+                        t.n_reserved))
+    mid = [e for e in extents if e[0] < padded]
+    assert len(mid) == 3, extents                   # 16 tokens, 4-chunks
+    for extent, pages, reserved in mid:
+        assert pages == eng.pool.pages_needed(extent)
+        assert reserved == max(4, extent)           # first-chunk floor
+    final = [e for e in extents if e[0] == padded]
+    assert final
+    assert final[0][1] == eng.pool.pages_needed(padded + 20)
+    assert final[0][2] == padded + 20               # decode budget reserved
+    while eng.stats["served"] < 1:
+        eng.tick()
+    assert len(eng.get_response(0, 10).tokens_out) == 20
+    assert eng.pool.free_pages() == eng.pool.n_pages
+
+
+def test_extend_reservation_matches_upfront_admission():
+    """Chunk-boundary page accounting against note_tokens: claiming the
+    reservation incrementally (extend_reservation per chunk + one
+    note_tokens per block) lands the pool in exactly the state the
+    all-upfront try_admit + per-step note_tokens path produced."""
+    def upfront():
+        pool = PagedKVPool(32, page_size=4, n_layers=2, kv_heads=2,
+                           head_dim=8)
+        assert pool.try_admit(9, 24, slot=1) == OK  # 16 prompt + 8 decode
+        n = 16
+        pool.note_tokens(9, n)
+        for _ in range(8):
+            n += 1
+            pool.note_tokens(9, n)
+        return pool.stats(), n
+
+    def chunked():
+        pool = PagedKVPool(32, page_size=4, n_layers=2, kv_heads=2,
+                           head_dim=8)
+        assert pool.try_admit(9, 4, slot=1) == OK   # first chunk only
+        for extent in (4, 8, 12):
+            assert pool.extend_reservation(9, extent) == OK
+            pool.note_tokens(9, extent)
+        assert pool.extend_reservation(9, 24) == OK  # final chunk
+        pool.note_tokens(9, 17)                      # prompt + first token
+        for n in (19, 23, 24):                       # fused decode blocks
+            pool.note_tokens(9, n)
+        return pool.stats(), 24
+
+    a, n1 = upfront()
+    b, n2 = chunked()
+    assert n1 == n2 and a == b
+    assert a["per_slot"][1] == (6, 24, 24)      # pages, tokens, reserved
+
+
+def test_extend_reservation_rolls_back_on_pool_full():
+    pool = PagedKVPool(4, page_size=4, n_layers=1, kv_heads=1, head_dim=2)
+    assert pool.try_admit(1, 4) == OK               # 1 page
+    assert pool.try_admit(2, 8) == OK               # 2 pages; 1 free
+    assert pool.extend_reservation(1, 24) == POOL_FULL  # needs 5 more
+    assert pool.free_pages() == 1                   # all-or-nothing
+    assert len(pool.table(1).pages) == 1
+    assert pool.extend_reservation(1, 8) == OK      # the last page fits
+    assert pool.free_pages() == 0
+
+
+def test_chunked_cancel_mid_stream_releases_reserved_slot(engine_setup):
+    """cancel() while the prompt is still streaming: the RESERVED slot
+    takes the direct RESERVED->FREE edge, pages return, the terminal is
+    CANCELLED/empty, and the batcher keeps serving."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=2, max_len=128, n_clients=1,
+                      pool_pages=256, scheduler="slot_chunked",
+                      chunk_tokens=4)
+    baseline = eng.pool.stats()
+    session = eng.connect(0)
+    h1 = session.submit_i(np.arange(4) % cfg.vocab_size, max_tokens=20)
+    for _ in range(3):
+        eng.tick()
+    h2 = session.submit_i(np.arange(40) % cfg.vocab_size, max_tokens=8)
+    eng.tick()
+    eng.tick()
+    mid = [s for s in eng.slots
+           if s.request is not None and s.generated == 0]
+    assert mid and 0 < mid[0].prefill_pos < len(mid[0].prompt)
+    assert h2.cancel() is True
+    eng.tick()                          # abort sweep releases RESERVED slot
+    r2 = h2.wait(timeout_s=10)
+    assert r2.fsm.state == states.REQUEST_CANCELLED
+    assert len(r2.tokens_out) == 0
+    while eng.stats["served"] < 1:
+        eng.tick()
+    r1 = h1.wait(timeout_s=10)
+    assert len(r1.tokens_out) == 20
+    assert eng.pool.stats() == baseline
+    for slot in eng.slots:
+        assert slot.fsm.state == states.BUFFER_FREE
+
+
+def test_chunked_mid_stream_pool_exhaustion_rejects(engine_setup):
+    """A long prompt that outgrows the pool mid-stream is rejected whole
+    (all-or-nothing): pages roll back, the slot frees, the terminal is
+    the standard rejection."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=2, max_len=128, n_clients=1,
+                      pool_pages=4, page_size=4,   # 16 tokens of KV total
+                      scheduler="slot_chunked", chunk_tokens=4)
+    eng.submit(0, np.arange(30) % cfg.vocab_size, max_tokens=8)  # bucket 32
+    eng.step()
+    resp = eng.get_response(0, timeout_s=10)
+    assert resp.fsm.state == states.REQUEST_CANCELLED
+    assert eng.stats["rejected"] == 1
+    assert eng.pool.free_pages() == eng.pool.n_pages
+    for slot in eng.slots:
+        assert slot.fsm.state == states.BUFFER_FREE
+    # the batcher is not wedged
+    eng.submit(0, np.arange(4) % cfg.vocab_size, max_tokens=2)
+    eng.step()
+    assert eng.get_response(0, 10).fsm.state == states.REQUEST_COMPLETED
+
+
+def test_chunked_streaming_tokens_and_ttft(engine_setup):
+    """The streaming surface over the chunked scheduler: every position
+    exactly once, first_token_t set at the final chunk's harvest, and
+    monotone per-token timestamps."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=2, max_len=64, n_clients=1,
+                      pool_pages=256, scheduler="slot_chunked",
+                      chunk_tokens=4)
+    eng_thread = eng.start()
+    try:
+        h = eng.connect(0).submit_i(np.arange(5) % cfg.vocab_size,
+                                    max_tokens=11)
+        got = list(h.tokens(timeout_s=60))
+        final = h.response
+        assert [p for p, _ in got] == list(range(11))
+        assert [t for _, t in got] == list(final.tokens_out)
+        assert final.first_token_t >= final.submit_t
+        assert len(final.token_ts) == 11
+        assert final.token_ts == sorted(final.token_ts)
+    finally:
+        eng.stop()
+        eng_thread.join(timeout=10)
+    assert eng.pool.free_pages() == eng.pool.n_pages
+
+
+# ---------------------------------------------------------------------------
+# fail-fast oversize rejection at the session layer
+# ---------------------------------------------------------------------------
+def test_submit_oversized_fails_fast_with_typed_status(engine_setup):
+    """A request whose footprint can never fit max_len is refused at
+    submit_i time: terminal handle, typed falsy OversizeStatus, no
+    intake round-trip, no batcher work, no pages touched."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=2, max_len=32, n_clients=1)
+    session = eng.connect(0)
+    h = session.submit_i(np.arange(20) % cfg.vocab_size, max_tokens=16)
+    assert h.done and not h.submitted
+    assert isinstance(h.status, OversizeStatus) and not h.status
+    assert h.status.padded_len == 32 and h.status.max_len == 32
+    assert h.response.fsm.state == states.REQUEST_CANCELLED
+    assert list(h.tokens()) == []
+    assert h.wait(timeout_s=1) is h.response
+    assert h.cancel() is False          # already terminal
+    # no engine-side traffic of any kind
+    assert len(eng.oversize_log) == 1
+    assert eng.stats["admitted"] == 0 and eng.stats["prefills"] == 0
+    assert eng.pool.free_pages() == eng.pool.n_pages
+    _, worked = eng.tick()
+    assert not worked                   # the batcher never saw it
+
+
+def test_submit_oversized_legacy_surface(engine_setup):
+    """The legacy submit()/get_response() pair still delivers exactly
+    one terminal for an oversized request (routed locally, no ring)."""
+    cfg, model, params = engine_setup
+    for scheduler in ("slot_chunked", "slot_fused", "wave"):
+        eng = ServeEngine(model, params, max_batch=2, max_len=32,
+                          n_clients=1, scheduler=scheduler)
+        req = eng.submit(0, np.arange(30) % cfg.vocab_size, max_tokens=8)
+        assert req is not None
+        assert req.fsm.state == states.REQUEST_CANCELLED
+        resp = eng.get_response(0, timeout_s=5)
+        assert resp is req
+        assert len(resp.tokens_out) == 0
+        # an in-range request still completes afterwards
+        assert eng.submit(0, np.arange(4) % cfg.vocab_size, max_tokens=2)
+        eng.step()
+        assert eng.get_response(0, 10).fsm.state == states.REQUEST_COMPLETED
 
 
 def test_engine_threaded_clients(engine_setup):
