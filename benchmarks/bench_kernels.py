@@ -6,17 +6,27 @@ record per kernel is (a) allclose vs the oracle at bench shapes, and
 tile — the numbers that determine TPU performance (DESIGN.md §Perf
 hints).  Wall time of the *reference* path is also printed as the CPU
 sanity anchor.
+
+The paged-attention row additionally records the copy traffic the
+block-table kernel DELETES: ``swap_bytes_deleted`` is what a dense
+gather swap-in would move per decode batch versus the int32 block-table
+row that paged residency writes instead (DESIGN.md §10).
+
+Usage: PYTHONPATH=src python benchmarks/bench_kernels.py [--quick]
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.nbb_matmul import nbb_matmul
+from repro.kernels.paged_attention import paged_attention
 
 
 def _time(f, *args, reps=3):
@@ -28,8 +38,41 @@ def _time(f, *args, reps=3):
     return (time.perf_counter() - t0) / reps
 
 
-def flash_attention_report():
-    B, T, H, hd = 1, 1024, 4, 128
+def paged_attention_report(quick: bool = False):
+    """Decode-shape paged attention: block-table kernel vs the dense
+    gather it replaces (the reference IS the gather path)."""
+    B, T, H, Hkv, hd = (2, 1, 4, 2, 64) if quick else (4, 1, 8, 2, 128)
+    ps, P = 16, (4 if quick else 16)
+    n_pages = 4 * B * P
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(n_pages, ps, Hkv, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_pages, ps, Hkv, hd)), jnp.float32)
+    block = jnp.asarray(rng.permutation(n_pages)[:B * P].reshape(B, P),
+                        jnp.int32)
+    lens = jnp.asarray(rng.integers(T, P * ps, size=(B,)), jnp.int32)
+    out = paged_attention(q, kp, vp, block, lens, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, block, lens)
+    err = float(jnp.abs(out - want).max())
+    # per-grid-step VMEM: q tile + one (k, v) page pair + f32 scratch
+    vmem = (T * hd + 2 * ps * hd) * 4 + (T * hd + 2 * T) * 4
+    flops_tile = 2 * 2 * T * ps * hd               # qk^T + pv
+    bytes_tile = (2 * ps * hd) * 4                 # k,v page per step
+    t_ref = _time(lambda a, b, c: ref.paged_attention_ref(a, b, c, block,
+                                                          lens), q, kp, vp)
+    # What residency costs: a gather swap-in moves every live page of
+    # the batch; the block table is B rows of P int32s.
+    swap_bytes = int((jnp.ceil(lens / ps)).sum()) * ps * Hkv * hd * 4 * 2
+    return {"kernel": "paged_attention", "max_err": err, "tol": 2e-5,
+            "vmem_tile_kb": vmem / 1024,
+            "arith_intensity": flops_tile / bytes_tile,
+            "ref_cpu_ms": t_ref * 1e3,
+            "swap_bytes_deleted": swap_bytes,
+            "block_table_bytes": int(block.size) * 4}
+
+
+def flash_attention_report(quick: bool = False):
+    B, T, H, hd = (1, 256, 4, 128) if quick else (1, 1024, 4, 128)
     bq = bk = 128
     q = jax.random.normal(jax.random.PRNGKey(0), (B, T, H, hd), jnp.float32)
     k = jax.random.normal(jax.random.PRNGKey(1), (B, T, H, hd), jnp.float32)
@@ -42,15 +85,15 @@ def flash_attention_report():
     flops_tile = 2 * 2 * bq * bk * hd              # qk^T + pv
     bytes_tile = (bk * hd * 2) * 4                 # k,v stream per step
     t_ref = _time(lambda a, b, c: ref.flash_attention_ref(a, b, c), q, k, v)
-    return {"kernel": "flash_attention", "max_err": err,
+    return {"kernel": "flash_attention", "max_err": err, "tol": 2e-5,
             "vmem_tile_kb": vmem / 1024,
             "arith_intensity": flops_tile / bytes_tile,
             "ref_cpu_ms": t_ref * 1e3}
 
 
-def nbb_matmul_report():
-    M = N = 512
-    K = 1024
+def nbb_matmul_report(quick: bool = False):
+    M = N = 256 if quick else 512
+    K = 512 if quick else 1024
     bm = bn = 256
     bk = 512
     a = jax.random.normal(jax.random.PRNGKey(3), (M, K), jnp.bfloat16)
@@ -64,19 +107,32 @@ def nbb_matmul_report():
     flops_tile = 2 * bm * bn * bk
     bytes_tile = (bm * bk + bk * bn) * 2
     t_ref = _time(lambda x, y: ref.matmul_ref(x, y), a, b)
-    return {"kernel": "nbb_matmul", "max_err": err,
+    # bf16 operands with split-K accumulation (default shapes: K=1024 in
+    # bk=512 steps): the achievable agreement is bf16-ulp scale, not f32.
+    return {"kernel": "nbb_matmul", "max_err": err, "tol": 0.5,
             "vmem_tile_kb": vmem / 1024,
             "arith_intensity": flops_tile / bytes_tile,
             "ref_cpu_ms": t_ref * 1e3}
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes for CI smoke")
+    args = ap.parse_args(argv)
     print("kernel,max_err,vmem_tile_kb,arith_intensity,ref_cpu_ms")
-    rows = [flash_attention_report(), nbb_matmul_report()]
+    rows = [flash_attention_report(args.quick),
+            nbb_matmul_report(args.quick),
+            paged_attention_report(args.quick)]
     for r in rows:
         print(f"{r['kernel']},{r['max_err']:.2e},{r['vmem_tile_kb']:.0f},"
               f"{r['arith_intensity']:.0f},{r['ref_cpu_ms']:.1f}")
+        assert r["max_err"] < r["tol"], f"{r['kernel']} diverged from oracle"
         assert r["vmem_tile_kb"] < 16 * 1024, "tile exceeds 16 MB VMEM"
+    pa = rows[-1]
+    print(f"paged residency: block table {pa['block_table_bytes']} B "
+          f"replaces a {pa['swap_bytes_deleted'] / 1024:.0f} KiB "
+          f"gather swap-in per decode batch")
     return rows
 
 

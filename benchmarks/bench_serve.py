@@ -1,4 +1,5 @@
-"""Serving-layer lock-convoy benchmark: wave vs slot vs fused vs chunked.
+"""Serving-layer lock-convoy benchmark: wave vs slot vs fused vs
+chunked vs paged.
 
 The paper shows that deleting the queue lock turns multicore contention
 into speedup; the serving-layer analogue of the lock is the *wave
@@ -24,7 +25,12 @@ decode dispatches, so ``admission_stall_steps`` drops to 0 (fused pays
 one stalled step per active slot per admission) with
 ``cache_copy_dispatches == 0`` and ``host_syncs_per_token`` at or below
 the fused baseline — all deterministic counters, immune to the
-wall-clock noise of a shared host.
+wall-clock noise of a shared host.  Finally the residency comparison
+(DESIGN.md §10): ``slot_paged`` keeps chunked's dispatch discipline but
+makes the page pool the device-resident KV store, so its peak
+``kv_resident_bytes`` is the live pages (length-proportional) instead
+of the dense O(B·max_len) batch cache and its ``kv_copy_bytes`` is 0 —
+residency is established by writing int32 block-table rows.
 
 Streaming metrics (the handle/session API): time-to-first-token is the
 harvest time of token 0 (`Request.first_token_t`, when the token hits
@@ -77,8 +83,16 @@ def run_engine(model, params, scheduler: str, workload: List[Dict],
                chunk_tokens: int = 16) -> Dict:
     from repro.serve.engine import ServeEngine
 
+    # The dense schedulers use the pool for ACCOUNTING only, so its size
+    # is pure admission headroom; for slot_paged the pool IS the device
+    # KV store — give it exactly the dense batch cache's HBM budget
+    # (max_batch * max_len positions) so the comparison is same-memory.
+    page_size = 16
+    pool_pages = ((max_batch * max_len + page_size - 1) // page_size
+                  if scheduler == "slot_paged" else 512)
     eng = ServeEngine(model, params, max_batch=max_batch, max_len=max_len,
-                      n_clients=1, pool_pages=512, page_size=16,
+                      n_clients=1, pool_pages=pool_pages,
+                      page_size=page_size,
                       intake_depth=len(workload) + 4, scheduler=scheduler,
                       chunk_tokens=chunk_tokens)
 
@@ -95,6 +109,7 @@ def run_engine(model, params, scheduler: str, workload: List[Dict],
     def one_pass() -> Dict:
         for k in eng.stats:
             eng.stats[k] = 0
+        eng.pool.reset_traffic()
         t0 = time.monotonic()
         for w in workload:
             submitted = eng.submit(0, w["prompt"] % model.cfg.vocab_size,
@@ -162,6 +177,16 @@ def run_engine(model, params, scheduler: str, workload: List[Dict],
             "slot_occupancy": eng.occupancy(),
             "kv_pool": {"n_pages": eng.pool.n_pages,
                         "free_after_drain": eng.pool.free_pages()},
+            # Residency economics (DESIGN.md §10): peak KV bytes a
+            # scheduler actually held for the workload (paged: live
+            # pages; dense: the whole batch cache) and the KV bytes it
+            # COPIED to establish residency (paged: 0 — swap-in is an
+            # int32 block-table row).
+            "kv_resident_bytes_peak": (
+                eng.pool.stats()["kv_resident_bytes_peak"]
+                if scheduler == "slot_paged" else eng.dense_cache_bytes()),
+            "kv_copy_bytes": eng.pool.stats()["kv_copy_bytes"],
+            "dense_cache_bytes": eng.dense_cache_bytes(),
         }
 
     # Best-of-k wall time: scheduling noise on a shared host dwarfs the
@@ -194,7 +219,8 @@ def main(argv=None):
     workload = make_workload(n_requests)
 
     results = {}
-    for sched in ("wave", "slot", "slot_fused", "slot_chunked"):
+    for sched in ("wave", "slot", "slot_fused", "slot_chunked",
+                  "slot_paged"):
         results[sched] = run_engine(model, params, sched, workload,
                                     max_batch=args.max_batch, max_len=96,
                                     chunk_tokens=args.chunk_tokens)
@@ -207,12 +233,15 @@ def main(argv=None):
               f"ring-ops/tok={r['ring_ops_per_token']:.2f}  "
               f"prefill-disp={r['prefill_dispatches']}  "
               f"stall={r['admission_stall_steps']}  "
+              f"kv-resident={r['kv_resident_bytes_peak'] // 1024}KiB  "
+              f"kv-copied={r['kv_copy_bytes'] // 1024}KiB  "
               f"p50={r['lat_ms_p50']:.0f}ms  "
               f"short-p50={r['short_req_lat_ms_p50']:.0f}ms  "
               f"ttft-p50={r['ttft_ms_p50']:.0f}ms  itl-p50={itl}ms")
 
     slot, wave = results["slot"], results["wave"]
     fused, chunked = results["slot_fused"], results["slot_chunked"]
+    paged = results["slot_paged"]
     out = {
         "workload": {"n_requests": n_requests, "max_batch": args.max_batch,
                      "mix": "alternating max_tokens 2 / 24 (prompts 4 / 8) "
@@ -223,6 +252,7 @@ def main(argv=None):
         "slot": slot,
         "slot_fused": fused,
         "slot_chunked": chunked,
+        "slot_paged": paged,
         "speedup": {
             "throughput_tok_per_s": (slot["tok_per_s"] / wave["tok_per_s"]),
             "decode_steps_saved": (wave["decode_steps"]
@@ -266,6 +296,19 @@ def main(argv=None):
                 chunked["admission_stall_steps"]),
             "chunked_ttft_p50_vs_fused": (chunked["ttft_ms_p50"]
                                           / fused["ttft_ms_p50"]),
+            # Paged residency wins (DESIGN.md §10): identical dispatch
+            # discipline to chunked (same deterministic counters) but
+            # peak KV residency is live pages, not the dense batch
+            # cache, and swap/admission copy traffic is zero.
+            "paged_vs_chunked_tok_per_s": (paged["tok_per_s"]
+                                           / chunked["tok_per_s"]),
+            "paged_host_syncs_per_token": paged["host_syncs_per_token"],
+            "paged_kv_resident_vs_dense": (
+                paged["kv_resident_bytes_peak"]
+                / paged["dense_cache_bytes"]),
+            "paged_kv_copy_bytes": paged["kv_copy_bytes"],
+            "chunked_kv_copy_bytes": chunked["kv_copy_bytes"],
+            "fused_kv_copy_bytes": fused["kv_copy_bytes"],
         },
     }
     with open(args.out, "w") as f:
@@ -283,7 +326,13 @@ def main(argv=None):
           f"  syncs/tok vs fused: {sp['chunked_syncs_vs_fused']:.2f}"
           f"  cache copies: {sp['chunked_cache_copy_dispatches']}"
           f"  stall steps: {sp['admission_stall_steps_fused']}"
-          f" -> {sp['admission_stall_steps_chunked']}"
+          f" -> {sp['admission_stall_steps_chunked']}")
+    print(f"paged/chunked throughput: "
+          f"{sp['paged_vs_chunked_tok_per_s']:.2f}x"
+          f"  kv resident vs dense: "
+          f"{sp['paged_kv_resident_vs_dense']:.2f}x"
+          f"  kv copied: {sp['fused_kv_copy_bytes'] // 1024}KiB (fused)"
+          f" -> {sp['paged_kv_copy_bytes']}B (paged)"
           f"  -> {args.out}")
     return out
 

@@ -1,0 +1,157 @@
+"""Pallas paged decode-attention (TPU target, interpret=True on CPU).
+
+The KV history of a sequence lives scattered across fixed-size *pages*
+of a shared pool (``serve/kv_cache.py``); a per-row **block table** maps
+logical position ``t`` to physical page ``block[b, t // page_size]``.
+This kernel attends directly over those scattered pages — the
+vLLM-style paged attention, which is the KV-domain analogue of the
+paper's zero-copy NBB exchange (DESIGN.md §10): instead of gathering a
+sequence's pages into a contiguous per-slot buffer before every decode
+step (a copy-in intermediary), the consumer reads through the
+indirection table and "swap-in" degenerates to writing an int32 row.
+
+Grid = (B, H, P) with the page index innermost: the Pallas pipeline
+keeps two page tiles in flight in VMEM (the familiar two-slot NBB
+discipline), and the *block table is a scalar-prefetch operand* — its
+entries must be known before the kernel body runs because they feed the
+k/v ``index_map`` that steers each page DMA.
+
+Deployment status: the serving path (``layers.attention``'s paged
+branch) currently expresses this same block-table access pattern in
+jnp — on CPU that reference is the only runnable form, and it is what
+keeps token sequences byte-identical to the dense backend.  This
+kernel is the TPU lowering of that read path, validated against
+``ref.paged_attention_ref`` in interpret mode (tests/
+test_kernels_paged.py) and microbenched in benchmarks/bench_kernels.py;
+wiring it behind a backend switch is deliberately left until a real
+TPU target exists to measure on.
+
+Layout: q [B, T, H, hd]; k/v pages [n_pages, page_size, Hkv, hd]
+(one layer's view of the pool).  GQA via the k/v index_map (integer
+division of the head index).  Rows are causally masked to their own
+true length: q token t sits at absolute position ``lens[b] - T + t``
+and attends positions ``<=`` its own.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(block_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *,
+                  page_size: int, n_q: int, softcap: float, scale: float):
+    """Grid = (B, H, P); page index innermost (sequential accumulation)."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lens_ref[b]                                  # true kv extent
+    q_pos = length - n_q + jax.lax.broadcasted_iota(
+        jnp.int32, (n_q, page_size), 0)
+    k_pos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (n_q, page_size), 1)
+
+    # Page-level skip: pages entirely past the row's extent hold other
+    # sequences' (or no) data and must contribute nothing.  Causality
+    # makes the same cut (k_first <= q_last == length - 1).
+    @pl.when(j * page_size < length)
+    def _body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)         # [n_q, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)         # [ps, hd]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = k_pos <= q_pos                             # causal AND valid
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                               # [n_q, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)         # [ps, hd]
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)                   # fully-masked rows
+        o_ref[0, :, 0, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("softcap", "interpret"))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block: jax.Array, lens: jax.Array, *,
+                    softcap: float = 0.0,
+                    interpret: bool = False) -> jax.Array:
+    """Attend q over page-scattered KV via a block table.
+
+    q:        [B, T, H, hd] — the T newest tokens of each row (their KV
+              already written to the pages; positions lens-T .. lens-1).
+    k_pages:  [n_pages, page_size, Hkv, hd] — one layer of the pool.
+    v_pages:  same shape.
+    block:    [B, P] int32 — page ids per row, position-ordered; entries
+              past the row's extent may be stale (they are masked, but
+              must stay in [0, n_pages) so the prefetch DMA is safe).
+    lens:     [B] int32 — true kv length per row (including the T query
+              tokens).  Causal masking is against this, not P*page_size.
+
+    Returns [B, T, H, hd] in q.dtype.
+    """
+    B, T, H, hd = q.shape
+    n_pages, page_size, Hkv, _ = k_pages.shape
+    P = block.shape[1]
+    assert H % Hkv == 0
+    group = H // Hkv
+
+    grid = (B, H, P)
+
+    def q_map(b, h, j, blk, ln):
+        return (b, 0, h, 0)
+
+    def kv_map(b, h, j, blk, ln):
+        return (blk[b, j], 0, h // group, 0)
+
+    kernel = functools.partial(
+        _paged_kernel, page_size=page_size, n_q=T, softcap=softcap,
+        scale=hd ** -0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # block table + lens steer the DMA
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T, 1, hd), q_map),
+            pl.BlockSpec((1, page_size, 1, hd), kv_map),
+            pl.BlockSpec((1, page_size, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, T, 1, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((T, 1), jnp.float32),      # running max
+            pltpu.VMEM((T, 1), jnp.float32),      # running sum
+            pltpu.VMEM((T, hd), jnp.float32),     # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, H, hd), q.dtype),
+        interpret=interpret,
+    )(block.astype(jnp.int32), lens.astype(jnp.int32), q, k_pages, v_pages)

@@ -46,6 +46,45 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(B, T, H, hd).astype(q.dtype)
 
 
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, block: jax.Array,
+                        lens: jax.Array, softcap: float = 0.0) -> jax.Array:
+    """Reference paged attention: dense gather through the block table.
+
+    q: [B, T, H, hd] — the T newest tokens per row (KV already written;
+    q token t sits at absolute position ``lens[b] - T + t``).
+    k_pages/v_pages: [n_pages, page_size, Hkv, hd] (one layer's pool
+    view); block: [B, P] int32 position-ordered page ids; lens: [B]
+    int32 true kv extent per row.  This is the copy-in path the kernel
+    deletes: materialize each row's pages contiguously, then attend.
+    Returns [B, T, H, hd] in q.dtype.
+    """
+    B, T, H, hd = q.shape
+    page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
+    S = block.shape[1] * page_size
+    k = k_pages[block].reshape(B, S, Hkv, hd)      # the dense gather
+    v = v_pages[block].reshape(B, S, Hkv, hd)
+    g = H // Hkv
+    qg = q.reshape(B, T, Hkv, g, hd)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    q_pos = lens[:, None] - T + jnp.arange(T)[None, :]          # [B, T]
+    kv_pos = jnp.arange(S)
+    # One comparison covers causality AND the row's true extent:
+    # kv_pos <= q_pos <= lens - 1 < S.
+    mask = kv_pos[None, None, :] <= q_pos[:, :, None]           # [B, T, S]
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # Fully-masked (idle) rows: every score is -1e30, softmax degrades
+    # to uniform garbage — zero it so idle rows return 0 like the kernel.
+    any_valid = mask.any(axis=-1)[:, None, None, :, None]
+    probs = jnp.where(any_valid, probs, 0.0)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, T, H, hd).astype(q.dtype)
+
+
 def swiglu_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
                w_down: jax.Array) -> jax.Array:
     """Fused SwiGLU MLP oracle: silu(x@Wg) * (x@Wu) @ Wd."""

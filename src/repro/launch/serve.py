@@ -39,11 +39,20 @@ def main(argv=None) -> ServeEngine:
     ap.add_argument("--requests-per-client", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=8)
-    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="decode slots (default 8 for slot_paged — paged "
+                         "residency is length-proportional, so slots are "
+                         "cheap — else 4)")
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--scheduler", default=None,
-                    choices=["slot_chunked", "slot_fused", "slot", "wave"],
-                    help="slot_chunked = chunked zero-copy admission fused "
+                    choices=["slot_paged", "slot_chunked", "slot_fused",
+                             "slot", "wave"],
+                    help="slot_paged = chunked admission + fused decode "
+                         "with the page pool as the device-resident KV "
+                         "store (block-table indirection, zero-copy "
+                         "residency; falls back to slot_chunked/"
+                         "slot_fused for non-pageable archs); "
+                         "slot_chunked = chunked zero-copy admission fused "
                          "into the decode micro-batch (default; falls back "
                          "to slot_fused for recurrent-state archs); "
                          "slot_fused = packet-mode fused K-step decode; "
@@ -65,9 +74,27 @@ def main(argv=None) -> ServeEngine:
         # Chunked admission needs position-indexed caches; recurrent
         # archs (mamba/rwkv) keep the fused monolithic-prefill default.
         scheduler = "slot_chunked" if model.chunkable else "slot_fused"
-    eng = ServeEngine(model, params, max_batch=args.max_batch,
+    if scheduler == "slot_paged" and not model.pageable:
+        # Paged residency needs one uniform position-indexed KV shape.
+        fallback = "slot_chunked" if model.chunkable else "slot_fused"
+        print(f"{cfg.name}: not pageable, falling back to {fallback}")
+        scheduler = fallback
+    # Paged residency is length-proportional, so decode slots are cheap:
+    # the paged default doubles the slot pool on the same HBM budget.
+    max_batch = args.max_batch or (8 if scheduler == "slot_paged" else 4)
+    page_size = 16
+    if scheduler == "slot_paged":
+        # The pool IS the device KV store: size it to exactly the dense
+        # batch cache's position budget (max_batch * max_len) so the
+        # kv-memory report below compares equal allocations — for the
+        # dense schedulers the pool is accounting only, and its page
+        # count is pure admission headroom.
+        pool_pages = (max_batch * args.max_len + page_size - 1) // page_size
+    else:
+        pool_pages = max(256, args.clients * 16)
+    eng = ServeEngine(model, params, max_batch=max_batch,
                       max_len=args.max_len, n_clients=args.clients,
-                      pool_pages=max(256, args.clients * 16),
+                      pool_pages=pool_pages, page_size=page_size,
                       scheduler=scheduler, k_max=args.k_max,
                       chunk_tokens=min(args.chunk_tokens, args.max_len))
     eng_thread = eng.start()
@@ -130,6 +157,17 @@ def main(argv=None) -> ServeEngine:
               f"{eng.stats['admission_stall_steps']}  "
               f"oversize rejects: {len(eng.oversize_log)}  "
               f"kv pool: {eng.pool.stats()}")
+    # KV-memory report (DESIGN.md §10): what residency actually cost.
+    # Paged holds peak-resident page bytes and copies nothing; the dense
+    # schedulers hold the full batch cache and pay admission copies.
+    pstats = eng.pool.stats()
+    dense_b = eng.dense_cache_bytes()
+    resident = (pstats["kv_resident_bytes_peak"]
+                if scheduler == "slot_paged" else dense_b)
+    print(f"kv memory: resident {resident / 1024:.0f} KiB "
+          f"(dense batch cache would be {dense_b / 1024:.0f} KiB, "
+          f"{resident / max(dense_b, 1):.2f}x)  "
+          f"kv copy traffic: {pstats['kv_copy_bytes'] / 1024:.0f} KiB")
     return eng
 
 

@@ -131,6 +131,15 @@ def _shard_cache(c):
     }
 
 
+def is_paged(cache) -> bool:
+    """A *paged* cache view (DESIGN.md §10): the KV pool's page arrays
+    plus a per-row block table, instead of a dense per-slot ring.  The
+    leaves ride the same pytree plumbing as a dense cache, so
+    ``decode_loop``/``chunked_block`` run unmodified over either
+    backend."""
+    return isinstance(cache, dict) and "pages_k" in cache
+
+
 def attention(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array,
               positions: jax.Array,
               window: int = 0,
@@ -176,7 +185,53 @@ def attention(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array,
     q = shard(q, "batch", "seq", "heads", "head_dim")
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and is_paged(cache):
+        # Paged KV residency (DESIGN.md §10): the pool's page arrays ARE
+        # the cache; this row's history is addressed through its block
+        # table.  Writes scatter the T new tokens to (page, offset)
+        # computed on device; reads gather the pages back into position
+        # order so the shared ``attend`` below sees exactly the dense
+        # layout — token sequences stay byte-identical to the dense
+        # backend.  Pages are position-ordered, so a slot's kv position
+        # IS its gather index: no ring arithmetic, no wrap epoch.
+        kp, vp = cache["pages_k"], cache["pages_v"]
+        li, blockt = cache["layer"], cache["block"]
+        n_pages, ps = kp.shape[0], kp.shape[1]
+        cp = jnp.asarray(cache_pos)
+        if cp.ndim == 0:
+            raise ValueError("paged cache requires a [B] vector cache_pos "
+                             "(per-row block tables)")
+        idx = cp[:, None] + jnp.arange(T)                   # [B, T] positions
+        page = jnp.take_along_axis(blockt, idx // ps, axis=1, mode="clip")
+        off = idx % ps
+        k_new = k.astype(kp.dtype)
+        v_new = v.astype(vp.dtype)
+        if write_mask is not None:
+            # Rows not writing this dispatch (idle/dead decode rows, the
+            # padded tail of a final chunk) must DROP their writes: in
+            # the shared pool a masked row's junk write could land in a
+            # page another sequence owns — unlike the dense cache, where
+            # each row's junk stays in its own private rows.  An
+            # out-of-range page index + scatter mode="drop" is the
+            # write-enable.
+            page = jnp.where(write_mask, page, n_pages)
+            total = cp[:, None] + jnp.sum(write_mask, axis=1,
+                                          keepdims=True)   # [B, 1]
+        else:
+            total = cp[:, None] + T
+        kp = kp.at[page, off, li].set(k_new, mode="drop")
+        vp = vp.at[page, off, li].set(v_new, mode="drop")
+        new_cache = {"pages_k": kp, "pages_v": vp, "block": blockt,
+                     "layer": li}
+        S = blockt.shape[1] * ps
+        # Gather ONLY this batch's pages at this layer ([B, P, ps, kv,
+        # hd] — O(B*max_len), not O(n_pages)): the jnp expression of the
+        # Pallas kernel's per-page index_map DMA.
+        k = kp[blockt, :, li].reshape(B, S, nkv, hd)
+        v = vp[blockt, :, li].reshape(B, S, nkv, hd)
+        kv_pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        kv_valid = jnp.arange(S)[None, :] < total           # [B, S]
+    elif cache is not None:
         size = cache["k"].shape[1]
         cp = jnp.asarray(cache_pos)
         if cp.ndim == 0:

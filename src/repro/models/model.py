@@ -31,8 +31,9 @@ from repro.models import mamba2 as m2
 from repro.models import rwkv6 as rw
 from repro.models.config import ModelConfig
 from repro.models.layers import (ParamBuilder, attention, attention_params,
-                                 embed, embed_params, init_kv_cache, mlp,
-                                 mlp_params, rms_norm, unembed_matrix)
+                                 embed, embed_params, init_kv_cache,
+                                 is_paged, mlp, mlp_params, rms_norm,
+                                 unembed_matrix)
 from repro.models.losses import chunked_softmax_xent, full_logits
 from repro.models.moe import moe_block, moe_params
 from repro.parallel.sharding import Axes, shard
@@ -315,7 +316,32 @@ class Model:
         aux = jnp.zeros((), jnp.float32)
         decode = caches is not None
 
+        # Paged KV residency (DESIGN.md §10): the pool page arrays ride
+        # the scan CARRY (every layer scatters into its own [:, :, li]
+        # plane of the same donated buffers) and the layer index rides
+        # the xs — the block table is read-only on device and closed
+        # over.  Only the uniform families are pageable (one KV shape,
+        # position-indexed, no sliding-window ring).
+        paged = decode and is_paged(caches)
+
         if fam == "uniform_attn":
+            if paged:
+                block = caches["block"]
+
+                def pbody(carry, inp):
+                    x, kp, vp = carry
+                    lp, li = inp
+                    out, nc = attn_block(
+                        lp, cfg, x, positions,
+                        cache={"pages_k": kp, "pages_v": vp,
+                               "block": block, "layer": li},
+                        cache_pos=cache_pos, write_mask=write_mask)
+                    return (out, nc["pages_k"], nc["pages_v"]), None
+                (x, kp, vp), _ = jax.lax.scan(
+                    pbody, (x, caches["pages_k"], caches["pages_v"]),
+                    (params["layers"], jnp.arange(cfg.num_layers)))
+                return x, {"pages_k": kp, "pages_v": vp, "block": block}, aux
+
             def body(x, inp):
                 lp, c = inp
                 out, nc = attn_block(lp, cfg, x, positions,
@@ -327,6 +353,23 @@ class Model:
             x, new_caches = jax.lax.scan(f, x, (params["layers"], caches))
 
         elif fam == "uniform_moe":
+            if paged:
+                block = caches["block"]
+
+                def pbody(carry, inp):
+                    x, aux, kp, vp = carry
+                    lp, li = inp
+                    out, nc, a = moe_layer(
+                        lp, cfg, x, positions,
+                        cache={"pages_k": kp, "pages_v": vp,
+                               "block": block, "layer": li},
+                        cache_pos=cache_pos, write_mask=write_mask)
+                    return (out, aux + a, nc["pages_k"], nc["pages_v"]), None
+                (x, aux, kp, vp), _ = jax.lax.scan(
+                    pbody, (x, aux, caches["pages_k"], caches["pages_v"]),
+                    (params["layers"], jnp.arange(cfg.num_layers)))
+                return x, {"pages_k": kp, "pages_v": vp, "block": block}, aux
+
             def body(carry, inp):
                 x, aux = carry
                 lp, c = inp
@@ -598,15 +641,20 @@ class Model:
             return {"super": stacked}
         return caches
 
-    def decode_step(self, params, caches, tokens, pos):
+    def decode_step(self, params, caches, tokens, pos, write_mask=None):
         """tokens: [B, 1]; pos: absolute position — scalar (lockstep wave
         decode) or [B] vector (per-slot continuous batching, where each
-        row advances independently).  Greedy."""
+        row advances independently).  ``write_mask`` [B, 1] gates the
+        cache write per row (required by the paged backend, where a dead
+        row's junk write could land in another sequence's page; the
+        dense backends leave it None — junk stays in the row's own
+        private cache rows).  Greedy."""
         cfg = self.cfg
         pos = jnp.asarray(pos)
         start = pos if pos.ndim == 0 else pos[:, None]      # [B,1] broadcasts
         hidden, new_caches, _ = self.forward(
-            params, tokens, caches=caches, cache_pos=pos, start_pos=start)
+            params, tokens, caches=caches, cache_pos=pos, start_pos=start,
+            write_mask=write_mask)
         w_out = unembed_matrix(params["embed"], cfg).astype(cfg.compute_dtype)
         logits = full_logits(hidden, w_out)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
@@ -647,7 +695,12 @@ class Model:
 
         def body(carry, _):
             caches, cur, pos, rem, alive = carry
-            nxt, caches = self.decode_step(params, caches, cur[:, None], pos)
+            # Paged backend: only alive rows may scatter into the shared
+            # pool (a dense cache tolerates dead-row junk writes because
+            # each row's cache rows are private; pool pages are not).
+            wm = alive[:, None] if is_paged(caches) else None
+            nxt, caches = self.decode_step(params, caches, cur[:, None], pos,
+                                           write_mask=wm)
             emit = jnp.where(alive, nxt, -1)
             pos = jnp.where(alive, pos + 1, pos)
             rem = jnp.where(alive, rem - 1, rem)
@@ -677,6 +730,18 @@ class Model:
         recurrent state (mamba, rwkv) folds every token into one carry
         and cannot be write-masked per position."""
         return self.cfg.ssm is None and self.cfg.rwkv is None
+
+    @property
+    def pageable(self) -> bool:
+        """Paged KV residency (DESIGN.md §10) needs one uniform,
+        position-indexed KV shape per layer so the whole stack shares
+        one page pool: the uniform attention/moe families qualify;
+        heterogeneous stacks (local:global, cross-attn, enc-dec) and
+        recurrent state do not, and a sliding-window ring defeats the
+        linear position->page mapping (and its O(W) residency already
+        is length-bounded)."""
+        return (self._structure() in ("uniform_attn", "uniform_moe")
+                and not self.cfg.sliding_window)
 
     def prefill_chunk_into(self, params, caches, chunk, start, n_valid):
         """Chunked zero-copy prefill (DESIGN.md §9): attend one

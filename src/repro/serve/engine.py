@@ -60,6 +60,26 @@ lock):
                   block (``stats["admission_stall_steps"]`` stays 0,
                   where the monolithic prefill stalls every active slot
                   once per admission).
+  * residency   — ``scheduler="slot_paged"`` keeps the chunked
+                  scheduler's whole dispatch discipline (chunked
+                  admission riding the fused K-step decode block, ONE
+                  dispatch / ONE sync per tick) but deletes the dense
+                  per-slot batch cache: the page pool's ``k``/``v``
+                  arrays are THE device-resident KV store and each slot
+                  holds only an int32 block-table row + a length
+                  (DESIGN.md §10, the vLLM idea as the KV-domain
+                  Virtual-Link analogue).  Decode attends straight
+                  through the block table (expressed in jnp inside the
+                  jitted dispatch; ``kernels/paged_attention.py`` is
+                  the validated Pallas lowering of the same access
+                  pattern for a TPU deployment), new K/V scatters to
+                  (page, offset) computed on device, and
+                  admission/retire/"swap" reduce to editing
+                  int32 rows and bitset pages — zero KV gather/scatter
+                  dispatches at steady state (``kv_copy_bytes == 0``)
+                  and per-slot memory proportional to actual tokens,
+                  not ``max_len``, so ``max_batch`` can rise on the
+                  same HBM budget.
   * streaming   — the client surface is handle-based and per-token
                   (DESIGN.md §5): ``engine.connect(client_id)`` returns
                   the client's :class:`Session`;
@@ -463,7 +483,8 @@ class ServeEngine:
                  intake_depth: int = 32, stream_depth: int = 256,
                  scheduler: str = "slot_fused", k_max: int = 8,
                  k_free: int = 2, chunk_tokens: int = 16):
-        if scheduler not in ("slot_chunked", "slot_fused", "slot", "wave"):
+        if scheduler not in ("slot_paged", "slot_chunked", "slot_fused",
+                             "slot", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if k_max < 1 or k_free < 1:
             raise ValueError(f"need k_max >= 1 and k_free >= 1, "
@@ -476,6 +497,11 @@ class ServeEngine:
                 f"{model.cfg.name}: slot_chunked needs position-indexed "
                 "caches (recurrent mamba/rwkv state cannot be chunk-"
                 "prefilled in place); use scheduler='slot_fused'")
+        if scheduler == "slot_paged" and not model.pageable:
+            raise ValueError(
+                f"{model.cfg.name}: slot_paged needs one uniform position-"
+                "indexed KV shape per layer (no sliding window, no "
+                "recurrent/cross state); use scheduler='slot_chunked'")
         self.model, self.params = model, params
         self.max_batch, self.max_len = max_batch, max_len
         self.scheduler = scheduler
@@ -514,6 +540,9 @@ class ServeEngine:
         # Slot state (iteration-level scheduler).
         self.slots = [DecodeSlot(i) for i in range(max_batch)]
         self._caches = None             # persistent [max_batch, ...] cache
+        # Paged residency (slot_paged): per-slot block-table width.  The
+        # dense batch cache is never allocated; slots are int32 rows.
+        self._max_pages = self.pool.pages_needed(max_len)
         self._cur = np.zeros((max_batch,), np.int32)
         self._pos = np.zeros((max_batch,), np.int32)
         self.stats = {"served": 0, "rejected": 0, "cancelled": 0,
@@ -641,6 +670,49 @@ class ServeEngine:
         if self._caches is None:
             self._caches = self.model.init_cache(self.max_batch, self.max_len)
 
+    def dense_cache_bytes(self) -> int:
+        """Footprint the dense [max_batch, max_len] batch cache WOULD
+        occupy (abstract eval — nothing is allocated): the honest
+        baseline the paged scheduler's ``kv_resident_bytes`` is compared
+        against."""
+        shapes = jax.eval_shape(
+            lambda: self.model.init_cache(self.max_batch, self.max_len))
+        return int(sum(leaf.size * leaf.dtype.itemsize
+                       for leaf in jax.tree.leaves(shapes)))
+
+    # -- paged residency (scheduler="slot_paged", DESIGN.md §10) ---------------
+    def _block_table(self) -> np.ndarray:
+        """Assemble this dispatch's [max_batch, max_pages] block table
+        from the pool's per-sequence page lists.  This int32 write IS
+        the whole "swap-in": residency never moves KV bytes.  Rows of
+        free slots stay 0 — their writes are masked on device and their
+        reads causally masked to length 0."""
+        bt = np.zeros((self.max_batch, self._max_pages), np.int32)
+        for s in self.slots:
+            if s.request is not None:
+                pages = self.pool.table(s.request.req_id).pages
+                bt[s.index, :len(pages)] = pages
+        return bt
+
+    def _take_caches(self):
+        """The cache operand for this dispatch: the persistent dense
+        batch cache, or (paged) a view of the pool's page arrays + the
+        block table.  Both are donated to the dispatch."""
+        if self.scheduler == "slot_paged":
+            return {"pages_k": self.pool.k, "pages_v": self.pool.v,
+                    "block": jnp.asarray(self._block_table())}
+        self._ensure_caches()
+        return self._caches
+
+    def _give_caches(self, caches) -> None:
+        """Re-adopt the dispatch's (donated, updated in place) cache
+        buffers: the pool arrays for paged, the batch cache otherwise."""
+        if self.scheduler == "slot_paged":
+            self.pool.k = caches["pages_k"]
+            self.pool.v = caches["pages_v"]
+        else:
+            self._caches = caches
+
     def _pop_next(self, slot: DecodeSlot) -> Optional[Request]:
         """Pop the next admissible request for ``slot``: pool-full
         requests are rejected (the NBB BUFFER_FULL discipline), requests
@@ -657,7 +729,7 @@ class ServeEngine:
             if status != nbb.OK:
                 return None
             padded = self._bucket(len(req.prompt))
-            if self.scheduler == "slot_chunked":
+            if self.scheduler in ("slot_chunked", "slot_paged"):
                 need = min(self.chunk_tokens, padded)
             else:
                 need = padded + req.max_tokens
@@ -711,6 +783,10 @@ class ServeEngine:
         self._caches = self._jit_write_slot(self._caches, one_cache,
                                             jnp.int32(slot.index))
         self.stats["cache_copy_dispatches"] += 1
+        # Honest copy accounting (DESIGN.md §10): the B=1 side cache is
+        # KV traffic this scheduler pays to establish residency.
+        self.pool.kv_copy_bytes += int(sum(
+            leaf.nbytes for leaf in jax.tree.leaves(one_cache)))
         # ... -> ALLOCATED (KV materialized in this slot's cache rows).
         slot.fsm.transition(states.BUFFER_RESERVED, states.BUFFER_ALLOCATED)
         padded = len(slot.prompt)
@@ -774,7 +850,7 @@ class ServeEngine:
         K=1 baseline); ``slot_chunked`` additionally streams one prompt
         chunk per admitting slot inside the same dispatch.  Returns
         (requests retired, did work)."""
-        if self.scheduler == "slot_chunked":
+        if self.scheduler in ("slot_chunked", "slot_paged"):
             return self._tick_chunked()
         if self.scheduler == "slot_fused":
             return self._tick_fused()
@@ -893,7 +969,7 @@ class ServeEngine:
                 worked = True
         if newly and was_idle:
             self.stats["batches"] += 1      # new busy period begins
-        if self.scheduler != "slot_chunked":
+        if self.scheduler not in ("slot_chunked", "slot_paged"):
             for slot in newly:
                 self._prefill_slot(slot)
         return worked
@@ -996,7 +1072,14 @@ class ServeEngine:
         jitted dispatch and ONE host fetch — admission costs zero
         dedicated syncs, zero cache-copy dispatches, and stalls active
         decode by zero steps (the monolithic path stalls every active
-        slot once per admission and pays a sync + copy dispatch)."""
+        slot once per admission and pays a sync + copy dispatch).
+
+        ``slot_paged`` shares this tick verbatim — the only difference
+        is the cache operand (``_take_caches``): pool page arrays + the
+        per-slot block table instead of the dense batch cache, so the
+        same dispatch discipline gains length-proportional residency
+        and zero-copy swap-in (DESIGN.md §10).  Token sequences are
+        byte-identical across slot_fused/slot_chunked/slot_paged."""
         served = 0
         worked = self._sweep_in()
         B, C = self.max_batch, self.chunk_tokens
@@ -1030,7 +1113,7 @@ class ServeEngine:
                   if s.request is not None and s.generated > 0]
         if not chunks and not active:
             return served, worked
-        self._ensure_caches()
+        caches = self._take_caches()
         pos_v = self._pos.copy()
         for s, v, _ in chunks:
             # Streaming rows pass their POST-chunk extent: the decode
@@ -1070,24 +1153,25 @@ class ServeEngine:
         t0 = time.monotonic()
         tok_pf = blk = None
         if chunks and k:
-            tok_dev, blk_dev, self._caches = self._chunked_fn(k)(
-                self.params, self._caches, jnp.asarray(chunk),
+            tok_dev, blk_dev, caches = self._chunked_fn(k)(
+                self.params, caches, jnp.asarray(chunk),
                 jnp.asarray(start_v), jnp.asarray(nval_v),
                 jnp.asarray(self._cur), jnp.asarray(pos_v),
                 jnp.asarray(rem_v), jnp.asarray(eos_v))
             tok_pf = np.asarray(tok_dev)
             blk = np.asarray(blk_dev).astype(np.int64)
         elif chunks:
-            tok_dev, self._caches = self._chunked_fn(0)(
-                self.params, self._caches, jnp.asarray(chunk),
+            tok_dev, caches = self._chunked_fn(0)(
+                self.params, caches, jnp.asarray(chunk),
                 jnp.asarray(start_v), jnp.asarray(nval_v))
             tok_pf = np.asarray(tok_dev)
         else:
-            blk_dev, self._caches = self._loop_fn(k)(
-                self.params, self._caches, jnp.asarray(self._cur),
+            blk_dev, caches = self._loop_fn(k)(
+                self.params, caches, jnp.asarray(self._cur),
                 jnp.asarray(pos_v), jnp.asarray(rem_v),
                 jnp.asarray(eos_v))
             blk = np.asarray(blk_dev).astype(np.int64)
+        self._give_caches(caches)
         self.stats["host_syncs"] += 1   # ONE fetch covers chunk AND block
         if chunks:
             self.stats["prefills"] += 1

@@ -477,3 +477,55 @@ else:
             for _ in range(k):
                 bits, _ = bitset.claim_first_free(bits, n)
             assert int(bitset.count(bits)) == k
+
+        @given(
+            nslots=st.integers(4, 48),
+            n_threads=st.integers(2, 5),
+            ops=st.integers(5, 40),
+            starts=st.lists(st.integers(0, 47), min_size=5, max_size=5),
+        )
+        @settings(max_examples=25, deadline=None)
+        def test_host_bitset_claim_release_race_never_double_allocates(
+                self, nslots, n_threads, ops, starts):
+            """The page-allocator Safety property under REAL thread races
+            (DESIGN.md §10 relies on it: a double-allocated page would
+            hand one KV page to two sequences).  Each thread hammers
+            claim/release from a hypothesis-chosen probe start; at every
+            claim it checks the slot was not already held by anyone, and
+            at the barrier all held sets must be disjoint and the free
+            count exact."""
+            b = bitset.HostBitset(nslots)
+            holders = [set() for _ in range(n_threads)]
+            violations: list = []
+            barrier = threading.Barrier(n_threads)
+
+            def worker(tid):
+                mine = holders[tid]
+                barrier.wait()
+                for i in range(ops):
+                    slot = b.try_claim(owner=object(),
+                                       start=starts[tid % len(starts)]
+                                       % nslots)
+                    if slot is not None:
+                        if slot in mine:
+                            violations.append(("self-dup", tid, slot))
+                        mine.add(slot)
+                    # release roughly half of what we hold, keep churning
+                    if mine and i % 2:
+                        b.release(mine.pop())
+
+            threads = [threading.Thread(target=worker, args=(t,))
+                       for t in range(n_threads)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert not violations, violations
+            seen: set = set()
+            for mine in holders:
+                assert not (mine & seen), "double-allocated page"
+                seen |= mine
+            assert b.count() == len(seen)
+            for s in seen:          # full cleanup releases every claim
+                b.release(s)
+            assert b.count() == 0

@@ -1,0 +1,85 @@
+"""Paged-attention kernel vs its jnp oracle (interpret mode on CPU):
+block-table indirection, causal masking to each row's true length,
+page-boundary extents, GQA group sizes, and garbage-page immunity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.paged_attention import paged_attention
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _setup(seed, B, T, H, Hkv, hd, n_pages, ps, P, lens):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(n_pages, ps, Hkv, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_pages, ps, Hkv, hd)), jnp.float32)
+    # rows own disjoint scattered pages — the pool allocator's invariant
+    block = jnp.asarray(rng.permutation(n_pages)[:B * P].reshape(B, P),
+                        jnp.int32)
+    return q, kp, vp, block, jnp.asarray(lens, jnp.int32)
+
+
+def _check(q, kp, vp, block, lens):
+    out = paged_attention(q, kp, vp, block, lens, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, block, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    return out
+
+
+def test_decode_single_query():
+    """T=1 against scattered pages — the steady-state decode shape."""
+    _check(*_setup(0, B=3, T=1, H=4, Hkv=2, hd=32, n_pages=32, ps=8, P=4,
+                   lens=[9, 1, 31]))
+
+
+def test_chunk_query_causal_within_chunk():
+    """T=8 (a prompt chunk): later chunk tokens see earlier ones, all
+    masked to the row's true extent."""
+    _check(*_setup(1, B=2, T=8, H=4, Hkv=4, hd=16, n_pages=24, ps=8, P=3,
+                   lens=[8, 20]))
+
+
+@pytest.mark.parametrize("H,Hkv", [(8, 1), (6, 2), (9, 3)])
+def test_gqa_group_sizes(H, Hkv):
+    _check(*_setup(2, B=2, T=1, H=H, Hkv=Hkv, hd=16, n_pages=16, ps=4, P=4,
+                   lens=[5, 13]))
+
+
+@pytest.mark.parametrize("length", [7, 8, 9])
+def test_page_boundary_extents(length):
+    """Rows ending just before / exactly at / just past a page boundary
+    (ps=8) mask precisely to their extent."""
+    _check(*_setup(3, B=1, T=1, H=2, Hkv=2, hd=16, n_pages=8, ps=8, P=4,
+                   lens=[length]))
+
+
+def test_garbage_pages_cannot_leak():
+    """Entries past a row's extent point at pages FULL of other data;
+    the output must depend only on the row's own prefix."""
+    q, kp, vp, block, lens = _setup(4, B=2, T=1, H=4, Hkv=2, hd=16,
+                                    n_pages=32, ps=4, P=8, lens=[6, 10])
+    out = paged_attention(q, kp, vp, block, lens, interpret=True)
+    # Redirect every out-of-extent block entry to a poison page.
+    poison = jnp.full((1,) + kp.shape[1:], 1e4, kp.dtype)
+    kp2 = jnp.concatenate([kp, poison])
+    vp2 = jnp.concatenate([vp, poison])
+    used = (np.asarray(lens)[:, None] > np.arange(8) * 4)
+    block2 = jnp.asarray(np.where(used, np.asarray(block), kp.shape[0]),
+                         jnp.int32)
+    out2 = paged_attention(q, kp2, vp2, block2, lens, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_zero_length_row_outputs_zero():
+    """A free slot (lens=0, block row all zeros) is fully masked: the
+    kernel emits exact zeros instead of softmax-of-nothing garbage."""
+    q, kp, vp, block, lens = _setup(5, B=2, T=1, H=2, Hkv=2, hd=16,
+                                    n_pages=16, ps=4, P=4, lens=[0, 11])
+    block = block.at[0].set(0)
+    out = _check(q, kp, vp, block, lens)
+    np.testing.assert_array_equal(np.asarray(out[0]), 0.0)

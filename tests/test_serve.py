@@ -16,6 +16,15 @@ from repro.serve.kv_cache import OK, POOL_FULL, PagedKVPool
 jax.config.update("jax_platform_name", "cpu")
 
 
+def _occupancy(pool):
+    """Pool stats minus the monotonic traffic counters (kv_copy_bytes,
+    resident peak): the stable "pages not leaked" comparison."""
+    s = pool.stats()
+    s.pop("kv_copy_bytes")
+    s.pop("kv_resident_bytes_peak")
+    return s
+
+
 # ---------------------------------------------------------------------------
 # paged pool
 # ---------------------------------------------------------------------------
@@ -289,7 +298,7 @@ def test_cancel_mid_decode_frees_kv_and_keeps_batcher_alive(engine_setup):
     cfg, model, params = engine_setup
     eng = ServeEngine(model, params, max_batch=2, max_len=64, n_clients=1,
                       pool_pages=256, scheduler="slot")
-    baseline = eng.pool.stats()
+    baseline = _occupancy(eng.pool)
     session = eng.connect(0)
     h = session.submit_i(np.arange(4) % cfg.vocab_size, max_tokens=40)
     for _ in range(4):
@@ -299,7 +308,7 @@ def test_cancel_mid_decode_frees_kv_and_keeps_batcher_alive(engine_setup):
     assert h.cancel() is True
     assert h.cancel() is False          # exactly one winning proposal
     eng.tick()                          # abort sweep runs this tick
-    assert eng.pool.stats() == baseline, "KV pages not returned"
+    assert _occupancy(eng.pool) == baseline, "KV pages not returned"
     assert eng.stats["cancelled"] == 1
     r = h.wait(timeout_s=10)
     assert r.fsm.state == states.REQUEST_CANCELLED
@@ -309,7 +318,7 @@ def test_cancel_mid_decode_frees_kv_and_keeps_batcher_alive(engine_setup):
     eng.step()
     r2 = h2.wait(timeout_s=10)
     assert r2 and r2.fsm.state == states.REQUEST_COMPLETED
-    assert eng.pool.stats() == baseline
+    assert _occupancy(eng.pool) == baseline
     for slot in eng.slots:
         assert slot.fsm.state == states.BUFFER_FREE
 
@@ -520,7 +529,7 @@ def test_fused_cancel_mid_decode_bounded_by_one_block(engine_setup):
     cfg, model, params = engine_setup
     eng = ServeEngine(model, params, max_batch=2, max_len=64, n_clients=1,
                       pool_pages=256, scheduler="slot_fused")
-    baseline = eng.pool.stats()
+    baseline = _occupancy(eng.pool)
     session = eng.connect(0)
     h = session.submit_i(np.arange(4) % cfg.vocab_size, max_tokens=40)
     for _ in range(3):
@@ -528,7 +537,7 @@ def test_fused_cancel_mid_decode_bounded_by_one_block(engine_setup):
     assert eng.slots[0].request is not None
     assert h.cancel() is True
     eng.tick()                          # abort sweep: next block boundary
-    assert eng.pool.stats() == baseline, "KV pages not returned"
+    assert _occupancy(eng.pool) == baseline, "KV pages not returned"
     r = h.wait(timeout_s=10)
     assert r.fsm.state == states.REQUEST_CANCELLED
     assert 0 < len(r.tokens_out) < 40
@@ -536,7 +545,7 @@ def test_fused_cancel_mid_decode_bounded_by_one_block(engine_setup):
     eng.step()
     r2 = h2.wait(timeout_s=10)
     assert r2 and r2.fsm.state == states.REQUEST_COMPLETED
-    assert eng.pool.stats() == baseline
+    assert _occupancy(eng.pool) == baseline
 
 
 def test_note_tokens_per_block_matches_per_step():
@@ -803,7 +812,7 @@ def test_chunked_cancel_mid_stream_releases_reserved_slot(engine_setup):
     eng = ServeEngine(model, params, max_batch=2, max_len=128, n_clients=1,
                       pool_pages=256, scheduler="slot_chunked",
                       chunk_tokens=4)
-    baseline = eng.pool.stats()
+    baseline = _occupancy(eng.pool)
     session = eng.connect(0)
     h1 = session.submit_i(np.arange(4) % cfg.vocab_size, max_tokens=20)
     for _ in range(3):
@@ -823,7 +832,7 @@ def test_chunked_cancel_mid_stream_releases_reserved_slot(engine_setup):
         eng.tick()
     r1 = h1.wait(timeout_s=10)
     assert len(r1.tokens_out) == 20
-    assert eng.pool.stats() == baseline
+    assert _occupancy(eng.pool) == baseline
     for slot in eng.slots:
         assert slot.fsm.state == states.BUFFER_FREE
 
