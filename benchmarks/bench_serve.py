@@ -40,6 +40,17 @@ responses only, so its TTFT *is* its completion latency — the gap
 between slot TTFT p50 and whole-response p50 is what the streaming API
 buys.
 
+Prefix-sharing comparison (DESIGN.md §11): a chat-style workload — N
+sessions that all open with the same long system prompt — runs through
+``slot_paged`` with the prefix cache on and off.  With it on, every
+session after the first adopts the cached prefix pages (refcount
+increments + int32 block-table rows) and prefills only its own suffix:
+``prefill_chunks`` collapses, peak residency counts each shared
+physical page once, and the only KV bytes ever copied are the
+copy-on-write pages where a session diverges inside a shared page
+(``cow_copy_bytes``).  Token sequences are asserted byte-identical
+cache-on vs cache-off, on this workload AND the mixed workload above.
+
 Usage:  PYTHONPATH=src python benchmarks/bench_serve.py [--quick]
 Emits:  BENCH_serve.json (cwd)
 """
@@ -78,9 +89,25 @@ def make_workload(n_requests: int, seed: int = 0) -> List[Dict]:
     return work
 
 
+def make_prefix_workload(n_sessions: int, system_len: int = 116,
+                         user_len: int = 4, seed: int = 1) -> List[Dict]:
+    """Chat-style prefix-heavy workload: every session opens with the
+    SAME ``system_len``-token system prompt and appends a distinct short
+    user turn (prompts bucket to 128).  With chunk_tokens=8 the deepest
+    shared chunk extent lands mid-page (120 of page_size 16), so every
+    hit both adopts seven whole shared pages AND copy-on-writes exactly
+    the one page it diverges inside."""
+    rng = np.random.default_rng(seed)
+    system = rng.integers(0, 1000, system_len)
+    return [{"prompt": np.concatenate([system,
+                                       rng.integers(0, 1000, user_len)]),
+             "max_tokens": 16} for _ in range(n_sessions)]
+
+
 def run_engine(model, params, scheduler: str, workload: List[Dict],
                max_batch: int, max_len: int, repeats: int = 2,
-               chunk_tokens: int = 16) -> Dict:
+               chunk_tokens: int = 16, prefix_cache: bool = True,
+               pool_pages: int = None) -> Dict:
     from repro.serve.engine import ServeEngine
 
     # The dense schedulers use the pool for ACCOUNTING only, so its size
@@ -88,13 +115,14 @@ def run_engine(model, params, scheduler: str, workload: List[Dict],
     # KV store — give it exactly the dense batch cache's HBM budget
     # (max_batch * max_len positions) so the comparison is same-memory.
     page_size = 16
-    pool_pages = ((max_batch * max_len + page_size - 1) // page_size
-                  if scheduler == "slot_paged" else 512)
+    if pool_pages is None:
+        pool_pages = ((max_batch * max_len + page_size - 1) // page_size
+                      if scheduler == "slot_paged" else 512)
     eng = ServeEngine(model, params, max_batch=max_batch, max_len=max_len,
                       n_clients=1, pool_pages=pool_pages,
                       page_size=page_size,
                       intake_depth=len(workload) + 4, scheduler=scheduler,
-                      chunk_tokens=chunk_tokens)
+                      chunk_tokens=chunk_tokens, prefix_cache=prefix_cache)
 
     # Warmup: trace prefill/decode shapes outside the timed region.
     for w in workload[:2]:
@@ -109,20 +137,27 @@ def run_engine(model, params, scheduler: str, workload: List[Dict],
     def one_pass() -> Dict:
         for k in eng.stats:
             eng.stats[k] = 0
+        if eng.prefix_cache is not None:
+            eng.prefix_cache.clear()    # every pass measures a cold cache
         eng.pool.reset_traffic()
         t0 = time.monotonic()
+        rids = []
         for w in workload:
             submitted = eng.submit(0, w["prompt"] % model.cfg.vocab_size,
                                    max_tokens=w["max_tokens"])
             assert submitted is not None, "intake ring full mid-benchmark"
+            rids.append(submitted.req_id)
         while eng.stats["served"] + eng.stats["rejected"] < len(workload):
             eng.step()
         dt = time.monotonic() - t0
 
         lat, toks, short_lat, ttft, itl = [], 0, [], [], []
+        seqs: Dict[int, List[int]] = {}
         for _ in range(len(workload)):
             r = eng.get_response(0, timeout_s=10)
             assert r, "response timed out"
+            seqs[r.req_id] = (list(map(int, r.tokens_out))
+                              if r.tokens_out is not None else [])
             lat.append(r.done_t - r.submit_t)
             # rejected/cancelled terminals never set first_token_t
             ttft.append((r.first_token_t or r.done_t) - r.submit_t)
@@ -187,6 +222,19 @@ def run_engine(model, params, scheduler: str, workload: List[Dict],
                 if scheduler == "slot_paged" else eng.dense_cache_bytes()),
             "kv_copy_bytes": eng.pool.stats()["kv_copy_bytes"],
             "dense_cache_bytes": eng.dense_cache_bytes(),
+            # Prefix-sharing counters (DESIGN.md §11): admissions that
+            # adopted cached pages, the prefill tokens those hits
+            # skipped, the most physical pages ever multiply-referenced
+            # at once, and the CoW share of kv_copy_bytes.
+            "prefix_hits": eng.stats["prefix_hits"],
+            "prefill_tokens_saved": eng.stats["prefill_tokens_saved"],
+            "shared_pages_peak": eng.pool.stats()["shared_pages_peak"],
+            "cow_copy_bytes": eng.pool.stats()["cow_copy_bytes"],
+            "pool_pages": eng.pool.n_pages,
+            # Token sequences in submission order: the byte-identity
+            # gate compares these across cache on/off (stripped from the
+            # JSON artifact).
+            "_token_seqs": [seqs[r] for r in rids],
         }
 
     # Best-of-k wall time: scheduling noise on a shared host dwarfs the
@@ -239,6 +287,62 @@ def main(argv=None):
               f"short-p50={r['short_req_lat_ms_p50']:.0f}ms  "
               f"ttft-p50={r['ttft_ms_p50']:.0f}ms  itl-p50={itl}ms")
 
+    # Byte-identity gate on the mixed workload: the prefix cache must
+    # never change tokens, only skip dispatches.
+    paged_off_mixed = run_engine(model, params, "slot_paged", workload,
+                                 max_batch=args.max_batch, max_len=96,
+                                 chunk_tokens=args.chunk_tokens,
+                                 prefix_cache=False, repeats=1)
+    mixed_identity = (results["slot_paged"]["_token_seqs"]
+                      == paged_off_mixed["_token_seqs"])
+    assert mixed_identity, "prefix cache changed tokens (mixed workload)"
+
+    # Prefix-heavy chat workload: N sessions, one shared system prompt.
+    # The cache-on pool is sized to what EIGHT dense-equivalent
+    # sequences would hold (8 * max_len positions) — sharing must admit
+    # all N concurrently on it; cache-off gets the dense-equivalent pool
+    # for N so the comparison measures dispatches and residency, not
+    # rejections.
+    n_sessions = 8 if args.quick else 32
+    prefix_len, prefix_cap = 160, 8
+    pw = make_prefix_workload(n_sessions)
+    shared_pool = prefix_cap * prefix_len // 16
+    dense_pool = n_sessions * ((128 + 16 + 15) // 16) + 16
+    pre_kw = dict(max_batch=n_sessions, max_len=prefix_len, chunk_tokens=8,
+                  repeats=1 if args.quick else 2)
+    pre_on = run_engine(model, params, "slot_paged", pw,
+                        pool_pages=shared_pool, **pre_kw)
+    pre_off = run_engine(model, params, "slot_paged", pw,
+                         prefix_cache=False,
+                         pool_pages=max(shared_pool, dense_pool), **pre_kw)
+    assert pre_on["_token_seqs"] == pre_off["_token_seqs"], \
+        "prefix cache changed tokens (prefix workload)"
+    assert pre_on["served"] == n_sessions and pre_on["rejected"] == 0, \
+        "sharing failed to admit every session on the shared pool"
+    chunks_ratio = (pre_off["prefill_chunks"]
+                    / max(pre_on["prefill_chunks"], 1))
+    prefix_out = {
+        "workload": {"n_sessions": n_sessions,
+                     "mix": "116-token shared system prompt + 4 distinct "
+                            "user tokens (bucket 128), 16 generated",
+                     "chunk_tokens": 8,
+                     "pool_pages_on": pre_on["pool_pages"],
+                     "pool_pages_off": pre_off["pool_pages"]},
+        "on": pre_on, "off": pre_off,
+        "prefill_chunks_ratio": chunks_ratio,
+        "prefill_tokens_saved": pre_on["prefill_tokens_saved"],
+        "prefix_hits": pre_on["prefix_hits"],
+        "shared_pages_peak": pre_on["shared_pages_peak"],
+        "cow_copy_bytes": pre_on["cow_copy_bytes"],
+        "cow_is_only_copy_traffic": (pre_on["kv_copy_bytes"]
+                                     == pre_on["cow_copy_bytes"]),
+        "kv_resident_peak_ratio": (pre_off["kv_resident_bytes_peak"]
+                                   / max(pre_on["kv_resident_bytes_peak"],
+                                         1)),
+        "tokens_identical": True,
+        "mixed_tokens_identical": mixed_identity,
+    }
+
     slot, wave = results["slot"], results["wave"]
     fused, chunked = results["slot_fused"], results["slot_chunked"]
     paged = results["slot_paged"]
@@ -253,6 +357,7 @@ def main(argv=None):
         "slot_fused": fused,
         "slot_chunked": chunked,
         "slot_paged": paged,
+        "prefix_sharing": prefix_out,
         "speedup": {
             "throughput_tok_per_s": (slot["tok_per_s"] / wave["tok_per_s"]),
             "decode_steps_saved": (wave["decode_steps"]
@@ -311,6 +416,8 @@ def main(argv=None):
             "fused_kv_copy_bytes": fused["kv_copy_bytes"],
         },
     }
+    for r in (wave, slot, fused, chunked, paged, pre_on, pre_off):
+        r.pop("_token_seqs", None)      # identity already asserted
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     sp = out["speedup"]
@@ -332,7 +439,18 @@ def main(argv=None):
           f"  kv resident vs dense: "
           f"{sp['paged_kv_resident_vs_dense']:.2f}x"
           f"  kv copied: {sp['fused_kv_copy_bytes'] // 1024}KiB (fused)"
-          f" -> {sp['paged_kv_copy_bytes']}B (paged)"
+          f" -> {sp['paged_kv_copy_bytes']}B (paged)")
+    po = prefix_out
+    print(f"prefix sharing ({n_sessions} sessions): "
+          f"prefill chunks {po['off']['prefill_chunks']}"
+          f" -> {po['on']['prefill_chunks']}"
+          f" ({po['prefill_chunks_ratio']:.1f}x)"
+          f"  hits {po['prefix_hits']}"
+          f"  tokens saved {po['prefill_tokens_saved']}"
+          f"  shared pages peak {po['shared_pages_peak']}"
+          f"  kv peak {po['off']['kv_resident_bytes_peak'] // 1024}KiB"
+          f" -> {po['on']['kv_resident_bytes_peak'] // 1024}KiB"
+          f"  cow {po['cow_copy_bytes'] // 1024}KiB"
           f"  -> {args.out}")
     return out
 

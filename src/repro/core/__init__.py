@@ -4,10 +4,11 @@ Modules:
   nbb        — Non-Blocking Buffer (event messages, SPSC FIFO ring)
   nbw        — Non-Blocking Write protocol (state messages)
   bitset     — lock-free slot allocator (replaces lock-free linked lists)
+  refcount   — refcounted generalization of the bitset (shared KV pages)
   states     — CAS finite-state machines for request/buffer lifecycles
   host_queue — SPSC/MPSC compositions + the lock-based baseline
   transport  — unified send/try_recv/drain protocol + Table-1 backoff
   channels   — MCAPI-style domains/nodes/endpoints/channels (host + device)
 """
 from repro.core import (bitset, channels, host_queue, nbb, nbw,  # noqa: F401
-                        states, transport)
+                        refcount, states, transport)

@@ -64,6 +64,13 @@ def main(argv=None) -> ServeEngine:
     ap.add_argument("--chunk-tokens", type=int, default=16,
                     help="prompt tokens streamed per dispatch "
                          "(slot_chunked)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the shared-prefix page cache "
+                         "(slot_paged): every prompt prefills cold even "
+                         "when its prefix KV is already resident")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="tokens of a common system prompt prepended to "
+                         "every request (exercises the prefix cache)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -96,7 +103,8 @@ def main(argv=None) -> ServeEngine:
                       max_len=args.max_len, n_clients=args.clients,
                       pool_pages=pool_pages, page_size=page_size,
                       scheduler=scheduler, k_max=args.k_max,
-                      chunk_tokens=min(args.chunk_tokens, args.max_len))
+                      chunk_tokens=min(args.chunk_tokens, args.max_len),
+                      prefix_cache=not args.no_prefix_cache)
     eng_thread = eng.start()
 
     # One private SPSC result ring per client (client thread produces,
@@ -105,11 +113,16 @@ def main(argv=None) -> ServeEngine:
     results = [SpscQueue(args.requests_per_client + 1)
                for _ in range(args.clients)]
 
+    # Optional shared system prompt: identical across every client, so
+    # with the prefix cache on only the first prefill pays for it.
+    shared = (np.arange(args.shared_prefix_len) * 7 + 3) % cfg.vocab_size
+
     def client(c: int) -> None:
         rng = np.random.default_rng(c)
         session = eng.connect(c)
         for _ in range(args.requests_per_client):
-            prompt = rng.integers(0, cfg.vocab_size, args.prompt_len)
+            prompt = np.concatenate([
+                shared, rng.integers(0, cfg.vocab_size, args.prompt_len)])
             # submit_i never blocks: a full intake ring just leaves the
             # handle PENDING and its own polling retries the send.
             handle = session.submit_i(prompt, max_tokens=args.max_tokens)
@@ -168,6 +181,18 @@ def main(argv=None) -> ServeEngine:
           f"(dense batch cache would be {dense_b / 1024:.0f} KiB, "
           f"{resident / max(dense_b, 1):.2f}x)  "
           f"kv copy traffic: {pstats['kv_copy_bytes'] / 1024:.0f} KiB")
+    # Prefix-sharing report (DESIGN.md §11): what the cache bought.
+    if eng.prefix_cache is not None:
+        cstats = eng.prefix_cache.stats()
+        looked = cstats["hits"] + cstats["misses"]
+        rate = cstats["hits"] / looked if looked else 0.0
+        print(f"prefix cache: hit rate {rate:.2f} "
+              f"({cstats['hits']}/{looked} lookups)  "
+              f"prefill tokens saved {eng.stats['prefill_tokens_saved']}  "
+              f"entries {cstats['entries']} "
+              f"(evictions {cstats['evictions']})  "
+              f"shared pages peak {pstats['shared_pages_peak']}  "
+              f"cow copies {pstats['cow_copy_bytes'] / 1024:.0f} KiB")
     return eng
 
 

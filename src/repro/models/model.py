@@ -22,10 +22,12 @@ cross-attn) scan over *superblocks*.  Every train-mode block is wrapped in
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import mamba2 as m2
 from repro.models import rwkv6 as rw
@@ -829,6 +831,32 @@ class Model:
         logits = full_logits(hidden[:, -1:], w_out)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_tok, new_caches
+
+
+def prefix_chunk_hashes(tokens, chunk_tokens: int):
+    """Chained hashes of the chunk-aligned prefixes of a token stream.
+
+    Returns one digest per *full* chunk: ``out[d]`` identifies the
+    prefix ``tokens[:(d + 1) * chunk_tokens]``, with each chunk's hash
+    folding in its predecessor's so equal digests imply equal whole
+    prefixes (not just equal chunks).  The engine hashes the bucketed,
+    LEFT-PADDED prompt stream — padding is part of the content, which
+    makes "same digest" exactly the condition under which two sequences'
+    KV pages are interchangeable: causal attention over identical tokens
+    at identical absolute positions (DESIGN.md §11).
+
+    Host-side and model-free on purpose: the digest keys *which prefill
+    dispatches can be skipped*, so it must be computable before any
+    device work for the request exists.
+    """
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    out = []
+    h = hashlib.blake2b(str(chunk_tokens).encode(), digest_size=16)
+    for d in range(len(toks) // chunk_tokens):
+        h = h.copy()
+        h.update(toks[d * chunk_tokens:(d + 1) * chunk_tokens].tobytes())
+        out.append(int.from_bytes(h.digest(), "little"))
+    return out
 
 
 def _fill_scan(layers, caches, cfg, source):

@@ -98,6 +98,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 import threading
 import time
 from collections import deque
@@ -109,8 +110,9 @@ import numpy as np
 
 from repro.core import nbb, states, transport
 from repro.core.host_queue import MpscQueue, SpscQueue
+from repro.models.model import prefix_chunk_hashes
 from repro.serve.kv_cache import OK as POOL_OK
-from repro.serve.kv_cache import PagedKVPool
+from repro.serve.kv_cache import PagedKVPool, PrefixCache
 
 
 @dataclasses.dataclass
@@ -457,6 +459,17 @@ class DecodeSlot:
     outs: Optional[np.ndarray] = None
     prompt: Optional[np.ndarray] = None  # bucketed prompt being prefilled
     prefill_pos: int = 0                # prompt tokens streamed so far
+    # Prefix sharing (slot_paged + prefix cache, DESIGN.md §11): the
+    # bound prompt's chained chunk hashes (registered in-flight so burst
+    # duplicates defer instead of prefilling cold) and the not-yet-
+    # cacheable (ready_at, key, n_tokens) insertions, consumed in order
+    # as the written extent passes each entry's last page.
+    chunk_hashes: Optional[List[int]] = None
+    pending_prefix: List[Tuple[int, int, int]] = dataclasses.field(
+        default_factory=list)
+    # Keys whose cache entries THIS binding created — rolled back on
+    # abort/reject so an all-or-nothing admission leaves no residue.
+    created_prefixes: List[int] = dataclasses.field(default_factory=list)
 
 
 def _write_slot_caches(full, one, slot):
@@ -482,7 +495,8 @@ class ServeEngine:
                  pool_pages: int = 64, page_size: int = 16,
                  intake_depth: int = 32, stream_depth: int = 256,
                  scheduler: str = "slot_fused", k_max: int = 8,
-                 k_free: int = 2, chunk_tokens: int = 16):
+                 k_free: int = 2, chunk_tokens: int = 16,
+                 prefix_cache: bool = True):
         if scheduler not in ("slot_paged", "slot_chunked", "slot_fused",
                              "slot", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
@@ -545,6 +559,18 @@ class ServeEngine:
         self._max_pages = self.pool.pages_needed(max_len)
         self._cur = np.zeros((max_batch,), np.int32)
         self._pos = np.zeros((max_batch,), np.int32)
+        # Prefix sharing (DESIGN.md §11): chained chunk hashes of the
+        # bucketed prompt stream -> resident page runs.  Only the paged
+        # scheduler can share (dense rows are per-slot by construction).
+        self.prefix_cache = (PrefixCache(self.pool)
+                             if scheduler == "slot_paged" and prefix_cache
+                             else None)
+        # Burst dedup: requests whose whole shareable prefix is being
+        # prefilled by a bound slot RIGHT NOW wait here instead of
+        # prefilling the same chunks cold (batcher-thread only).
+        self._deferred: List[Tuple[Request, List[int]]] = []
+        self._inflight: Dict[int, int] = {}   # chunk hash -> bound slots
+        self._pending_bind: Dict[int, Tuple[List[int], int]] = {}
         self.stats = {"served": 0, "rejected": 0, "cancelled": 0,
                       "batches": 0, "decode_steps": 0, "admitted": 0,
                       "prefills": 0, "slot_busy_steps": 0,
@@ -561,7 +587,11 @@ class ServeEngine:
                       # chunks ride the decode dispatch).
                       "prefill_dispatches": 0, "prefill_chunks": 0,
                       "cache_copy_dispatches": 0,
-                      "admission_stall_steps": 0}
+                      "admission_stall_steps": 0,
+                      # Prefix-sharing counters (DESIGN.md §11):
+                      # admissions that adopted cached pages and the
+                      # prompt positions those hits never dispatched.
+                      "prefix_hits": 0, "prefill_tokens_saved": 0}
         # Append-only log of fail-fast oversize rejects (written by
         # client threads in submit_i; list.append is the atomic).
         self.oversize_log: List[int] = []
@@ -655,6 +685,15 @@ class ServeEngine:
             b *= 2
         return b
 
+    def _padded_prompt(self, req: Request) -> np.ndarray:
+        """The bucketed, left-padded token stream a slot actually
+        prefills — also the stream prefix hashes are computed over, so
+        padding is part of the hashed content (DESIGN.md §11)."""
+        padded = self._bucket(len(req.prompt))
+        prompt = np.zeros((padded,), np.int32)
+        prompt[padded - len(req.prompt):] = req.prompt      # left-pad
+        return prompt
+
     def _footprint(self, prompt_len: int) -> int:
         """Cache positions a prompt occupies before generation starts,
         for the session layer's fail-fast oversize check: the bucketed
@@ -723,35 +762,106 @@ class ServeEngine:
         Page claim at admission: the full prompt+generation reservation
         for the monolithic-prefill schedulers; only the FIRST CHUNK for
         ``slot_chunked`` — the rest of the reservation is extended chunk
-        by chunk as positions materialize (DESIGN.md §9)."""
+        by chunk as positions materialize (DESIGN.md §9).
+
+        With the prefix cache on (``slot_paged``), a cached prefix hit
+        skips those chunks entirely: admission adopts the cached pages
+        (refcount increments + an int32 block-table row — no device
+        dispatch, no claim that can fail) and prefill resumes at the hit
+        extent (DESIGN.md §11)."""
         while True:
-            status, req = self.intake.try_recv()
-            if status != nbb.OK:
+            req, keys = self._next_candidate()
+            if req is None:
                 return None
             padded = self._bucket(len(req.prompt))
-            if self.scheduler in ("slot_chunked", "slot_paged"):
-                need = min(self.chunk_tokens, padded)
+            entry = None
+            if keys:
+                usable = self._usable_keys(padded, keys)
+                if usable:
+                    entry = self.prefix_cache.lookup(usable[::-1])
+            if entry is not None:
+                self.pool.adopt_shared(req.req_id, entry.pages,
+                                       entry.n_tokens, slot=slot.index)
             else:
-                need = padded + req.max_tokens
-            if self.pool.try_admit(req.req_id, need,
-                                   slot=slot.index) != POOL_OK:
-                self._reject(req)
-                continue
+                if self.scheduler in ("slot_chunked", "slot_paged"):
+                    need = min(self.chunk_tokens, padded)
+                else:
+                    need = padded + req.max_tokens
+                if self.pool.try_admit(req.req_id, need,
+                                       slot=slot.index) != POOL_OK:
+                    self._reject(req)
+                    continue
             if not req.fsm.cas(states.REQUEST_VALID, states.REQUEST_RECEIVED):
                 # Client cancelled while queued: give the pages straight
-                # back and answer with the (empty) terminal.
+                # back and answer with the (empty) terminal.  For a hit
+                # that is pure refcount decrements — the cached prefix
+                # stays resident for the next request.
                 self.pool.free(req.req_id)
                 self._finish_cancelled(req)
                 continue
+            if keys is not None:
+                e_hit = entry.n_tokens if entry is not None else 0
+                self._pending_bind[req.req_id] = (keys, e_hit)
+                if entry is not None:
+                    self.stats["prefix_hits"] += 1
+                    self.stats["prefill_tokens_saved"] += e_hit
             return req
+
+    def _usable_keys(self, padded: int, keys: List[int]) -> List[int]:
+        """Hit candidates among a prompt's chained chunk hashes,
+        ascending depth.  Two caps: a hit must leave at least one prompt
+        token to dispatch (the final chunk computes the first output
+        token — a fully cached prompt still owes one forward pass), and
+        must cover at least one full page (sub-page sharing buys a
+        whole-page CoW copy to reuse less than a page of KV — a net
+        loss, so those prefixes are neither offered nor taken)."""
+        C, ps = self.chunk_tokens, self.pool.page_size
+        return [keys[d] for d in range(len(keys))
+                if ps <= (d + 1) * C < padded]
+
+    def _defer_blocked(self, req: Request, keys: List[int]) -> bool:
+        """True while some bound slot is prefilling this request's whole
+        shareable prefix RIGHT NOW: admitting it cold would duplicate
+        those chunk dispatches, so it waits for the cache entries the
+        in-flight slot will publish.  Unblocks the moment the deepest
+        shareable hash is cached (hit) or its writer unbinds (cold)."""
+        usable = self._usable_keys(self._bucket(len(req.prompt)), keys)
+        if not usable:
+            return False
+        deepest = usable[-1]
+        return (deepest not in self.prefix_cache
+                and self._inflight.get(deepest, 0) > 0)
+
+    def _next_candidate(self) -> Tuple[Optional[Request],
+                                       Optional[List[int]]]:
+        """Next admission candidate: an unblocked deferred request
+        first, else the intake fan-in (burst duplicates of an in-flight
+        prefix are parked in ``_deferred`` instead of returned)."""
+        if self.prefix_cache is not None:
+            for i, (req, keys) in enumerate(self._deferred):
+                if (req.fsm.state != states.REQUEST_VALID
+                        or not self._defer_blocked(req, keys)):
+                    del self._deferred[i]
+                    return req, keys
+        while True:
+            status, req = self.intake.try_recv()
+            if status != nbb.OK:
+                return None, None
+            if self.prefix_cache is None:
+                return req, None
+            keys = prefix_chunk_hashes(self._padded_prompt(req),
+                                       self.chunk_tokens)
+            if (req.fsm.state == states.REQUEST_VALID
+                    and self._defer_blocked(req, keys)):
+                self._deferred.append((req, keys))
+                continue
+            return req, keys
 
     def _bind_slot(self, slot: DecodeSlot, req: Request) -> None:
         """Figure-4 head shared by all slot schedulers: FREE -> RESERVED
         (pages claimed), the bucketed prompt staged for prefill."""
         slot.fsm.transition(states.BUFFER_FREE, states.BUFFER_RESERVED)
-        padded = self._bucket(len(req.prompt))
-        prompt = np.zeros((padded,), np.int32)
-        prompt[padded - len(req.prompt):] = req.prompt      # left-pad
+        prompt = self._padded_prompt(req)
         slot.request = req
         slot.prompt = prompt
         slot.prefill_pos = 0
@@ -761,6 +871,26 @@ class ServeEngine:
         self._pos[slot.index] = 0
         self._cur[slot.index] = 0
         self.stats["admitted"] += 1
+        info = self._pending_bind.pop(req.req_id, None)
+        if info is not None:
+            keys, e_hit = info
+            slot.chunk_hashes = keys
+            # Register the chain in-flight: burst duplicates defer on it
+            # instead of prefilling the same chunks cold (_sweep_in's
+            # admission loop runs on the batcher thread only).
+            for h in keys:
+                self._inflight[h] = self._inflight.get(h, 0) + 1
+            # Schedule cache insertions: entry d becomes cacheable when
+            # the written extent passes its last page (ready_at), so the
+            # writer never CoWs its own tail against the cache's refs.
+            C, ps = self.chunk_tokens, self.pool.page_size
+            slot.pending_prefix = [
+                (math.ceil((d + 1) * C / ps) * ps, keys[d], (d + 1) * C)
+                for d in range(len(keys)) if (d + 1) * C >= ps]
+            if e_hit:
+                # The hit chunks never dispatch: prefill resumes at the
+                # cached extent over the adopted (shared) pages.
+                slot.prefill_pos = e_hit
 
     def _prefill_slot(self, slot: DecodeSlot) -> None:
         """Monolithic admission tail (``slot``/``slot_fused``): one B=1
@@ -807,12 +937,46 @@ class ServeEngine:
             slot.fsm.transition(states.BUFFER_ALLOCATED,
                                 states.BUFFER_RECEIVED)
             slot.fsm.transition(states.BUFFER_RECEIVED, states.BUFFER_FREE)
+        if slot.chunk_hashes:
+            for h in slot.chunk_hashes:
+                n = self._inflight.get(h, 0) - 1
+                if n <= 0:
+                    self._inflight.pop(h, None)
+                else:
+                    self._inflight[h] = n
+        slot.chunk_hashes = None
+        slot.pending_prefix = []
+        slot.created_prefixes = []
         slot.request = None
         slot.outs = None
         slot.prompt = None
         slot.prefill_pos = 0
         self._cur[slot.index] = 0
         self._pos[slot.index] = 0
+
+    def _maybe_insert_prefixes(self, slot: DecodeSlot,
+                               final: bool = False) -> None:
+        """Publish a bound sequence's cacheable prefixes (DESIGN.md
+        §11).  An entry becomes publishable when the written extent
+        passes its last page — earlier, the still-writing owner would
+        have to CoW its own tail page the moment the cache incref'd it,
+        charging copies to the cold path sharing is supposed to spare.
+        At retire (``final``) everything left publishes: the owner will
+        never write again, and a partially filled trailing page is safe
+        behind causal masking + the hitter-side CoW gate."""
+        if self.prefix_cache is None or not slot.pending_prefix:
+            return
+        extent = max(slot.prefill_pos, slot.pos)
+        pages = self.pool.table(slot.request.req_id).pages
+        ps = self.pool.page_size
+        while slot.pending_prefix:
+            ready_at, key, n_tok = slot.pending_prefix[0]
+            if not final and extent < ready_at:
+                break
+            if self.prefix_cache.insert(key, n_tok,
+                                        pages[:math.ceil(n_tok / ps)]):
+                slot.created_prefixes.append(key)
+            slot.pending_prefix.pop(0)
 
     def _retire(self, slot: DecodeSlot) -> None:
         """End-of-step release: slot + KV pages return to the pool the
@@ -827,6 +991,12 @@ class ServeEngine:
             self.stats["served"] += 1
         else:
             self.stats["cancelled"] += 1
+        # Publish the remaining cacheable prefixes before the pages go
+        # back: the sequence writes nothing further, so even entries
+        # whose last page is partially filled are safe to share (a
+        # hitter causally masks past its own extent and CoWs the page
+        # before writing it).
+        self._maybe_insert_prefixes(slot, final=True)
         self.pool.free(req.req_id)
         self._respond(req)
         self._release_slot(slot)
@@ -838,10 +1008,23 @@ class ServeEngine:
         req = slot.request
         req.tokens_out = slot.outs[:slot.generated].astype(np.int32)
         req.done_t = time.monotonic()
+        self._rollback_created(slot)
         self.pool.free(req.req_id)
         self.stats["cancelled"] += 1
         self._respond(req)
         self._release_slot(slot)
+
+    def _rollback_created(self, slot: DecodeSlot) -> None:
+        """Abort half of the all-or-nothing discipline, cache side: the
+        prefix entries THIS binding created are withdrawn (exactly one
+        decref per page each — entries that merely bumped an existing
+        key are untouched), so an aborted admission leaves the pool
+        exactly as it found it.  Pages another sequence shares survive
+        the decref; only unshared ones return to the free set."""
+        if self.prefix_cache is not None:
+            for key in slot.created_prefixes:
+                self.prefix_cache.evict_key(key)
+            slot.created_prefixes = []
 
     def tick(self) -> Tuple[int, bool]:
         """One engine iteration (micro-batch): abort cancelled slots,
@@ -929,6 +1112,7 @@ class ServeEngine:
         rejected terminal delivered — rather than holding a half-claimed
         reservation while other slots decode."""
         req = slot.request
+        self._rollback_created(slot)
         self.pool.free(req.req_id)
         if req.fsm.cas(states.REQUEST_RECEIVED, states.REQUEST_CANCELLED):
             self.stats["rejected"] += 1
@@ -950,7 +1134,12 @@ class ServeEngine:
         first means a burst of arrivals costs one admission sweep per
         busy period — and under ``slot_chunked`` the reserved slots need
         no dispatch at all here: their first chunks ride the next fused
-        block.  Returns True iff anything moved."""
+        block.  With the prefix cache on, the admission loop also
+        DEDUPES a burst: a drained request whose whole shareable prefix
+        is being prefilled by a slot bound earlier (this sweep or a
+        previous one) parks in ``_deferred`` and re-enters a later sweep
+        as a cache hit instead of prefilling the same chunks cold.
+        Returns True iff anything moved."""
         worked = False
         for slot in self.slots:
             req = slot.request
@@ -1054,6 +1243,10 @@ class ServeEngine:
             # ONE page-accounting call per block (note_tokens is
             # idempotent growth inside the admission reservation).
             self.pool.note_tokens(req.req_id, s.pos)
+            if s.pending_prefix:
+                # Decode growth can complete a prefix's trailing page
+                # (bucket < page_size): publish entries as they ripen.
+                self._maybe_insert_prefixes(s)
             # ONE stream-ring burst per block per request.
             self._stream_tokens(req, first_pos, row[:n_valid])
             self.stats["slot_busy_steps"] += n_valid
@@ -1105,12 +1298,44 @@ class ServeEngine:
                 self._reject_streaming(s)
                 worked = True
                 continue
+            # Copy-on-write gate (DESIGN.md §11): this chunk writes
+            # positions [prefill_pos, need) — any page there another
+            # holder can read (a shared prefix hit's trailing partial
+            # page) is repointed to a private copy BEFORE the block
+            # table is assembled, so the dispatch never scatters into a
+            # page someone else attends.  A final chunk's range covers
+            # the decode budget too: the joiner's on-device first steps
+            # write there in this same dispatch.
+            if (self.prefix_cache is not None and self.pool.ensure_private(
+                    req.req_id, s.prefill_pos, need) != POOL_OK):
+                self._reject_streaming(s)
+                worked = True
+                continue
             chunk[s.index, :v] = s.prompt[s.prefill_pos:s.prefill_pos + v]
             start_v[s.index] = s.prefill_pos
             nval_v[s.index] = v
             chunks.append((s, v, final))
         active = [s for s in self.slots
                   if s.request is not None and s.generated > 0]
+        if self.prefix_cache is not None and active:
+            # Decode rows write [pos, pos + k): structurally these pages
+            # are already private (sharing stops at the prompt prefix
+            # and the final chunk privatized its tail), but the fused
+            # block must never scatter into a shared page, so the same
+            # gate runs here — a pure host-side refcount scan when
+            # nothing is shared.
+            still: List[DecodeSlot] = []
+            for s in active:
+                if self.pool.ensure_private(
+                        s.request.req_id, s.pos,
+                        s.pos + self.k_max) == POOL_OK:
+                    still.append(s)
+                else:           # CoW under total exhaustion: cancel whole
+                    s.request.fsm.cas(states.REQUEST_RECEIVED,
+                                      states.REQUEST_CANCELLED)
+                    self._abort_slot(s)
+                    worked = True
+            active = still
         if not chunks and not active:
             return served, worked
         caches = self._take_caches()
@@ -1187,6 +1412,7 @@ class ServeEngine:
             req = s.request
             s.prefill_pos += v
             self.stats["prefill_chunks"] += 1
+            self._maybe_insert_prefixes(s)
             if not final:
                 self.pool.note_tokens(req.req_id, s.prefill_pos)
                 continue

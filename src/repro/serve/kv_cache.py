@@ -1,14 +1,28 @@
-"""Paged KV-cache pool with a lock-free bitset page allocator.
+"""Paged KV-cache pool with a lock-free refcounted page allocator.
 
 The serving engine's KV memory is a fixed pool of fixed-size pages (the
 vLLM idea, TPU-adapted: pages are [page_size, kv_heads, head_dim] tiles
 whose last two dims stay MXU/VREG aligned).  Page accounting uses the
-paper's lock-free **bit set** (refactoring step 3): claim-any-free-page
-and release-page are single-CAS operations on a :class:`HostBitset`, so
-concurrent client threads admitting requests never serialize behind a
-pool lock — admission control is non-blocking and over-subscription is
-rejected with an explicit status (the NBB BUFFER_FULL discipline) rather
-than a blocked caller.
+refcounted generalization of the paper's lock-free **bit set**
+(refactoring step 3): claim-from-zero is a single CAS on a
+:class:`RefCountArray` slot, share/release are wait-free fetch-add /
+fetch-sub, and a page re-enters the free set exactly when its count hits
+zero — so concurrent client threads admitting requests never serialize
+behind a pool lock, and one physical page can back many sequences'
+block-table rows at once.  Admission control stays non-blocking and
+over-subscription is rejected with an explicit status (the NBB
+BUFFER_FULL discipline) rather than a blocked caller.
+
+Prefix sharing rides on the counts (DESIGN.md §11): the
+:class:`PrefixCache` maps chained chunk-aligned prompt hashes to page
+runs, admission increfs a hit's pages instead of dispatching prefill,
+and a write into a page whose count exceeds one is gated behind
+copy-on-write (``ensure_private``): claim a fresh page, device-copy that
+one page, repoint the single block-table row, decref the shared
+original.  CoW traffic is the only KV copying the paged scheduler ever
+performs and is charged honestly to ``kv_copy_bytes`` (mirrored in
+``cow_copy_bytes``).  Unreferenced cached prefixes stay resident as an
+LRU set and are evicted under pool pressure before any claim fails.
 
 Device-side, per-sequence KV lives scattered across the pool arrays.
 Under the paged scheduler (``slot_paged``, DESIGN.md §10) the pool's
@@ -25,13 +39,14 @@ counter, which stays 0 for ``slot_paged``.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.bitset import HostBitset
+from repro.core.refcount import RefCountArray
 
 OK = 0
 POOL_FULL = 1
@@ -69,16 +84,24 @@ class PagedKVPool:
         shape = (n_pages, page_size, n_layers, kv_heads, head_dim)
         self.k = jnp.zeros(shape, dtype)
         self.v = jnp.zeros(shape, dtype)
-        self._alloc = HostBitset(n_pages)
+        self._alloc = RefCountArray(n_pages)
         self._tables: Dict[int, PageTable] = {}
         self._next_probe = 0
         # Honest KV-traffic counters (DESIGN.md §10): every byte a
         # scheduler moves to (re)establish residency is charged here —
         # swap_in/swap_out page traffic and the engine's dense
         # cache-admission copies.  The paged scheduler's steady state
-        # performs no KV copies at all, so its counter stays 0.
+        # performs no KV copies at all, so its counter stays 0 until a
+        # copy-on-write fires (``cow_copy_bytes`` isolates that share).
         self.kv_copy_bytes = 0
+        self.cow_copy_bytes = 0
         self._peak_pages = 0
+        self._shared_peak = 0
+        # Pool-pressure escape hatch: the prefix cache registers its LRU
+        # evictor here so resident-but-unreferenced prefixes yield their
+        # pages before any claim fails (DESIGN.md §11).
+        self._evict: Optional[Callable[[], bool]] = None
+        self._cow_fns: Dict[int, Callable] = {}
 
     # -- allocation (lock-free) ------------------------------------------------
     def pages_needed(self, n_tokens: int) -> int:
@@ -91,18 +114,31 @@ class PagedKVPool:
         admitters can't deadlock each other or strand half-claims."""
         got: List[int] = []
         for _ in range(n):
-            # fresh token per claim: setdefault-CAS must not recognize our
-            # own earlier claims as "won again"
-            page = self._alloc.try_claim(owner=object(),
-                                         start=self._next_probe)
-            if page is None:
-                for p in got:      # roll back — nobody waits on us
-                    self._alloc.release(p)
-                return None
+            while True:
+                # fresh token per claim: setdefault-CAS must not recognize
+                # our own earlier claims as "won again"
+                page = self._alloc.try_claim(owner=object(),
+                                             start=self._next_probe)
+                if page is not None:
+                    break
+                # Pool pressure: evict an unreferenced cached prefix and
+                # retry before declaring shortage.  Eviction only drops
+                # the cache's references, so a page still backing a live
+                # sequence never leaves the pool here.
+                if self._evict is None or not self._evict():
+                    for p in got:  # roll back — nobody waits on us
+                        self._alloc.release(p)
+                    return None
             self._next_probe = (page + 1) % self.n_pages
             got.append(page)
         self._peak_pages = max(self._peak_pages, self.used_pages())
         return got
+
+    def set_pressure_callback(self,
+                              evict: Optional[Callable[[], bool]]) -> None:
+        """Install the evict-one-prefix-under-pressure hook (returns True
+        when it released something worth retrying the claim for)."""
+        self._evict = evict
 
     @property
     def page_nbytes(self) -> int:
@@ -112,7 +148,9 @@ class PagedKVPool:
     def reset_traffic(self) -> None:
         """Zero the copy/peak counters (benchmark pass boundaries)."""
         self.kv_copy_bytes = 0
+        self.cow_copy_bytes = 0
         self._peak_pages = self.used_pages()
+        self._shared_peak = self._alloc.shared_count()
 
     def try_admit(self, seq_id: int, n_tokens: int,
                   slot: Optional[int] = None) -> int:
@@ -125,6 +163,83 @@ class PagedKVPool:
         self._tables[seq_id] = PageTable(seq_id, got, n_tokens, slot=slot,
                                          n_reserved=n_tokens)
         return OK
+
+    # -- prefix sharing (refcounts + copy-on-write, DESIGN.md §11) -------------
+    def adopt_shared(self, seq_id: int, pages: List[int], n_tokens: int,
+                     slot: Optional[int] = None) -> None:
+        """Admit a sequence onto already-resident prefix pages: one incref
+        per page and an int32 block-table row — no device dispatch, no
+        claim that can fail.  ``n_tokens`` is the prefix extent the pages
+        cover (the sequence resumes prefill there)."""
+        for p in pages:
+            self._alloc.incref(p)
+        self._tables[seq_id] = PageTable(seq_id, list(pages), n_tokens,
+                                         slot=slot, n_reserved=n_tokens)
+        self._note_sharing()
+        self._peak_pages = max(self._peak_pages, self.used_pages())
+
+    def incref_pages(self, pages: List[int]) -> None:
+        """Take one reference per page (prefix-cache residency)."""
+        for p in pages:
+            self._alloc.incref(p)
+        self._note_sharing()
+
+    def decref_pages(self, pages: List[int]) -> None:
+        """Drop one reference per page; pages whose count reaches zero
+        re-enter the free set (prefix-cache eviction)."""
+        for p in pages:
+            self._alloc.decref(p)
+
+    def refcount(self, page: int) -> int:
+        return self._alloc.refcount(page)
+
+    def _note_sharing(self) -> None:
+        self._shared_peak = max(self._shared_peak,
+                                self._alloc.shared_count())
+
+    def ensure_private(self, seq_id: int, start_pos: int,
+                       end_pos: int) -> int:
+        """Copy-on-write gate: before a dispatch writes KV positions
+        ``[start_pos, end_pos)`` of a sequence, repoint every page in
+        that range that another holder can still read.  Per shared page:
+        claim a fresh page, device-copy exactly that page, swap the one
+        block-table row, decref the original (which stays resident for
+        its other holders).  All-or-nothing like every claim path."""
+        if end_pos <= start_pos:
+            return OK
+        t = self._tables[seq_id]
+        ps = self.page_size
+        first = start_pos // ps
+        last = min((end_pos - 1) // ps, len(t.pages) - 1)
+        rows = [i for i in range(first, last + 1)
+                if self._alloc.refcount(t.pages[i]) > 1]
+        if not rows:
+            return OK
+        fresh = self._claim_pages(len(rows))
+        if fresh is None:
+            return POOL_FULL
+        self._copy_pages([t.pages[i] for i in rows], fresh)
+        nbytes = len(rows) * self.page_nbytes
+        self.kv_copy_bytes += nbytes
+        self.cow_copy_bytes += nbytes
+        for i, new_p in zip(rows, fresh):
+            old = t.pages[i]
+            t.pages[i] = new_p
+            self._alloc.decref(old)
+        return OK
+
+    def _copy_pages(self, src: List[int], dst: List[int]) -> None:
+        """One fused device dispatch copying len(src) whole pages inside
+        the pool arrays (donated, so XLA updates in place)."""
+        fn = self._cow_fns.get(len(src))
+        if fn is None:
+            fn = jax.jit(lambda k, v, s, d: (k.at[d].set(k[s]),
+                                             v.at[d].set(v[s])),
+                         donate_argnums=(0, 1))
+            self._cow_fns[len(src)] = fn
+        s = jnp.asarray(src, jnp.int32)
+        d = jnp.asarray(dst, jnp.int32)
+        self.k, self.v = fn(self.k, self.v, s, d)
 
     def note_tokens(self, seq_id: int, n_tokens: int) -> None:
         """Record decode growth inside the existing reservation (no page
@@ -190,9 +305,16 @@ class PagedKVPool:
                 # the high-water mark), vs the dense batch cache's fixed
                 # O(B * max_len) — plus every byte any scheduler spent
                 # COPYING KV to establish residency (0 for slot_paged).
+                # Under sharing, ``used_pages`` counts each *physical*
+                # page once however many block-table rows point at it —
+                # residency reflects HBM actually held, not the sum of
+                # per-sequence views.
                 "kv_resident_bytes": self.used_pages() * self.page_nbytes,
                 "kv_resident_bytes_peak": self._peak_pages * self.page_nbytes,
-                "kv_copy_bytes": self.kv_copy_bytes}
+                "kv_copy_bytes": self.kv_copy_bytes,
+                "cow_copy_bytes": self.cow_copy_bytes,
+                "shared_pages": self._alloc.shared_count(),
+                "shared_pages_peak": self._shared_peak}
 
     # -- device data movement (RETIRED: no scheduler calls these) ---------------
     # Residency under ``slot_paged`` is established by writing int32
@@ -239,3 +361,105 @@ class PagedKVPool:
         self.k = self.k.at[idx].set(k_pages)
         self.v = self.v.at[idx].set(v_pages)
         return OK
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One cached chunk-aligned prompt prefix: ``pages`` cover the first
+    ``n_tokens`` positions of the (bucketed, left-padded) token stream
+    whose chained chunk hash is ``key``.  The entry holds one reference
+    per page, so the pages stay resident after every sequence that wrote
+    or shared them has retired."""
+    key: int
+    n_tokens: int
+    pages: List[int]
+    tick: int = 0
+
+
+class PrefixCache:
+    """LRU map from chained chunk hashes to resident page runs.
+
+    Hashes are chained (each chunk's hash folds in its predecessor's),
+    so an entry for a shallow prefix of a cached deep prefix is its own
+    key — a lookup walks candidate depths deepest-first and the first
+    present entry wins, which is how "a prefix of a cached prefix also
+    hits".  The cache registers its LRU evictor as the pool's pressure
+    callback: page claims evict unreferenced prefixes before failing.
+    """
+
+    def __init__(self, pool: PagedKVPool):
+        self.pool = pool
+        self._entries: Dict[int, PrefixEntry] = {}
+        self._clock = itertools.count()
+        self.hits = 0
+        self.misses = 0
+        self.insertions = 0
+        self.evictions = 0
+        pool.set_pressure_callback(self.evict_lru)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: int) -> bool:
+        return key in self._entries
+
+    def insert(self, key: int, n_tokens: int, pages: List[int]) -> bool:
+        """Cache a prefix: one incref per page (the cache's own
+        residency).  Idempotent per key — re-inserting bumps LRU only."""
+        ent = self._entries.get(key)
+        if ent is not None:
+            ent.tick = next(self._clock)
+            return False
+        self.pool.incref_pages(pages)
+        self._entries[key] = PrefixEntry(key, n_tokens, list(pages),
+                                         next(self._clock))
+        self.insertions += 1
+        return True
+
+    def lookup(self, keys: List[int]) -> Optional[PrefixEntry]:
+        """Deepest-first probe: ``keys`` are chained hashes ordered
+        deepest prefix first; the first cached one wins."""
+        for key in keys:
+            ent = self._entries.get(key)
+            if ent is not None:
+                ent.tick = next(self._clock)
+                self.hits += 1
+                return ent
+        self.misses += 1
+        return None
+
+    def evict_key(self, key: int) -> bool:
+        """Drop one entry's references (LRU eviction and the engine's
+        abort rollback).  Pages no live sequence shares return to the
+        free set; pages still backing sequences merely lose the cache's
+        claim on them — never freed out from under a holder."""
+        ent = self._entries.pop(key, None)
+        if ent is None:
+            return False
+        self.pool.decref_pages(ent.pages)
+        self.evictions += 1
+        return True
+
+    def evict_lru(self) -> bool:
+        """Evict the least-recently-used prefix (pool-pressure hook)."""
+        if not self._entries:
+            return False
+        return self.evict_key(
+            min(self._entries, key=lambda k: self._entries[k].tick))
+
+    def clear(self) -> None:
+        while self.evict_lru():
+            pass
+
+    def resident_pages(self) -> set:
+        """Physical pages the cache holds references on (each once)."""
+        out: set = set()
+        for ent in self._entries.values():
+            out.update(ent.pages)
+        return out
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "misses": self.misses, "insertions": self.insertions,
+                "evictions": self.evictions,
+                "resident_pages": len(self.resident_pages())}

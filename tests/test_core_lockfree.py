@@ -21,6 +21,7 @@ from repro.core import bitset, nbb, nbw, states
 from repro.core.channels import ChannelType, Domain
 from repro.core.host_queue import LockedQueue, MpscQueue
 from repro.core.nbb import HostNBB, SimNBB
+from repro.core.refcount import RefCountArray
 
 
 # ---------------------------------------------------------------------------
@@ -252,6 +253,111 @@ class TestBitset:
         bits, s = bitset.claim_first_free(bits, 5)
         assert int(s) == 3
         assert int(bitset.count(bits)) == 5
+
+
+# ---------------------------------------------------------------------------
+# RefCountArray — the bitset's refcounted generalization (shared KV pages)
+# ---------------------------------------------------------------------------
+class TestRefCount:
+    def test_claim_share_release_lifecycle(self):
+        r = RefCountArray(4)
+        assert r.try_claim() == 0
+        assert r.refcount(0) == 1
+        assert r.incref(0) == 2          # fetch-add share
+        assert r.decref(0) == 1          # fetch-sub release
+        assert r.is_claimed(0)
+        assert r.decref(0) == 0          # last ref: back to the free set
+        assert not r.is_claimed(0)
+        assert r.try_claim() == 0        # immediately claimable again
+
+    def test_free_slot_refuses_share_and_release(self):
+        """incref requires a holder; decref without a reference is a bug,
+        not a silent no-op — both raise instead of corrupting the count."""
+        r = RefCountArray(2)
+        with pytest.raises(KeyError):
+            r.incref(1)
+        with pytest.raises(KeyError):
+            r.decref(1)
+
+    def test_claim_specific_only_from_zero(self):
+        r = RefCountArray(2)
+        assert r.claim_specific(1) is True
+        assert r.claim_specific(1) is False   # held: CAS fails
+        r.incref(1)
+        r.decref(1)
+        assert r.claim_specific(1) is False   # still held (count 1)
+        r.decref(1)
+        assert r.claim_specific(1) is True    # free again
+
+    def test_full_pool_returns_none(self):
+        r = RefCountArray(3)
+        assert sorted(r.try_claim() for _ in range(3)) == [0, 1, 2]
+        assert r.try_claim() is None          # non-blocking failure
+        r.release(1)                          # HostBitset-compatible alias
+        assert r.try_claim() == 1
+
+    def test_counts(self):
+        r = RefCountArray(4)
+        r.try_claim()
+        r.try_claim()
+        r.incref(0)
+        assert r.count() == 2                 # held slots, counted once
+        assert r.shared_count() == 1          # only slot 0 is shared
+        assert r.refcount(0) == 2 and r.refcount(1) == 1
+
+    def test_claim_from_zero_single_winner_threaded(self):
+        """Claim-from-zero is the one transition needing mutual exclusion
+        between claimers: N threads racing for the same free slot yield
+        exactly one winner, and the slot returns to the free set exactly
+        once per release (no double-claim ever observed across rounds)."""
+        r = RefCountArray(1)
+        for _round in range(50):
+            wins = []
+            barrier = threading.Barrier(4)
+
+            def claimer():
+                barrier.wait()
+                if r.claim_specific(0):
+                    wins.append(1)
+
+            ts = [threading.Thread(target=claimer) for _ in range(4)]
+            [t.start() for t in ts]
+            [t.join(10) for t in ts]
+            assert len(wins) == 1, f"{len(wins)} CAS winners"
+            assert r.refcount(0) == 1
+            assert r.decref(0) == 0
+
+    def test_shared_slot_incref_decref_storm(self):
+        """incref/decref from many threads on one shared slot never lose
+        an update (the fetch-add/fetch-sub property): with the base
+        reference pinned, the count comes back to exactly 1 after the
+        storm, and the slot never transiently frees (claim_specific by a
+        rival must fail throughout)."""
+        r = RefCountArray(1)
+        assert r.try_claim() == 0            # base ref pinned by the test
+        stolen = []
+        stop = threading.Event()
+
+        def churner():
+            for _ in range(5000):
+                r.incref(0)
+                r.decref(0)
+
+        def thief():
+            while not stop.is_set():
+                if r.claim_specific(0):      # only possible at count 0
+                    stolen.append(1)
+                    r.decref(0)
+
+        ts = [threading.Thread(target=churner) for _ in range(4)]
+        tt = threading.Thread(target=thief)
+        [t.start() for t in ts]
+        tt.start()
+        [t.join(60) for t in ts]
+        stop.set()
+        tt.join(10)
+        assert not stolen, "slot freed while referenced"
+        assert r.refcount(0) == 1, "lost incref/decref update"
 
 
 # ---------------------------------------------------------------------------
@@ -529,3 +635,75 @@ else:
             for s in seen:          # full cleanup releases every claim
                 b.release(s)
             assert b.count() == 0
+
+    class TestRefCountProperties:
+        @given(
+            nslots=st.integers(2, 32),
+            n_threads=st.integers(2, 5),
+            ops=st.integers(5, 60),
+            starts=st.lists(st.integers(0, 47), min_size=5, max_size=5),
+        )
+        @settings(max_examples=25, deadline=None)
+        def test_share_release_claim_race_counts_exact(
+                self, nslots, n_threads, ops, starts):
+            """The shared-page allocator Safety property under REAL
+            thread races (DESIGN.md §11 relies on it: a count drift
+            would either free a KV page some sequence still attends or
+            leak it forever).  Each thread hammers claim-from-zero,
+            share (incref of slots it holds) and release from a
+            hypothesis-chosen probe start; after the join every slot's
+            count must equal the references the threads still hold —
+            exactly — and draining those returns every slot to the free
+            set exactly once (each becomes claimable again, count 0)."""
+            r = RefCountArray(nslots)
+            held = [{} for _ in range(n_threads)]   # tid -> {slot: refs}
+            violations: list = []
+            barrier = threading.Barrier(n_threads)
+
+            def worker(tid):
+                mine = held[tid]
+                barrier.wait()
+                for i in range(ops):
+                    if i % 3 == 0 and mine:          # share what we hold
+                        s = next(iter(mine))
+                        if r.incref(s) < 2:
+                            violations.append(("count<2 after share",
+                                               tid, s))
+                        mine[s] += 1
+                    else:
+                        s = r.try_claim(start=starts[tid % len(starts)]
+                                        % nslots)
+                        if s is not None:
+                            mine[s] = mine.get(s, 0) + 1
+                    if mine and i % 2:               # release one ref
+                        s = next(iter(mine))
+                        r.decref(s)
+                        mine[s] -= 1
+                        if not mine[s]:
+                            del mine[s]
+
+            threads = [threading.Thread(target=worker, args=(t,))
+                       for t in range(n_threads)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert not violations, violations
+            # Counts exact after the join: allocator count == sum of the
+            # references the threads actually kept, slot by slot.
+            totals = [0] * nslots
+            for mine in held:
+                for s, k in mine.items():
+                    totals[s] += k
+            for s in range(nslots):
+                assert r.refcount(s) == totals[s], (
+                    f"slot {s}: count {r.refcount(s)} != held {totals[s]}")
+            assert r.count() == sum(1 for t in totals if t)
+            # Exactly-once return to the free set: draining every held
+            # reference frees every slot (no zombie refs, no early free).
+            for s, k in enumerate(totals):
+                for j in range(k):
+                    assert r.decref(s) == k - j - 1
+            assert r.count() == 0
+            for s in range(nslots):
+                assert r.claim_specific(s), "slot not returned to free set"
