@@ -1,0 +1,303 @@
+"""Overload-control benchmark: FIFO intake vs the priority/preemption/
+WFQ subsystem under open-loop saturation (DESIGN.md §12).
+
+The paper's stop criterion frames every run as "offered load the system
+must absorb"; this benchmark makes the offered load *exceed* capacity —
+the regime the overload subsystem exists for.  It first measures the
+engine's closed-loop capacity on a mixed-priority workload, then
+replays the same workload OPEN-LOOP at 2x that rate (arrivals keep
+coming whether or not the engine kept up) through two engines:
+
+- **fifo**: ``overload=None`` — the seed's single MPSC intake.  Priority
+  tags ride along but mean nothing; a high-priority request queues
+  behind every earlier long low-priority generation.
+- **overload**: ``OverloadPolicy(priorities, preemption, wfq)`` — the
+  multi-class intake pops high first (with aging so low never starves),
+  and a high-priority arrival under slot/pool pressure swaps a running
+  low-priority slot's private pages to host (``BUFFER_PREEMPTED``),
+  resuming it byte-identically once pressure clears.
+
+Deterministic gates (asserted):
+- token streams per request are byte-identical fifo vs overload — the
+  scheduler may only reorder and swap, never change a single token;
+- ``kv_copy_bytes == cow_copy_bytes + swap_in_bytes + swap_out_bytes``
+  — every copied KV byte is attributable to CoW or preemption swaps;
+- no starvation: every low-priority request completes in both runs.
+
+Headline (recorded, wall-clock so not asserted): high-priority TTFT
+p50/p99 ratio overload/fifo — the ISSUE target is p99 <= 0.5x — plus
+preemption/resume counts, swap traffic, and a shed demonstration pass
+(tight SLO at the same offered load -> typed ``ShedStatus`` rejects).
+
+Usage:  PYTHONPATH=src python benchmarks/bench_overload.py [--quick]
+Emits:  BENCH_overload.json (cwd)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.serve.overload import (      # noqa: E402
+    PRIORITY_HIGH,
+    PRIORITY_LOW,
+    PRIORITY_NORMAL,
+    OverloadPolicy,
+)
+
+CLASS_NAMES = {PRIORITY_HIGH: "high", PRIORITY_NORMAL: "normal",
+               PRIORITY_LOW: "low"}
+
+
+def make_workload(n_requests: int, seed: int = 0) -> List[Dict]:
+    """Mixed-priority workload, deterministic: ~20% high / 60% normal /
+    20% low.  High requests are short interactive turns (the ones whose
+    TTFT the subsystem protects); low requests are long generations —
+    exactly the slots worth preempting when a high arrives under
+    pressure."""
+    rng = np.random.default_rng(seed)
+    work = []
+    for _ in range(n_requests):
+        u = rng.random()
+        pri = (PRIORITY_HIGH if u < 0.2
+               else PRIORITY_NORMAL if u < 0.7 else PRIORITY_LOW)
+        # Low generations span many fused blocks (40 tokens vs k_max=4),
+        # so under saturation both slots are typically pinned by cheap
+        # long work when a high arrives — the case where intake priority
+        # alone cannot help and only page-swap preemption can.
+        work.append({
+            "prompt": rng.integers(0, 1000, 8),
+            "max_tokens": (6 if pri == PRIORITY_HIGH
+                           else 12 if pri == PRIORITY_NORMAL else 40),
+            "priority": pri,
+        })
+    return work
+
+
+def _pct(vals: List[float], q: float) -> float:
+    if not vals:
+        return float("nan")
+    s = sorted(vals)
+    return s[min(int(len(s) * q), len(s) - 1)]
+
+
+def _mk_engine(model, params, workload: List[Dict],
+               overload: Optional[OverloadPolicy], max_batch: int,
+               max_len: int):
+    from repro.serve.engine import ServeEngine
+
+    # The pool IS the device KV store (slot_paged): size it to the dense
+    # batch-cache budget so saturation pressure is real, not synthetic.
+    page_size = 8
+    pool_pages = (max_batch * max_len + page_size - 1) // page_size
+    return ServeEngine(model, params, max_batch=max_batch, max_len=max_len,
+                       n_clients=1, pool_pages=pool_pages,
+                       page_size=page_size,
+                       intake_depth=len(workload) + 8,
+                       scheduler="slot_paged", chunk_tokens=16, k_max=4,
+                       overload=overload)
+
+
+def run_pass(model, params, workload: List[Dict],
+             overload: Optional[OverloadPolicy], max_batch: int,
+             max_len: int, arrivals: Optional[List[float]] = None) -> Dict:
+    """One engine, one pass.  ``arrivals=None`` -> closed loop (submit
+    everything up front; measures capacity).  Otherwise open loop:
+    request i is submitted no earlier than ``arrivals[i]`` seconds after
+    t0, while the engine steps — lag never cancels future arrivals."""
+    eng = _mk_engine(model, params, workload, overload, max_batch, max_len)
+
+    def terminal() -> int:
+        return (eng.stats["served"] + eng.stats["rejected"]
+                + eng.stats["cancelled"] + eng.stats["shed_requests"])
+
+    # Warmup: trace prefill/decode shapes outside the timed region.
+    for w in workload[:2]:
+        eng.submit(0, w["prompt"] % model.cfg.vocab_size,
+                   max_tokens=w["max_tokens"])
+    while terminal() < 2:
+        eng.step()
+    for _ in range(2):
+        assert eng.get_response(0, timeout_s=10), "warmup timed out"
+
+    for k in eng.stats:
+        eng.stats[k] = 0
+    eng.pool.reset_traffic()
+    eng._ttft_by_class.clear()
+
+    # Drive per-TICK, not per-step(): step() drains the whole backlog
+    # before returning, which would serialize the open loop — arrivals
+    # must land BETWEEN fused blocks, while slots are still held.
+    t0 = time.monotonic()
+    rids: List[int] = []
+    nxt = 0
+    while nxt < len(workload) or terminal() < len(workload):
+        while nxt < len(workload) and (
+                arrivals is None
+                or time.monotonic() - t0 >= arrivals[nxt]):
+            w = workload[nxt]
+            req = eng.submit(0, w["prompt"] % model.cfg.vocab_size,
+                             max_tokens=w["max_tokens"],
+                             priority=w["priority"])
+            assert req is not None, "intake ring full mid-benchmark"
+            rids.append(req.req_id)
+            nxt += 1
+        eng.tick()
+    dt = time.monotonic() - t0
+
+    seqs: Dict[int, List[int]] = {}
+    ttft_by_class: Dict[int, List[float]] = {}
+    done_by_class: Dict[int, List[float]] = {}
+    served_by_class: Dict[int, int] = {}
+    shed = 0
+    for _ in range(len(workload)):
+        r = eng.get_response(0, timeout_s=10)
+        assert r, "response timed out"
+        seqs[r.req_id] = (list(map(int, r.tokens_out))
+                          if r.tokens_out is not None else [])
+        if r.status is not None and not r.status:
+            shed += 1
+            continue
+        served_by_class[r.priority] = served_by_class.get(r.priority, 0) + 1
+        ttft_by_class.setdefault(r.priority, []).append(
+            1e3 * ((r.first_token_t or r.done_t) - r.submit_t))
+        done_by_class.setdefault(r.priority, []).append(
+            1e3 * (r.done_t - r.submit_t))
+
+    pstats = eng.pool.stats()
+    return {
+        "mode": "fifo" if overload is None else "overload",
+        "wall_s": dt,
+        "req_per_s": len(workload) / dt,
+        "served": eng.stats["served"],
+        "shed": shed,
+        "preemptions": eng.stats["preemptions"],
+        "resumes": eng.stats["resumes"],
+        "shed_requests": eng.stats["shed_requests"],
+        "swap_in_bytes": pstats["swap_in_bytes"],
+        "swap_out_bytes": pstats["swap_out_bytes"],
+        "kv_copy_bytes": pstats["kv_copy_bytes"],
+        "cow_copy_bytes": pstats["cow_copy_bytes"],
+        "ttft_ms": {CLASS_NAMES[c]: {"n": len(v),
+                                     "p50": _pct(v, 0.5),
+                                     "p99": _pct(v, 0.99)}
+                    for c, v in sorted(ttft_by_class.items())},
+        "completion_ms": {CLASS_NAMES[c]: {"p50": _pct(v, 0.5),
+                                           "p99": _pct(v, 0.99)}
+                          for c, v in sorted(done_by_class.items())},
+        "served_by_class": {CLASS_NAMES[c]: n
+                            for c, n in sorted(served_by_class.items())},
+        "_token_seqs": [seqs[r] for r in rids],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small workload for CI smoke")
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--max-batch", type=int, default=2)
+    ap.add_argument("--overload-factor", type=float, default=2.0,
+                    help="open-loop offered load as a multiple of "
+                         "measured closed-loop capacity")
+    ap.add_argument("--out", default="BENCH_overload.json")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_smoke_config
+    from repro.models.model import build_model
+
+    n_requests = args.requests or (16 if args.quick else 40)
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    workload = make_workload(n_requests)
+    mix = {CLASS_NAMES[c]: sum(1 for w in workload if w["priority"] == c)
+           for c in (PRIORITY_HIGH, PRIORITY_NORMAL, PRIORITY_LOW)}
+    kw = dict(max_batch=args.max_batch, max_len=64)
+
+    # Capacity calibration: closed loop, FIFO — the service rate the
+    # open-loop passes will oversubscribe.
+    cal = run_pass(model, params, workload, None, **kw)
+    cap = cal["req_per_s"]
+    arrivals = [i / (args.overload_factor * cap)
+                for i in range(len(workload))]
+    print(f"capacity {cap:.1f} req/s -> offered "
+          f"{args.overload_factor * cap:.1f} req/s "
+          f"({args.overload_factor:.0f}x, {n_requests} requests, "
+          f"mix {mix})")
+
+    fifo = run_pass(model, params, workload, None, arrivals=arrivals, **kw)
+    policy = OverloadPolicy(priorities=True, preemption=True, wfq=True)
+    over = run_pass(model, params, workload, policy, arrivals=arrivals,
+                    **kw)
+
+    # Gate 1: the scheduler may reorder and swap, never change tokens.
+    assert fifo["_token_seqs"] == over["_token_seqs"], \
+        "overload control changed tokens (preempt/resume not transparent)"
+    # Gate 2: every copied KV byte is attributable (CoW or swap).
+    for r in (fifo, over):
+        assert r["kv_copy_bytes"] == (r["cow_copy_bytes"]
+                                      + r["swap_in_bytes"]
+                                      + r["swap_out_bytes"]), \
+            f"unattributed kv copy traffic in {r['mode']} pass"
+    assert fifo["preemptions"] == 0 and fifo["swap_out_bytes"] == 0
+    # Gate 3: no starvation — aging must get every low-priority request
+    # through despite strict priority under 2x load.
+    for r in (fifo, over):
+        assert r["served"] == n_requests, f"{r['mode']}: lost requests"
+        assert r["served_by_class"].get("low", 0) == mix["low"], \
+            f"{r['mode']}: low-priority starvation"
+
+    # Shed demonstration: same offered load, 25 ms admission SLO -> the
+    # backlog ages out as typed ShedStatus rejects instead of queueing.
+    shed_policy = OverloadPolicy(priorities=True, preemption=True,
+                                 wfq=True, slo_s=0.025)
+    shed = run_pass(model, params, workload, shed_policy,
+                    arrivals=arrivals, **kw)
+    assert shed["shed_requests"] == shed["shed"], \
+        "engine shed counter disagrees with delivered ShedStatus count"
+
+    hi_f, hi_o = fifo["ttft_ms"].get("high"), over["ttft_ms"].get("high")
+    ratio = {q: (hi_o[q] / hi_f[q] if hi_f and hi_o and hi_f[q] > 0
+                 else float("nan")) for q in ("p50", "p99")}
+    out = {
+        "workload": {"n_requests": n_requests, "mix": mix,
+                     "max_batch": args.max_batch,
+                     "overload_factor": args.overload_factor,
+                     "capacity_req_per_s": cap, "arch": args.arch},
+        "fifo": fifo, "overload": over, "shed_slo_25ms": shed,
+        "high_ttft_ratio_overload_vs_fifo": ratio,
+        "tokens_identical": True,
+        "kv_copy_fully_attributed": True,
+        "low_priority_starved": False,
+    }
+    for r in (cal, fifo, over, shed):
+        r.pop("_token_seqs", None)      # identity already asserted
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+
+    for r in (fifo, over):
+        hi = r["ttft_ms"].get("high", {"p50": float("nan"),
+                                       "p99": float("nan")})
+        lo = r["completion_ms"].get("low", {"p99": float("nan")})
+        print(f"{r['mode']:8s}: high ttft p50 {hi['p50']:.0f} "
+              f"p99 {hi['p99']:.0f} ms  low done p99 {lo['p99']:.0f} ms  "
+              f"preempt {r['preemptions']}  resume {r['resumes']}  "
+              f"swap {(r['swap_in_bytes'] + r['swap_out_bytes']) // 1024}"
+              f"KiB")
+    print(f"shed pass: {shed['shed_requests']} shed / "
+          f"{n_requests} offered (25 ms SLO)")
+    print(f"high-priority ttft overload/fifo: p50 {ratio['p50']:.2f}x  "
+          f"p99 {ratio['p99']:.2f}x  (target <= 0.5x)  -> {args.out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

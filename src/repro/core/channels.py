@@ -26,10 +26,16 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import nbw, transport
 from repro.core.host_queue import LockedQueue, SpscQueue
-from repro.core.transport import CodecTransport, StateTransport, Transport
+from repro.core.transport import (CodecTransport, PriorityTransport,
+                                  StateTransport, Transport)
 
 
 class ChannelType(enum.Enum):
+    # MESSAGE delivery is priority FIFO: ``msg_send(payload, priority)``
+    # targets one of ``Domain.msg_priorities`` per-class rings (0 = most
+    # urgent) and the receiver always serves the lowest-numbered
+    # nonempty class first, FIFO within a class (PriorityTransport).
+    # Unprioritized ``send`` lands in the least urgent class.
     MESSAGE = "message"   # connection-less, priority FIFO
     PACKET = "packet"     # connected, buffer handoff
     SCALAR = "scalar"     # connected, 8..64-bit values
@@ -111,9 +117,27 @@ class Channel:
             raise ValueError(f"{op} on a {self.ctype.value} channel "
                              f"(needs {ctype.value})")
 
-    def msg_send_i(self, payload: Any) -> transport.OpHandle:
+    def msg_send(self, payload: Any,
+                 priority: Optional[int] = None) -> int:
+        """MESSAGE send with an MCAPI-style priority class (0 = most
+        urgent; None = the channel's default, least urgent).  The
+        receiver drains classes strict-priority, FIFO within a class —
+        the "priority FIFO" the MESSAGE format documents."""
+        self._require(ChannelType.MESSAGE, "msg_send")
+        if priority is None:
+            return self.transport.send(payload)
+        return self.transport.send_to(payload, priority)
+
+    def msg_send_i(self, payload: Any,
+                   priority: Optional[int] = None) -> transport.OpHandle:
         self._require(ChannelType.MESSAGE, "msg_send_i")
-        return self.send_i(payload)
+        if priority is None:
+            return self.send_i(payload)
+        h = transport.OpHandle(
+            lambda: (self.transport.send_to(payload, priority), None),
+            name="msg_send_i")
+        h.test()
+        return h
 
     def msg_recv_i(self) -> transport.OpHandle:
         self._require(ChannelType.MESSAGE, "msg_recv_i")
@@ -160,10 +184,13 @@ class Domain:
     """A communication domain: creates endpoints and connects channels."""
 
     def __init__(self, domain_id: int = 0, lock_free: bool = True,
-                 queue_capacity: int = 64):
+                 queue_capacity: int = 64, msg_priorities: int = 4):
+        if msg_priorities < 1:
+            raise ValueError("need msg_priorities >= 1")
         self.domain_id = domain_id
         self.lock_free = lock_free
         self.queue_capacity = queue_capacity
+        self.msg_priorities = msg_priorities
         self._endpoints: Dict[Tuple[int, int, int], Endpoint] = {}
         self.channels: List[Channel] = []
 
@@ -181,12 +208,20 @@ class Domain:
 
         Type dispatch happens HERE (connection setup), never per-op:
         STATE gets an NBW cell behind a :class:`StateTransport`; SCALAR
-        wraps the ring in a packing :class:`CodecTransport`; MESSAGE and
-        PACKET ride the raw ring, which is already a Transport.
+        wraps the ring in a packing :class:`CodecTransport`; MESSAGE
+        gets ``msg_priorities`` per-class rings behind a
+        :class:`PriorityTransport` (priority FIFO delivery); PACKET
+        rides the raw ring, which is already a Transport.
         """
         if ctype is ChannelType.STATE:
             queue: Any = nbw.HostNBW(depth=nbw_depth)
             tp: Transport = StateTransport(queue)
+        elif ctype is ChannelType.MESSAGE:
+            rings = [SpscQueue(self.queue_capacity) if self.lock_free
+                     else LockedQueue(self.queue_capacity)
+                     for _ in range(self.msg_priorities)]
+            tp = PriorityTransport(rings)
+            queue = tp
         else:
             queue = (SpscQueue(self.queue_capacity) if self.lock_free
                      else LockedQueue(self.queue_capacity))

@@ -48,6 +48,18 @@ class MpscQueue:
         """The private SPSC ring for producer ``i`` (single-writer)."""
         return self._rings[i]
 
+    @property
+    def n_producers(self) -> int:
+        return len(self._rings)
+
+    def pending(self) -> bool:
+        """Consumer-side emptiness probe: True iff some producer ring
+        holds a COMMITTED item right now.  Uses the rings' ``__len__``
+        (uc//2 - ac//2 snapshot), which only counts committed inserts —
+        safe for the single consumer to branch on (a concurrent insert
+        can only turn False stale, never True)."""
+        return any(len(r) for r in self._rings)
+
     def insert_item(self, producer_id: int, item: Any) -> int:
         return self._rings[producer_id].insert_item(item)
 

@@ -11,7 +11,9 @@ The two FSMs from the paper are reproduced (with one extension):
   Request:  FREE -> VALID -> {RECEIVED -> {COMPLETED, CANCELLED},
                               COMPLETED, CANCELLED}
             COMPLETED -> FREE, CANCELLED -> FREE
-  Buffer:   FREE -> RESERVED -> ALLOCATED -> RECEIVED -> FREE
+  Buffer:   FREE -> RESERVED -> ALLOCATED -> {RECEIVED -> FREE,
+                                              PREEMPTED -> {ALLOCATED,
+                                                            FREE}}
 
 The RECEIVED -> CANCELLED edge extends the paper's Figure 3 for
 client-initiated cancellation of an *in-service* request (the streaming
@@ -20,7 +22,11 @@ with a single CAS, so exactly one of COMPLETED/CANCELLED wins and the
 server releases resources exactly once either way.  The buffer FSM
 likewise gains a RESERVED -> FREE edge so a chunked admission whose
 prompt is still streaming into the cache can be aborted without ever
-reaching ALLOCATED (DESIGN.md §9).
+reaching ALLOCATED (DESIGN.md §9), and a PREEMPTED state for the
+overload-control subsystem (DESIGN.md §12): an ALLOCATED sequence whose
+private KV pages were swapped host-side parks in PREEMPTED, resumes via
+PREEMPTED -> ALLOCATED when pages are re-claimed, or exits via
+PREEMPTED -> FREE when the client cancels it while parked.
 
 A third, two-state FSM backs the MCAPI-style non-blocking operation
 handles (``repro.core.transport.OpHandle``):
@@ -62,6 +68,7 @@ BUFFER_FREE = "BUFFER_FREE"
 BUFFER_RESERVED = "BUFFER_RESERVED"
 BUFFER_ALLOCATED = "BUFFER_ALLOCATED"
 BUFFER_RECEIVED = "BUFFER_RECEIVED"
+BUFFER_PREEMPTED = "BUFFER_PREEMPTED"
 
 BUFFER_TRANSITIONS: Dict[str, FrozenSet[str]] = {
     BUFFER_FREE: frozenset({BUFFER_RESERVED}),
@@ -71,8 +78,15 @@ BUFFER_TRANSITIONS: Dict[str, FrozenSet[str]] = {
     # cancel or mid-stream pool exhaustion — without ever having been
     # ALLOCATED.  The release is a single CAS, same as every other edge.
     BUFFER_RESERVED: frozenset({BUFFER_ALLOCATED, BUFFER_FREE}),
-    BUFFER_ALLOCATED: frozenset({BUFFER_RECEIVED}),
+    # ALLOCATED -> PREEMPTED extends Figure 4 for overload control
+    # (DESIGN.md §12): a decoding sequence's private KV pages are
+    # swapped host-side and the cell parks until pages can be
+    # re-claimed (PREEMPTED -> ALLOCATED, the resume) or the client
+    # cancels it while parked (PREEMPTED -> FREE).  The cell travels
+    # with the parked sequence, not the decode slot.
+    BUFFER_ALLOCATED: frozenset({BUFFER_RECEIVED, BUFFER_PREEMPTED}),
     BUFFER_RECEIVED: frozenset({BUFFER_FREE}),
+    BUFFER_PREEMPTED: frozenset({BUFFER_ALLOCATED, BUFFER_FREE}),
 }
 
 # --- Operation-handle FSM (MCAPI mcapi_test/mcapi_wait/mcapi_cancel) --------

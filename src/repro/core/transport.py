@@ -362,6 +362,76 @@ class StateTransport:
         return recv_i(self)
 
 
+class PriorityTransport:
+    """Strict-priority fan over N inner transports: class 0 is the most
+    urgent, and ``try_recv``/``drain`` always serve the lowest-numbered
+    nonempty class first, FIFO within a class — the MCAPI "priority
+    FIFO" delivery order MESSAGE channels document (the reference
+    implementation's ``mcapi_msg_send`` priority argument).
+
+    Composition keeps it lock-free: each class is its own SPSC ring, so
+    the single-writer invariant holds per ring and the consumer's
+    priority scan is just N non-blocking probes — no ordered shared
+    structure, no lock (the same per-class-ring construction the serving
+    engine's :class:`repro.serve.overload.PriorityIntake` uses across
+    producers).
+
+    ``send`` without a priority lands in ``default_class`` (the least
+    urgent, so unprioritized traffic never preempts prioritized);
+    ``send_to`` targets an explicit class, clamped into range."""
+
+    __slots__ = ("classes", "default_class")
+
+    def __init__(self, classes: List["Transport"],
+                 default_class: Optional[int] = None):
+        if not classes:
+            raise ValueError("PriorityTransport needs >= 1 class")
+        self.classes = list(classes)
+        self.default_class = (len(classes) - 1 if default_class is None
+                              else default_class)
+
+    def send(self, payload: Any) -> int:
+        return self.classes[self.default_class].send(payload)
+
+    def send_to(self, payload: Any, priority: int) -> int:
+        p = max(0, min(len(self.classes) - 1, int(priority)))
+        return self.classes[p].send(payload)
+
+    def try_recv(self) -> Tuple[int, Optional[Any]]:
+        busy = False
+        for t in self.classes:
+            status, payload = t.try_recv()
+            if status == OK:
+                return OK, payload
+            if status in TRANSIENT:
+                busy = True
+        return ((BUFFER_EMPTY_BUT_PRODUCER_INSERTING if busy
+                 else BUFFER_EMPTY), None)
+
+    def drain(self, max_items: Optional[int] = None) -> List[Any]:
+        return drain(self, max_items)
+
+    def send_burst(self, vals) -> Tuple[int, int]:
+        return self.classes[self.default_class].send_burst(vals)
+
+    def drain_burst(self, max_n: Optional[int] = None) -> List[Any]:
+        """Priority-ordered burst: one span reservation per class ring,
+        most urgent first."""
+        out: List[Any] = []
+        for t in self.classes:
+            take = None if max_n is None else max_n - len(out)
+            if take is not None and take <= 0:
+                break
+            out.extend(t.drain_burst(take))
+        return out
+
+    def send_i(self, payload: Any) -> OpHandle:
+        return send_i(self, payload)
+
+    def recv_i(self) -> OpHandle:
+        return recv_i(self)
+
+
 class CodecTransport:
     """Encode/decode payloads over an inner transport (e.g. MCAPI scalar
     packing).  Pure composition: status codes pass through untouched."""

@@ -23,6 +23,12 @@ from repro.core import nbb
 from repro.core.host_queue import SpscQueue
 from repro.models.model import build_model
 from repro.serve.engine import ServeEngine
+from repro.serve.overload import (
+    PRIORITY_HIGH,
+    PRIORITY_LOW,
+    PRIORITY_NORMAL,
+    OverloadPolicy,
+)
 
 
 def _pct(sorted_vals, q: float) -> float:
@@ -71,6 +77,23 @@ def main(argv=None) -> ServeEngine:
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     help="tokens of a common system prompt prepended to "
                          "every request (exercises the prefix cache)")
+    ap.add_argument("--priorities", action="store_true",
+                    help="enable the overload-control subsystem: requests "
+                         "carry a priority class (~20%% high / 60%% normal "
+                         "/ 20%% low) and intake serves classes strictly "
+                         "with aging (DESIGN.md §12)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="let a high-priority arrival preempt a running "
+                         "low-priority slot by swapping its private KV "
+                         "pages to host (slot_paged only; implies "
+                         "--priorities)")
+    ap.add_argument("--wfq", action="store_true",
+                    help="weighted-fair queuing across clients inside "
+                         "each priority class (implies --priorities)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="admission SLO: shed any request that waited "
+                         "longer than this in the intake before binding "
+                         "(implies --priorities)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -99,12 +122,25 @@ def main(argv=None) -> ServeEngine:
         pool_pages = (max_batch * args.max_len + page_size - 1) // page_size
     else:
         pool_pages = max(256, args.clients * 16)
+    overload = None
+    use_overload = (args.priorities or args.preemption or args.wfq
+                    or args.slo_ms is not None)
+    if use_overload:
+        preemption = args.preemption
+        if preemption and scheduler != "slot_paged":
+            # Page-swap preemption needs the page pool as the KV store.
+            print(f"{scheduler}: no page pool, disabling --preemption")
+            preemption = False
+        overload = OverloadPolicy(
+            priorities=True, preemption=preemption, wfq=args.wfq,
+            slo_s=None if args.slo_ms is None else args.slo_ms / 1e3)
     eng = ServeEngine(model, params, max_batch=max_batch,
                       max_len=args.max_len, n_clients=args.clients,
                       pool_pages=pool_pages, page_size=page_size,
                       scheduler=scheduler, k_max=args.k_max,
                       chunk_tokens=min(args.chunk_tokens, args.max_len),
-                      prefix_cache=not args.no_prefix_cache)
+                      prefix_cache=not args.no_prefix_cache,
+                      overload=overload)
     eng_thread = eng.start()
 
     # One private SPSC result ring per client (client thread produces,
@@ -125,7 +161,16 @@ def main(argv=None) -> ServeEngine:
                 shared, rng.integers(0, cfg.vocab_size, args.prompt_len)])
             # submit_i never blocks: a full intake ring just leaves the
             # handle PENDING and its own polling retries the send.
-            handle = session.submit_i(prompt, max_tokens=args.max_tokens)
+            if overload is not None:
+                u = rng.random()
+                pri = (PRIORITY_HIGH if u < 0.2
+                       else PRIORITY_NORMAL if u < 0.8 else PRIORITY_LOW)
+                handle = session.submit_i(prompt,
+                                          max_tokens=args.max_tokens,
+                                          priority=pri)
+            else:
+                handle = session.submit_i(prompt,
+                                          max_tokens=args.max_tokens)
             n_stream = sum(1 for _ in handle.tokens(timeout_s=300))
             r = handle.response
             assert r is not None and n_stream == len(r.tokens_out)
@@ -181,6 +226,21 @@ def main(argv=None) -> ServeEngine:
           f"(dense batch cache would be {dense_b / 1024:.0f} KiB, "
           f"{resident / max(dense_b, 1):.2f}x)  "
           f"kv copy traffic: {pstats['kv_copy_bytes'] / 1024:.0f} KiB")
+    # Overload-control report (DESIGN.md §12): who waited, who got
+    # swapped, who got shed — the honest cost of the priority tiers.
+    if overload is not None:
+        names = {PRIORITY_HIGH: "high", PRIORITY_NORMAL: "normal",
+                 PRIORITY_LOW: "low"}
+        for cls in sorted(eng.class_ttft()):
+            c = eng.class_ttft()[cls]
+            print(f"ttft[{names.get(cls, cls)}]: "
+                  f"p50 {c['p50_ms']:.0f} p99 {c['p99_ms']:.0f} ms "
+                  f"(n={c['n']})")
+        print(f"overload: preemptions {eng.stats['preemptions']}  "
+              f"resumes {eng.stats['resumes']}  "
+              f"shed {eng.stats['shed_requests']}  "
+              f"swap out {eng.stats['swap_out_bytes'] / 1024:.0f} KiB  "
+              f"swap in {eng.stats['swap_in_bytes'] / 1024:.0f} KiB")
     # Prefix-sharing report (DESIGN.md §11): what the cache bought.
     if eng.prefix_cache is not None:
         cstats = eng.prefix_cache.stats()

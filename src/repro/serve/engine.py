@@ -93,6 +93,19 @@ lock):
                   and frees its KV pages *mid-decode*.  The legacy
                   blocking calls (``submit``/``get_response``) are thin
                   wrappers over session + handle.
+  * overload    — an optional :class:`~repro.serve.overload.
+                  OverloadPolicy` (DESIGN.md §12) turns the intake into
+                  the multi-class weighted-fair fan-in
+                  (``submit_i(priority=...)``, strict priority with
+                  aging + per-client WFQ over the same lock-free SPSC
+                  rings), sheds queued requests past their TTFT SLO
+                  with a typed falsy ``ShedStatus``, and — under
+                  ``slot_paged`` — PREEMPTS lower-priority decoding
+                  sequences when urgent work needs their slot or pages:
+                  private KV pages swap host-side (shared prefix pages
+                  stay resident), the Figure-4 cell parks in
+                  BUFFER_PREEMPTED, and the sequence later resumes
+                  byte-identically through the block-table indirection.
 """
 from __future__ import annotations
 
@@ -112,7 +125,9 @@ from repro.core import nbb, states, transport
 from repro.core.host_queue import MpscQueue, SpscQueue
 from repro.models.model import prefix_chunk_hashes
 from repro.serve.kv_cache import OK as POOL_OK
-from repro.serve.kv_cache import PagedKVPool, PrefixCache
+from repro.serve.kv_cache import PagedKVPool, PrefixCache, SwapImage
+from repro.serve.overload import (OverloadPolicy, PriorityIntake,
+                                  ShedStatus)
 
 
 @dataclasses.dataclass
@@ -129,6 +144,17 @@ class Request:
     first_token_t: float = 0.0          # harvest time of token 0 (TTFT)
     done_t: float = 0.0
     token_ts: List[float] = dataclasses.field(default_factory=list)
+    # Overload control (DESIGN.md §12).  ``priority`` is the submitted
+    # class (0 = most urgent); ``eff_priority`` is what scheduling
+    # decisions read — it starts equal and is boosted to 0 when aging
+    # promotes the request, so a promotion also confers preemption
+    # immunity.  ``slo_s`` is a per-request TTFT deadline overriding the
+    # policy default; ``status`` carries a typed terminal status
+    # (ShedStatus) back to the client handle.
+    priority: int = 1
+    eff_priority: int = 1
+    slo_s: Optional[float] = None
+    status: Optional[object] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -199,10 +225,11 @@ class RequestHandle:
         self._submit = submit              # None: rejected at submit time
         self._tokens: deque = deque()      # (pos, token) routed by pump
         self._final: Optional[Request] = None
-        # Typed fail-fast status (OversizeStatus) when the session layer
-        # refused the request without an intake round-trip; None for
-        # every request that actually reached the engine.
-        self.status: Optional[OversizeStatus] = None
+        # Typed falsy status (OversizeStatus when the session layer
+        # refused the request without an intake round-trip, ShedStatus
+        # when admission shed it past its SLO); None for every request
+        # the engine actually served.
+        self.status: Optional[object] = None
 
     @property
     def req_id(self) -> int:
@@ -349,10 +376,20 @@ class Session:
         self._completed: deque = deque()
 
     def submit_i(self, prompt: np.ndarray, max_tokens: int = 16,
-                 eos_id: int = -1) -> RequestHandle:
+                 eos_id: int = -1, priority: Optional[int] = None,
+                 slo_s: Optional[float] = None) -> RequestHandle:
         """Non-blocking submit: always returns a handle.  If the intake
         ring is full the submission stays PENDING and is retried by the
         handle's own polling (``test``/``wait``/``tokens``).
+
+        ``priority`` is the request's class (0 = most urgent; None =
+        PRIORITY_NORMAL) — honored when the engine runs an
+        :class:`~repro.serve.overload.OverloadPolicy`, where it selects
+        the client's per-class intake ring (still a private SPSC ring,
+        so the submit path stays lock-free); ignored otherwise.
+        ``slo_s`` is a per-request TTFT deadline: the batcher sheds the
+        request (falsy :class:`ShedStatus` in ``handle.status``) if it
+        is still queued past the deadline.
 
         A request whose KV footprint can never fit the engine's cache
         (``padded prompt + max_tokens > max_len``) fails FAST, here at
@@ -364,6 +401,9 @@ class Session:
         req = Request(next(eng._id), self.client_id,
                       np.asarray(prompt, np.int32), max_tokens, eos_id,
                       submit_t=time.monotonic())
+        if priority is not None:
+            req.priority = req.eff_priority = int(priority)
+        req.slo_s = slo_s
         req.fsm.transition(states.REQUEST_FREE, states.REQUEST_VALID)
         padded = eng._footprint(len(req.prompt))
         if padded + max_tokens > eng.max_len:
@@ -380,7 +420,11 @@ class Session:
             h.status = OversizeStatus(len(req.prompt), padded, max_tokens,
                                       eng.max_len)
             return h
-        ring = eng.intake.producer(self.client_id)
+        if eng._ov is not None:
+            req.priority = req.eff_priority = eng.intake.clamp(req.priority)
+            ring = eng.intake.producer(self.client_id, req.priority)
+        else:
+            ring = eng.intake.producer(self.client_id)
         h = RequestHandle(self, req, transport.send_i(ring, req))
         self._handles[req.req_id] = h
         m = req.req_id & _REQ_MASK
@@ -420,6 +464,8 @@ class Session:
             moved = True
             h = self.forget(req.req_id)
             if h is not None:
+                if req.status is not None and h.status is None:
+                    h.status = req.status   # e.g. ShedStatus from admission
                 h._final = req
             else:
                 self._completed.append(req)
@@ -470,6 +516,38 @@ class DecodeSlot:
     # Keys whose cache entries THIS binding created — rolled back on
     # abort/reject so an all-or-nothing admission leaves no residue.
     created_prefixes: List[int] = dataclasses.field(default_factory=list)
+    # Overload control (DESIGN.md §12): a just-resumed slot is immune to
+    # re-preemption until it has decoded at least one block — without
+    # this, a high-priority flood could swap the same victim in and out
+    # every tick, paying swap traffic for zero forward progress.
+    fresh_resume: bool = False
+
+
+@dataclasses.dataclass
+class ParkedSeq:
+    """A preempted sequence parked off-slot (DESIGN.md §12): the host
+    :class:`SwapImage` holding its private KV pages, plus everything the
+    decode slot held so a resume restores the exact mid-decode state
+    (the greedy continuation is byte-identical — block-table indirection
+    makes the new physical page numbers invisible).  ``fsm`` is the
+    sequence's Figure-4 buffer cell, parked in BUFFER_PREEMPTED; it
+    travels with the sequence, and the vacated slot gets a fresh FREE
+    cell.  ``bypassed`` counts resume attempts lost to more urgent
+    intake — at the policy's aging limit the sequence is promoted
+    (eff_priority 0) so preemption cannot starve it."""
+
+    req: Request
+    image: SwapImage
+    prompt: np.ndarray
+    outs: np.ndarray
+    generated: int
+    pos: int
+    cur: int                            # last sampled token (resume feed)
+    fsm: states.StateCell
+    chunk_hashes: Optional[List[int]]
+    pending_prefix: List[Tuple[int, int, int]]
+    created_prefixes: List[int]
+    bypassed: int = 0
 
 
 def _write_slot_caches(full, one, slot):
@@ -496,7 +574,8 @@ class ServeEngine:
                  intake_depth: int = 32, stream_depth: int = 256,
                  scheduler: str = "slot_fused", k_max: int = 8,
                  k_free: int = 2, chunk_tokens: int = 16,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 overload: Optional[OverloadPolicy] = None):
         if scheduler not in ("slot_paged", "slot_chunked", "slot_fused",
                              "slot", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
@@ -516,6 +595,12 @@ class ServeEngine:
                 f"{model.cfg.name}: slot_paged needs one uniform position-"
                 "indexed KV shape per layer (no sliding window, no "
                 "recurrent/cross state); use scheduler='slot_chunked'")
+        if (overload is not None and overload.preemption
+                and scheduler != "slot_paged"):
+            raise ValueError(
+                "overload.preemption needs scheduler='slot_paged': page-"
+                "swap preemption parks pool pages behind the block table; "
+                "the dense schedulers have no swappable residency")
         self.model, self.params = model, params
         self.max_batch, self.max_len = max_batch, max_len
         self.scheduler = scheduler
@@ -524,7 +609,14 @@ class ServeEngine:
         # clamp the under-capacity cap instead of rejecting it.
         self.k_max, self.k_free = k_max, min(k_free, k_max)
         cfg = model.cfg
-        self.intake = MpscQueue(n_clients, capacity_per_producer=intake_depth)
+        # Overload control (DESIGN.md §12): with a policy installed the
+        # flat MPSC fan-in becomes the multi-class weighted-fair intake
+        # (same lock-free per-client SPSC rings, one set per class).
+        self._ov = overload
+        self.intake = (PriorityIntake(n_clients, overload, intake_depth)
+                       if overload is not None else
+                       MpscQueue(n_clients,
+                                 capacity_per_producer=intake_depth))
         self.responses = [SpscQueue(intake_depth) for _ in range(n_clients)]
         # Per-token scalars ride a separate SPSC ring so a slow streaming
         # consumer can never wedge terminal delivery (tokens are lossy
@@ -571,6 +663,10 @@ class ServeEngine:
         self._deferred: List[Tuple[Request, List[int]]] = []
         self._inflight: Dict[int, int] = {}   # chunk hash -> bound slots
         self._pending_bind: Dict[int, Tuple[List[int], int]] = {}
+        # Preempted sequences parked off-slot, and per-class TTFT
+        # samples (batcher-thread only).
+        self._parked: List[ParkedSeq] = []
+        self._ttft_by_class: Dict[int, List[float]] = {}
         self.stats = {"served": 0, "rejected": 0, "cancelled": 0,
                       "batches": 0, "decode_steps": 0, "admitted": 0,
                       "prefills": 0, "slot_busy_steps": 0,
@@ -591,7 +687,13 @@ class ServeEngine:
                       # Prefix-sharing counters (DESIGN.md §11):
                       # admissions that adopted cached pages and the
                       # prompt positions those hits never dispatched.
-                      "prefix_hits": 0, "prefill_tokens_saved": 0}
+                      "prefix_hits": 0, "prefill_tokens_saved": 0,
+                      # Overload-control counters (DESIGN.md §12):
+                      # page-swap preemptions/resumes (swap bytes mirror
+                      # the pool's itemized counters) and requests shed
+                      # at admission past their SLO.
+                      "preemptions": 0, "resumes": 0, "shed_requests": 0,
+                      "swap_in_bytes": 0, "swap_out_bytes": 0}
         # Append-only log of fail-fast oversize rejects (written by
         # client threads in submit_i; list.append is the atomic).
         self.oversize_log: List[int] = []
@@ -604,13 +706,16 @@ class ServeEngine:
         return self._sessions[client_id]
 
     def submit(self, client_id: int, prompt: np.ndarray,
-               max_tokens: int = 16, eos_id: int = -1) -> Optional[Request]:
+               max_tokens: int = 16, eos_id: int = -1,
+               priority: Optional[int] = None,
+               slo_s: Optional[float] = None) -> Optional[Request]:
         """Non-blocking submit (legacy whole-response surface): a thin
         wrapper over ``Session.submit_i`` that detaches the handle, so
         the terminal Request is delivered through ``get_response``.
         None => intake ring full (caller retries)."""
         session = self._sessions[client_id]
-        h = session.submit_i(prompt, max_tokens, eos_id)
+        h = session.submit_i(prompt, max_tokens, eos_id,
+                             priority=priority, slo_s=slo_s)
         if h.status is not None:
             # Rejected fast at the session layer (oversize): route the
             # already-terminal Request to the legacy get_response queue.
@@ -773,6 +878,9 @@ class ServeEngine:
             req, keys = self._next_candidate()
             if req is None:
                 return None
+            if self._ov is not None and self._should_shed(req):
+                self._shed(req)
+                continue
             padded = self._bucket(len(req.prompt))
             entry = None
             if keys:
@@ -787,8 +895,7 @@ class ServeEngine:
                     need = min(self.chunk_tokens, padded)
                 else:
                     need = padded + req.max_tokens
-                if self.pool.try_admit(req.req_id, need,
-                                       slot=slot.index) != POOL_OK:
+                if not self._claim_admit(req, need, slot.index):
                     self._reject(req)
                     continue
             if not req.fsm.cas(states.REQUEST_VALID, states.REQUEST_RECEIVED):
@@ -844,7 +951,7 @@ class ServeEngine:
                     del self._deferred[i]
                     return req, keys
         while True:
-            status, req = self.intake.try_recv()
+            status, req = self._intake_recv()
             if status != nbb.OK:
                 return None, None
             if self.prefix_cache is None:
@@ -871,6 +978,11 @@ class ServeEngine:
         self._pos[slot.index] = 0
         self._cur[slot.index] = 0
         self.stats["admitted"] += 1
+        if self._ov is not None:
+            # WFQ accounting at BIND, not pop: only work that actually
+            # claims capacity advances the client's virtual time, and
+            # the cost is the KV footprint it will occupy.
+            self.intake.charge(req.client_id, len(prompt) + req.max_tokens)
         info = self._pending_bind.pop(req.req_id, None)
         if info is not None:
             keys, e_hit = info
@@ -937,13 +1049,7 @@ class ServeEngine:
             slot.fsm.transition(states.BUFFER_ALLOCATED,
                                 states.BUFFER_RECEIVED)
             slot.fsm.transition(states.BUFFER_RECEIVED, states.BUFFER_FREE)
-        if slot.chunk_hashes:
-            for h in slot.chunk_hashes:
-                n = self._inflight.get(h, 0) - 1
-                if n <= 0:
-                    self._inflight.pop(h, None)
-                else:
-                    self._inflight[h] = n
+        self._drop_inflight(slot.chunk_hashes)
         slot.chunk_hashes = None
         slot.pending_prefix = []
         slot.created_prefixes = []
@@ -953,6 +1059,18 @@ class ServeEngine:
         slot.prefill_pos = 0
         self._cur[slot.index] = 0
         self._pos[slot.index] = 0
+
+    def _drop_inflight(self, keys: Optional[List[int]]) -> None:
+        """Deregister a binding's chunk-hash chain from the in-flight
+        dedup map (slot release and preemption parking both end the
+        chain's prefill claim)."""
+        if keys:
+            for h in keys:
+                n = self._inflight.get(h, 0) - 1
+                if n <= 0:
+                    self._inflight.pop(h, None)
+                else:
+                    self._inflight[h] = n
 
     def _maybe_insert_prefixes(self, slot: DecodeSlot,
                                final: bool = False) -> None:
@@ -991,6 +1109,9 @@ class ServeEngine:
             self.stats["served"] += 1
         else:
             self.stats["cancelled"] += 1
+        if self._ov is not None and req.first_token_t:
+            self._ttft_by_class.setdefault(req.priority, []).append(
+                req.first_token_t - req.submit_t)
         # Publish the remaining cacheable prefixes before the pages go
         # back: the sequence writes nothing further, so even entries
         # whose last page is partially filled are safe to share (a
@@ -1025,6 +1146,222 @@ class ServeEngine:
             for key in slot.created_prefixes:
                 self.prefix_cache.evict_key(key)
             slot.created_prefixes = []
+
+    # -- overload control (DESIGN.md §12) --------------------------------------
+    def _intake_recv(self) -> Tuple[int, Optional[Request]]:
+        """One intake pop.  Under an overload policy this is the
+        multi-class pop; a request served by AGING over a more urgent
+        nonempty class is promoted (eff_priority 0) so the bypass that
+        earned its turn also shields it from instant preemption."""
+        if self._ov is None:
+            return self.intake.try_recv()
+        status, req, promoted = self.intake.pop()
+        if status == nbb.OK and promoted:
+            req.eff_priority = 0
+        return status, req
+
+    def _should_shed(self, req: Request) -> bool:
+        """SLO-aware admission: True when the request's TTFT deadline
+        (its own ``slo_s``, else the policy default) already passed
+        while it sat queued — serving it now would burn capacity on an
+        answer the client has written off."""
+        slo = req.slo_s if req.slo_s is not None else self._ov.slo_s
+        return slo is not None and time.monotonic() - req.submit_t > slo
+
+    def _shed(self, req: Request) -> None:
+        """Shed at intake: typed falsy ShedStatus on the terminal, no
+        pages claimed, no slot bound, no device work (the
+        preemption-vs-reject rule's cheap arm: work not yet started is
+        refused; work in flight is preempted, never discarded)."""
+        slo = req.slo_s if req.slo_s is not None else self._ov.slo_s
+        req.status = ShedStatus(time.monotonic() - req.submit_t, slo,
+                                req.priority)
+        if req.fsm.cas(states.REQUEST_VALID, states.REQUEST_CANCELLED):
+            self.stats["shed_requests"] += 1
+        else:
+            self.stats["cancelled"] += 1    # client cancel won the race
+        req.done_t = time.monotonic()
+        req.tokens_out = np.zeros((0,), np.int32)
+        self._respond(req)
+
+    def _choose_victim(self, needer_cls: int) -> Optional[DecodeSlot]:
+        """The slot to preempt so class ``needer_cls`` can run: strictly
+        lower-priority than the needer (equal class never preempts —
+        that way lies thrash), actively decoding (generated > 0: a
+        mid-prefill slot has no harvested state to park), and not just
+        resumed (``fresh_resume`` — one block of progress is guaranteed
+        between swaps).  Among candidates: worst class first, then the
+        fewest written tokens (cheapest swap), then youngest."""
+        cands = [s for s in self.slots
+                 if s.request is not None and s.generated > 0
+                 and not s.fresh_resume
+                 and s.request.eff_priority > needer_cls]
+        if not cands:
+            return None
+        return max(cands, key=lambda s: (s.request.eff_priority, -s.pos,
+                                         s.request.req_id))
+
+    def _claim_admit(self, req: Request, need: int, slot_index: int) -> bool:
+        """``try_admit`` with the preemption escape hatch: under pool
+        pressure a lower-priority decoding slot is swapped out and the
+        claim retried, so a high-priority arrival is admitted instead of
+        rejected while cheaper work holds the pool."""
+        while True:
+            if self.pool.try_admit(req.req_id, need,
+                                   slot=slot_index) == POOL_OK:
+                return True
+            if self._ov is None or not self._ov.preemption:
+                return False
+            victim = self._choose_victim(req.eff_priority)
+            if victim is None:
+                return False
+            self._preempt_slot(victim)
+
+    def _extend_with_preemption(self, s: DecodeSlot, need: int) -> bool:
+        """Chunk-assembly reservation growth with the same escape hatch.
+        Victims are decoding rows (generated > 0), never the streaming
+        slot itself, and the preempted row simply drops out of this
+        tick's dispatch (``active`` is assembled afterwards)."""
+        while True:
+            if self.pool.extend_reservation(s.request.req_id,
+                                            need) == POOL_OK:
+                return True
+            if self._ov is None or not self._ov.preemption:
+                return False
+            victim = self._choose_victim(s.request.eff_priority)
+            if victim is None:
+                return False
+            self._preempt_slot(victim)
+
+    def _preempt_slot(self, slot: DecodeSlot) -> None:
+        """Park ``slot``'s sequence host-side (ALLOCATED -> PREEMPTED).
+
+        The pool swaps out only the sequence's PRIVATE pages (shared
+        prefix pages stay resident with their refcounts — the prefix
+        cache never pays for someone else's preemption); the Figure-4
+        cell travels with the parked sequence and the slot gets a fresh
+        FREE cell, ready to bind the work that displaced it."""
+        req = slot.request
+        image = self.pool.swap_out_preempt(req.req_id, slot.pos)
+        self.stats["host_syncs"] += 1   # the gather's device->host fetch
+        slot.fsm.transition(states.BUFFER_ALLOCATED, states.BUFFER_PREEMPTED)
+        self._parked.append(ParkedSeq(
+            req=req, image=image, prompt=slot.prompt, outs=slot.outs,
+            generated=slot.generated, pos=slot.pos,
+            cur=int(self._cur[slot.index]), fsm=slot.fsm,
+            chunk_hashes=slot.chunk_hashes,
+            pending_prefix=list(slot.pending_prefix),
+            created_prefixes=list(slot.created_prefixes)))
+        self._drop_inflight(slot.chunk_hashes)
+        slot.fsm = states.buffer_cell()
+        slot.request = None
+        slot.prompt = None
+        slot.outs = None
+        slot.generated = 0
+        slot.pos = 0
+        slot.prefill_pos = 0
+        slot.next_tok = 0
+        slot.chunk_hashes = None
+        slot.pending_prefix = []
+        slot.created_prefixes = []
+        slot.fresh_resume = False
+        self._cur[slot.index] = 0
+        self._pos[slot.index] = 0
+        self.stats["preemptions"] += 1
+        self.stats["swap_out_bytes"] = self.pool.swap_out_bytes
+
+    def _resume_parked(self, slot: DecodeSlot, parked: ParkedSeq) -> bool:
+        """Swap a parked sequence back into ``slot`` (PREEMPTED ->
+        ALLOCATED).  False on POOL_FULL with nothing changed — the
+        image stays parked for a later attempt.  On success the slot
+        adopts the parked cell and the exact mid-decode state, so the
+        next block continues the greedy stream byte-identically."""
+        req = parked.req
+        if self.pool.swap_in_preempt(req.req_id, parked.image) != POOL_OK:
+            return False
+        parked.fsm.transition(states.BUFFER_PREEMPTED,
+                              states.BUFFER_ALLOCATED)
+        slot.fsm = parked.fsm
+        slot.request = req
+        slot.prompt = parked.prompt
+        slot.outs = parked.outs
+        slot.generated = parked.generated
+        slot.pos = parked.pos
+        slot.prefill_pos = len(parked.prompt)
+        slot.next_tok = parked.cur
+        slot.chunk_hashes = parked.chunk_hashes
+        if parked.chunk_hashes:
+            for h in parked.chunk_hashes:
+                self._inflight[h] = self._inflight.get(h, 0) + 1
+        slot.pending_prefix = parked.pending_prefix
+        slot.created_prefixes = parked.created_prefixes
+        slot.fresh_resume = True
+        self._cur[slot.index] = parked.cur
+        self._pos[slot.index] = parked.pos
+        self.pool.table(req.req_id).slot = slot.index
+        self.stats["resumes"] += 1
+        self.stats["swap_in_bytes"] = self.pool.swap_in_bytes
+        return True
+
+    def _try_resume(self, slot: DecodeSlot) -> bool:
+        """Offer a free slot to the most urgent parked sequence.  More
+        urgent *intake* work wins the slot instead — but only
+        ``aging_limit`` times, after which the parked sequence is
+        promoted (it has progress invested; starving it while admitting
+        fresh work forever would waste everything already decoded).
+        Under pool pressure the resume may itself preempt a strictly
+        lower-priority running slot."""
+        if not self._parked:
+            return False
+        cand = min(self._parked,
+                   key=lambda p: (p.req.eff_priority, p.req.req_id))
+        best = self.intake.highest_pending_class()
+        if best is not None and best < cand.req.eff_priority:
+            if cand.bypassed < self._ov.aging_limit:
+                cand.bypassed += 1
+                return False
+            cand.req.eff_priority = 0   # aged: promoted + immune
+        if not self._resume_parked(slot, cand):
+            if not self._ov.preemption:
+                return False
+            victim = self._choose_victim(cand.req.eff_priority)
+            if victim is None:
+                return False
+            self._preempt_slot(victim)
+            if not self._resume_parked(slot, cand):
+                return False
+        self._parked.remove(cand)
+        return True
+
+    def _discard_parked(self, parked: ParkedSeq) -> None:
+        """Terminal delivery for a sequence cancelled while parked
+        (PREEMPTED -> FREE): partial output from the parked state, cache
+        insertions this binding created rolled back, pages freed (the
+        swap tombstones are skipped; resident shared pages drop exactly
+        this sequence's references)."""
+        req = parked.req
+        req.tokens_out = parked.outs[:parked.generated].astype(np.int32)
+        req.done_t = time.monotonic()
+        if self.prefix_cache is not None:
+            for key in parked.created_prefixes:
+                self.prefix_cache.evict_key(key)
+        self.pool.free(req.req_id)
+        parked.fsm.transition(states.BUFFER_PREEMPTED, states.BUFFER_FREE)
+        self.stats["cancelled"] += 1
+        self._respond(req)
+
+    def class_ttft(self) -> Dict[int, Dict[str, float]]:
+        """Per-priority-class TTFT summary {class: {n, p50_ms, p99_ms}}
+        over retired requests (overload policy active)."""
+        out: Dict[int, Dict[str, float]] = {}
+        for cls in sorted(self._ttft_by_class):
+            xs = sorted(self._ttft_by_class[cls])
+            out[cls] = {
+                "n": len(xs),
+                "p50_ms": 1e3 * xs[len(xs) // 2],
+                "p99_ms": 1e3 * xs[min(len(xs) - 1, int(0.99 * len(xs)))],
+            }
+        return out
 
     def tick(self) -> Tuple[int, bool]:
         """One engine iteration (micro-batch): abort cancelled slots,
@@ -1146,21 +1483,57 @@ class ServeEngine:
             if req is not None and req.fsm.state == states.REQUEST_CANCELLED:
                 self._abort_slot(slot)
                 worked = True
+        for parked in list(self._parked):
+            if parked.req.fsm.state == states.REQUEST_CANCELLED:
+                self._discard_parked(parked)
+                self._parked.remove(parked)
+                worked = True
         was_idle = not any(s.request is not None for s in self.slots)
         newly: List[DecodeSlot] = []
+        intake_dry = False
         for slot in self.slots:
-            if slot.request is None:
-                req = self._pop_next(slot)
-                if req is None:
-                    break
-                self._bind_slot(slot, req)
-                newly.append(slot)
+            if slot.request is not None:
+                continue
+            # Parked sequences compete with intake for every free slot
+            # (_try_resume arbitrates by effective class, with aging);
+            # a dry intake never blocks later slots from resuming.
+            if self._parked and self._try_resume(slot):
                 worked = True
+                continue
+            if intake_dry:
+                continue
+            req = self._pop_next(slot)
+            if req is None:
+                intake_dry = True
+                continue
+            self._bind_slot(slot, req)
+            newly.append(slot)
+            worked = True
         if newly and was_idle:
             self.stats["batches"] += 1      # new busy period begins
         if self.scheduler not in ("slot_chunked", "slot_paged"):
             for slot in newly:
                 self._prefill_slot(slot)
+        # Slot-pressure preemption: every slot is busy but more urgent
+        # work is waiting — swap the worst strictly-lower-priority
+        # decoding slot out (its sequence parks, loses nothing) and
+        # bind the urgent arrival in its place.  Only reachable under
+        # slot_paged (the policy check pins preemption to it).
+        if (self._ov is not None and self._ov.preemption
+                and all(s.request is not None for s in self.slots)):
+            while True:
+                best = self.intake.highest_pending_class()
+                if best is None:
+                    break
+                victim = self._choose_victim(best)
+                if victim is None:
+                    break
+                self._preempt_slot(victim)
+                req = self._pop_next(victim)
+                if req is None:
+                    break       # shed/cancel drained it; victim resumes
+                self._bind_slot(victim, req)
+                worked = True
         return worked
 
     def _tick_fused(self) -> Tuple[int, bool]:
@@ -1225,6 +1598,7 @@ class ServeEngine:
         served = 0
         for s in active:
             req = s.request
+            s.fresh_resume = False      # a full block decoded: fair game
             row = blk[s.index]
             n_valid = int((row >= 0).sum())
             first_pos = s.generated
@@ -1294,7 +1668,7 @@ class ServeEngine:
             final = v == n_rem
             need = (len(s.prompt) + req.max_tokens if final
                     else s.prefill_pos + v)
-            if self.pool.extend_reservation(req.req_id, need) != POOL_OK:
+            if not self._extend_with_preemption(s, need):
                 self._reject_streaming(s)
                 worked = True
                 continue

@@ -31,10 +31,22 @@ straight through per-slot block tables, and admission/retire only edit
 int32 block-table rows and bitset pages.  The gather/scatter
 ``swap_in``/``swap_out`` pair is the copy-in/copy-out path that
 indirection deletes — no scheduler calls it (it survives as the
-measured baseline for tests/benchmarks and as the hook a future
-host-offload preemption tier would use), and every byte it or any
+measured baseline for tests/benchmarks), and every byte it or any
 other residency copy moves is charged to the honest ``kv_copy_bytes``
-counter, which stays 0 for ``slot_paged``.
+counter, which stays 0 for ``slot_paged`` steady state.
+
+The host-offload preemption tier that pair anticipated now exists
+(DESIGN.md §12): ``swap_out_preempt`` parks a victim sequence by moving
+its PRIVATE pages to host memory and releasing them — refcount>1 pages
+(live prefix shares) are never moved or released, they stay resident for
+their other holders and the victim keeps its references; the block-table
+rows are parked as ``-1`` tombstones inside a :class:`SwapImage`.
+``swap_in_preempt`` re-claims fresh pages all-or-nothing and scatters
+the saved bytes back, so a resumed sequence is byte-identical to one
+never preempted.  Swap traffic is charged to ``kv_copy_bytes`` and
+itemized in ``swap_out_bytes``/``swap_in_bytes`` so the invariant
+``kv_copy_bytes == cow_copy_bytes + swap_in_bytes + swap_out_bytes``
+holds under ``slot_paged``.
 """
 from __future__ import annotations
 
@@ -45,6 +57,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.refcount import RefCountArray
 
@@ -66,6 +79,27 @@ class PageTable:
     n_tokens: int = 0
     slot: Optional[int] = None
     n_reserved: int = 0
+
+
+@dataclasses.dataclass
+class SwapImage:
+    """Host-side parking record for one preempted sequence (DESIGN.md
+    §12).  ``rows`` are the block-table rows whose private live pages
+    were gathered into ``k``/``v`` (numpy, one entry per row, in row
+    order); ``dead_rows`` were reserved-ahead (never-attended) pages
+    released without copying; ``shared_rows`` are refcount>1 prefix
+    pages that never moved — the sequence keeps its references and the
+    block-table rows stay valid while parked."""
+    seq_id: int
+    rows: List[int]
+    k: "np.ndarray"
+    v: "np.ndarray"
+    dead_rows: List[int]
+    shared_rows: List[int]
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.k.nbytes) + int(self.v.nbytes)
 
 
 class PagedKVPool:
@@ -95,6 +129,8 @@ class PagedKVPool:
         # copy-on-write fires (``cow_copy_bytes`` isolates that share).
         self.kv_copy_bytes = 0
         self.cow_copy_bytes = 0
+        self.swap_in_bytes = 0
+        self.swap_out_bytes = 0
         self._peak_pages = 0
         self._shared_peak = 0
         # Pool-pressure escape hatch: the prefix cache registers its LRU
@@ -102,6 +138,7 @@ class PagedKVPool:
         # pages before any claim fails (DESIGN.md §11).
         self._evict: Optional[Callable[[], bool]] = None
         self._cow_fns: Dict[int, Callable] = {}
+        self._swap_fns: Dict[int, Callable] = {}
 
     # -- allocation (lock-free) ------------------------------------------------
     def pages_needed(self, n_tokens: int) -> int:
@@ -149,6 +186,8 @@ class PagedKVPool:
         """Zero the copy/peak counters (benchmark pass boundaries)."""
         self.kv_copy_bytes = 0
         self.cow_copy_bytes = 0
+        self.swap_in_bytes = 0
+        self.swap_out_bytes = 0
         self._peak_pages = self.used_pages()
         self._shared_peak = self._alloc.shared_count()
 
@@ -276,7 +315,8 @@ class PagedKVPool:
     def free(self, seq_id: int) -> None:
         t = self._tables.pop(seq_id)
         for p in t.pages:
-            self._alloc.release(p)
+            if p >= 0:  # skip swap tombstones of a parked sequence
+                self._alloc.release(p)
 
     def free_pages(self) -> int:
         return self.n_pages - self._alloc.count()
@@ -313,6 +353,8 @@ class PagedKVPool:
                 "kv_resident_bytes_peak": self._peak_pages * self.page_nbytes,
                 "kv_copy_bytes": self.kv_copy_bytes,
                 "cow_copy_bytes": self.cow_copy_bytes,
+                "swap_in_bytes": self.swap_in_bytes,
+                "swap_out_bytes": self.swap_out_bytes,
                 "shared_pages": self._alloc.shared_count(),
                 "shared_pages_peak": self._shared_peak}
 
@@ -360,6 +402,91 @@ class PagedKVPool:
                                                self.kv_heads, self.head_dim)
         self.k = self.k.at[idx].set(k_pages)
         self.v = self.v.at[idx].set(v_pages)
+        return OK
+
+    # -- page-swap preemption (the overload tier, DESIGN.md §12) -------------
+    def swap_out_preempt(self, seq_id: int, n_live_tokens: int) -> SwapImage:
+        """Park a sequence host-side, releasing its pool pages.
+
+        Page disposition, by rule not position:
+          * refcount > 1 (live prefix shares) — NEVER moved or
+            released; the victim keeps its references and the rows stay
+            valid, so a preempted prefix-cache hit leaves the shared
+            pages resident and ``cow_copy_bytes`` untouched.
+          * refcount == 1, row < live extent — gathered to host in one
+            indexed read, then released (``-1`` tombstone in the row).
+          * refcount == 1, row >= live extent (reserved-ahead pages no
+            token was ever written to) — released without copying;
+            resume re-claims them blank, and positions past the live
+            extent are never attended before being rewritten.
+
+        Only the copied bytes are charged (``swap_out_bytes``, mirrored
+        into ``kv_copy_bytes``).  The caller parks the returned image
+        with its BUFFER_PREEMPTED cell and later hands it back to
+        :meth:`swap_in_preempt`.
+        """
+        t = self._tables[seq_id]
+        live = 0 if n_live_tokens <= 0 else self.pages_needed(n_live_tokens)
+        rows: List[int] = []
+        dead_rows: List[int] = []
+        shared_rows: List[int] = []
+        for i, p in enumerate(t.pages):
+            if p < 0:
+                continue
+            if self._alloc.refcount(p) > 1:
+                shared_rows.append(i)
+            elif i < live:
+                rows.append(i)
+            else:
+                dead_rows.append(i)
+        if rows:
+            idx = jnp.asarray([t.pages[i] for i in rows], jnp.int32)
+            k_host = np.asarray(self.k[idx])
+            v_host = np.asarray(self.v[idx])
+        else:
+            shape = (0, self.page_size, self.n_layers, self.kv_heads,
+                     self.head_dim)
+            k_host = np.zeros(shape, np.asarray(self.k[0:0]).dtype)
+            v_host = k_host
+        for i in rows + dead_rows:
+            self._alloc.release(t.pages[i])
+            t.pages[i] = -1
+        nbytes = len(rows) * self.page_nbytes
+        self.swap_out_bytes += nbytes
+        self.kv_copy_bytes += nbytes
+        t.slot = None
+        return SwapImage(seq_id, rows, k_host, v_host, dead_rows,
+                         shared_rows)
+
+    def swap_in_preempt(self, seq_id: int, image: SwapImage) -> int:
+        """Re-establish a parked sequence's residency: claim fresh pages
+        for every tombstoned row (all-or-nothing — POOL_FULL leaves the
+        image and table untouched for a later retry), scatter the saved
+        bytes back in one fused donated dispatch, and leave the shared
+        rows alone (they never left).  The resumed sequence reads back
+        byte-identical: pages moved wholesale, and the block-table
+        indirection makes the new physical page numbers invisible."""
+        t = self._tables[seq_id]
+        need = len(image.rows) + len(image.dead_rows)
+        got = self._claim_pages(need)
+        if got is None:
+            return POOL_FULL
+        for i, p in zip(image.rows + image.dead_rows, got):
+            t.pages[i] = p
+        if image.rows:
+            fn = self._swap_fns.get(len(image.rows))
+            if fn is None:
+                fn = jax.jit(lambda k, v, d, kh, vh: (k.at[d].set(kh),
+                                                      v.at[d].set(vh)),
+                             donate_argnums=(0, 1))
+                self._swap_fns[len(image.rows)] = fn
+            d = jnp.asarray(got[:len(image.rows)], jnp.int32)
+            self.k, self.v = fn(self.k, self.v, d,
+                                jnp.asarray(image.k), jnp.asarray(image.v))
+        nbytes = len(image.rows) * self.page_nbytes
+        self.swap_in_bytes += nbytes
+        self.kv_copy_bytes += nbytes
+        self._peak_pages = max(self._peak_pages, self.used_pages())
         return OK
 
 

@@ -414,6 +414,40 @@ class TestStateMachines:
             c.transition(a, b)
         assert c.state == states.BUFFER_FREE
 
+    def test_buffer_preempt_resume_cycle(self):
+        """Figure-4 extension (DESIGN.md §12): ALLOCATED -> PREEMPTED
+        parks a swapped-out sequence; PREEMPTED -> ALLOCATED resumes
+        it; PREEMPTED -> FREE is cancel-while-parked."""
+        c = states.buffer_cell()
+        c.transition(states.BUFFER_FREE, states.BUFFER_RESERVED)
+        c.transition(states.BUFFER_RESERVED, states.BUFFER_ALLOCATED)
+        c.transition(states.BUFFER_ALLOCATED, states.BUFFER_PREEMPTED)
+        c.transition(states.BUFFER_PREEMPTED, states.BUFFER_ALLOCATED)
+        c.transition(states.BUFFER_ALLOCATED, states.BUFFER_RECEIVED)
+        c.transition(states.BUFFER_RECEIVED, states.BUFFER_FREE)
+        assert c.state == states.BUFFER_FREE
+        # cancel-while-parked path
+        c.transition(states.BUFFER_FREE, states.BUFFER_RESERVED)
+        c.transition(states.BUFFER_RESERVED, states.BUFFER_ALLOCATED)
+        c.transition(states.BUFFER_ALLOCATED, states.BUFFER_PREEMPTED)
+        c.transition(states.BUFFER_PREEMPTED, states.BUFFER_FREE)
+        assert c.state == states.BUFFER_FREE
+
+    def test_buffer_preempt_illegal_edges(self):
+        """Only an ALLOCATED (fully prefilled) sequence can park, and a
+        parked one cannot retire without resuming first."""
+        c = states.buffer_cell()
+        c.transition(states.BUFFER_FREE, states.BUFFER_RESERVED)
+        with pytest.raises(states.IllegalTransition):
+            c.cas(states.BUFFER_RESERVED, states.BUFFER_PREEMPTED)
+        c.transition(states.BUFFER_RESERVED, states.BUFFER_ALLOCATED)
+        c.transition(states.BUFFER_ALLOCATED, states.BUFFER_PREEMPTED)
+        with pytest.raises(states.IllegalTransition):
+            c.cas(states.BUFFER_PREEMPTED, states.BUFFER_RECEIVED)
+        # racing resume vs cancel-while-parked: exactly one CAS wins
+        assert c.cas(states.BUFFER_PREEMPTED, states.BUFFER_ALLOCATED)
+        assert not c.cas(states.BUFFER_PREEMPTED, states.BUFFER_FREE)
+
     def test_journal_compaction_preserves_state(self):
         c = states.request_cell()
         for _ in range(100):  # force several compactions

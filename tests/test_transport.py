@@ -552,3 +552,47 @@ class TestOpHandle:
             sca.msg_recv_i()
         with pytest.raises(ValueError):
             pkt.scalar_send_i(1)
+
+    def test_message_priority_fifo(self):
+        """MESSAGE delivery is priority FIFO, as the format documents
+        (satellite of DESIGN.md §12): lower class number drains first,
+        FIFO within a class, unprioritized sends land least urgent."""
+        for lock_free in (True, False):
+            dom = Domain(lock_free=lock_free)
+            msg = dom.connect(ChannelType.MESSAGE,
+                              dom.create_endpoint(0, 20),
+                              dom.create_endpoint(1, 20))
+            assert msg.msg_send("n1", priority=1) == nbb.OK
+            assert msg.send("plain") == nbb.OK          # least urgent
+            assert msg.msg_send("h1", priority=0) == nbb.OK
+            assert msg.msg_send_i("h2", priority=0).completed
+            assert msg.msg_send("n2", priority=1) == nbb.OK
+            got = [msg.recv()[1] for _ in range(5)]
+            assert got == ["h1", "h2", "n1", "n2", "plain"]
+            assert msg.recv() == (nbb.BUFFER_EMPTY, None)
+
+    def test_message_priority_clamped_and_bursts(self):
+        dom = Domain(msg_priorities=2)
+        msg = dom.connect(ChannelType.MESSAGE, dom.create_endpoint(0, 21),
+                          dom.create_endpoint(1, 21))
+        assert msg.msg_send("deep", priority=99) == nbb.OK   # clamps to 1
+        assert msg.msg_send("top", priority=0) == nbb.OK
+        # drain_burst serves whole classes in priority order
+        assert msg.drain_burst() == ["top", "deep"]
+        with pytest.raises(ValueError):
+            Domain(msg_priorities=0)
+
+    def test_priority_transport_transient_status(self):
+        """A mid-insert producer in ANY class surfaces the transient
+        empty status so the consumer spins instead of sleeping; a
+        committed item in a less urgent class still drains through it."""
+        from repro.core.transport import PriorityTransport
+        rings = [SpscQueue(4), SpscQueue(4)]
+        tp = PriorityTransport(rings)
+        assert tp.try_recv() == (nbb.BUFFER_EMPTY, None)
+        rings[1].insert_item("low")
+        rings[0]._uc += 1               # class-0 announced, not committed
+        status, item = tp.try_recv()
+        assert status == nbb.OK and item == "low"   # committed wins now
+        assert tp.try_recv()[0] == nbb.BUFFER_EMPTY_BUT_PRODUCER_INSERTING
+
