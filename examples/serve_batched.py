@@ -37,18 +37,21 @@ def main():
 
     def client(c: int) -> None:
         rng = np.random.default_rng(c)
-        session = eng.connect(c)
-        for i in range(2):
-            prompt = rng.integers(0, cfg.vocab_size, 8)
-            handle = session.submit_i(prompt, max_tokens=8)
-            got = []
-            for pos, tok in handle.tokens(timeout_s=300):
-                got.append((pos, tok))     # delivered as decoded, per step
-            r = handle.response
-            print(f"client {c} req {r.req_id}: streamed {len(got)} tokens "
-                  f"({r.fsm.state.split('_')[-1]}), "
-                  f"ttft {1e3 * (r.first_token_t - r.submit_t):.0f}ms")
-            assert [p for p, _ in got] == list(range(len(r.tokens_out)))
+        # Context-managed: leaving the block cancels anything in flight
+        # and marks the session closed (idempotent), so a client thread
+        # that dies early cannot strand engine-side state.
+        with eng.connect(c) as session:
+            for i in range(2):
+                prompt = rng.integers(0, cfg.vocab_size, 8)
+                handle = session.submit_i(prompt, max_tokens=8)
+                got = []
+                for pos, tok in handle.tokens(timeout_s=300):
+                    got.append((pos, tok))   # delivered as decoded
+                r = handle.response
+                print(f"client {c} req {r.req_id}: streamed {len(got)} "
+                      f"tokens ({r.fsm.state.split('_')[-1]}), "
+                      f"ttft {1e3 * (r.first_token_t - r.submit_t):.0f}ms")
+                assert [p for p, _ in got] == list(range(len(r.tokens_out)))
 
     threads = [threading.Thread(target=client, args=(c,)) for c in range(3)]
     for t in threads:

@@ -57,7 +57,7 @@ from __future__ import annotations
 import time
 from typing import Any, Callable, List, Optional, Protocol, Tuple, runtime_checkable
 
-from repro.core import nbb, nbw, states
+from repro.core import faults, nbb, nbw, states
 
 # Table-1 status codes, re-exported so transport users need one import.
 OK = nbb.OK
@@ -424,6 +424,88 @@ class PriorityTransport:
                 break
             out.extend(t.drain_burst(take))
         return out
+
+    def send_i(self, payload: Any) -> OpHandle:
+        return send_i(self, payload)
+
+    def recv_i(self) -> OpHandle:
+        return recv_i(self)
+
+
+class FaultyTransport:
+    """Inject transport-site faults from a :class:`repro.core.faults.FaultPlan`
+    in front of any inner transport.  Refusals surface as the Table-1
+    statuses the caller already handles (FULL on send, EMPTY on recv) —
+    a fault at the transport layer is indistinguishable from pressure,
+    which is the point: every retry loop in the system is exercised by
+    the same plan that exercises the crash paths.
+
+    The ``stall`` action models a producer dying mid-span-reservation:
+    when the inner transport is a counter ring the announced-but-
+    uncommitted span is actually left in the ring
+    (:func:`repro.core.faults.stall_mid_burst`) before a non-retryable
+    :class:`~repro.core.faults.InjectedFault` marks the producer dead.
+    Recovery is the owner's job (``recover_ring``), mirroring the lease
+    contract.
+
+    Probes use the base site names (``transport.send`` etc.) so plans
+    address a site class, not an instance; ``name`` only labels the
+    wrapper for debugging."""
+
+    __slots__ = ("inner", "plan", "name")
+
+    def __init__(self, inner: Transport, plan: "faults.FaultPlan",
+                 name: str = ""):
+        self.inner, self.plan, self.name = inner, plan, name
+
+    def _stall(self, vals) -> "Tuple[int, int]":
+        ring = self.inner
+        if hasattr(ring, "_uc"):
+            faults.stall_mid_burst(ring, list(vals))
+        raise faults.InjectedFault("transport.stall", self.plan.n_fired,
+                                   retryable=False)
+
+    def send(self, payload: Any) -> int:
+        act = self.plan.fire("transport.send")
+        if act is None:
+            return self.inner.send(payload)
+        if act == faults.ACT_RAISE:
+            raise faults.InjectedFault("transport.send", self.plan.n_fired)
+        return BUFFER_FULL
+
+    def try_recv(self) -> Tuple[int, Optional[Any]]:
+        act = self.plan.fire("transport.recv")
+        if act is None:
+            return self.inner.try_recv()
+        if act == faults.ACT_RAISE:
+            raise faults.InjectedFault("transport.recv", self.plan.n_fired)
+        return BUFFER_EMPTY, None
+
+    def drain(self, max_items: Optional[int] = None) -> List[Any]:
+        act = self.plan.fire("transport.recv")
+        if act is None:
+            return self.inner.drain(max_items)
+        if act == faults.ACT_RAISE:
+            raise faults.InjectedFault("transport.recv", self.plan.n_fired)
+        return []
+
+    def send_burst(self, vals) -> Tuple[int, int]:
+        act = self.plan.fire("transport.send_burst")
+        if act == faults.ACT_STALL:
+            return self._stall(vals)
+        if act is not None:
+            return BUFFER_FULL, 0
+        if self.plan.fire("transport.stall") is not None:
+            return self._stall(vals)
+        return self.inner.send_burst(vals)
+
+    def drain_burst(self, max_n: Optional[int] = None) -> List[Any]:
+        act = self.plan.fire("transport.recv")
+        if act is None:
+            return self.inner.drain_burst(max_n)
+        if act == faults.ACT_RAISE:
+            raise faults.InjectedFault("transport.recv", self.plan.n_fired)
+        return []
 
     def send_i(self, payload: Any) -> OpHandle:
         return send_i(self, payload)

@@ -94,6 +94,16 @@ def main(argv=None) -> ServeEngine:
                     help="admission SLO: shed any request that waited "
                          "longer than this in the intake before binding "
                          "(implies --priorities)")
+    ap.add_argument("--lease-s", type=float, default=None,
+                    help="per-session lease: a client silent (no pump, "
+                         "no submit) longer than this is presumed dead — "
+                         "its in-flight requests fail with a typed "
+                         "terminal and its slots/pages/rings are "
+                         "reclaimed (DESIGN.md §13)")
+    ap.add_argument("--tick-retries", type=int, default=1,
+                    help="whole-tick retries the watchdog grants a "
+                         "transient dispatch fault before failing the "
+                         "bound slots (DESIGN.md §13)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -140,7 +150,8 @@ def main(argv=None) -> ServeEngine:
                       scheduler=scheduler, k_max=args.k_max,
                       chunk_tokens=min(args.chunk_tokens, args.max_len),
                       prefix_cache=not args.no_prefix_cache,
-                      overload=overload)
+                      overload=overload, lease_s=args.lease_s,
+                      tick_retries=args.tick_retries)
     eng_thread = eng.start()
 
     # One private SPSC result ring per client (client thread produces,
@@ -155,31 +166,36 @@ def main(argv=None) -> ServeEngine:
 
     def client(c: int) -> None:
         rng = np.random.default_rng(c)
-        session = eng.connect(c)
-        for _ in range(args.requests_per_client):
-            prompt = np.concatenate([
-                shared, rng.integers(0, cfg.vocab_size, args.prompt_len)])
-            # submit_i never blocks: a full intake ring just leaves the
-            # handle PENDING and its own polling retries the send.
-            if overload is not None:
-                u = rng.random()
-                pri = (PRIORITY_HIGH if u < 0.2
-                       else PRIORITY_NORMAL if u < 0.8 else PRIORITY_LOW)
-                handle = session.submit_i(prompt,
-                                          max_tokens=args.max_tokens,
-                                          priority=pri)
-            else:
-                handle = session.submit_i(prompt,
-                                          max_tokens=args.max_tokens)
-            n_stream = sum(1 for _ in handle.tokens(timeout_s=300))
-            r = handle.response
-            assert r is not None and n_stream == len(r.tokens_out)
-            # Rejected/cancelled requests never produced a first token;
-            # report their ttft as completion time like the wave baseline.
-            ttft_t = r.first_token_t or r.done_t
-            status = results[c].send((r.done_t - r.submit_t,
-                                      ttft_t - r.submit_t))
-            assert status == nbb.OK     # ring is sized to fit every result
+        # Context-managed session: in-flight handles are cancelled and
+        # the client's rings drop cleanly even when a client thread dies
+        # mid-run (the robustness the lease reaper backstops server-side).
+        with eng.connect(c) as session:
+            for _ in range(args.requests_per_client):
+                prompt = np.concatenate([
+                    shared,
+                    rng.integers(0, cfg.vocab_size, args.prompt_len)])
+                # submit_i never blocks: a full intake ring just leaves
+                # the handle PENDING and its own polling retries the send.
+                if overload is not None:
+                    u = rng.random()
+                    pri = (PRIORITY_HIGH if u < 0.2
+                           else PRIORITY_NORMAL if u < 0.8 else PRIORITY_LOW)
+                    handle = session.submit_i(prompt,
+                                              max_tokens=args.max_tokens,
+                                              priority=pri)
+                else:
+                    handle = session.submit_i(prompt,
+                                              max_tokens=args.max_tokens)
+                n_stream = sum(1 for _ in handle.tokens(timeout_s=300))
+                r = handle.response
+                assert r is not None and n_stream == len(r.tokens_out)
+                # Rejected/cancelled requests never produced a first
+                # token; report their ttft as completion time like the
+                # wave baseline.
+                ttft_t = r.first_token_t or r.done_t
+                status = results[c].send((r.done_t - r.submit_t,
+                                          ttft_t - r.submit_t))
+                assert status == nbb.OK     # sized to fit every result
 
     t0 = time.monotonic()
     threads = [threading.Thread(target=client, args=(c,))
@@ -207,6 +223,17 @@ def main(argv=None) -> ServeEngine:
     print(f"latency ms: p50 {_pct(lat, 0.5):.0f} p95 {_pct(lat, 0.95):.0f}")
     print(f"ttft ms:    p50 {_pct(ttft, 0.5):.0f} p95 {_pct(ttft, 0.95):.0f}")
     print(f"engine stats: {eng.stats}")
+    # Robustness report (DESIGN.md §13): what the self-healing machinery
+    # actually did this run — all zeros unless a fault plan or lease was
+    # armed, but printed whenever the knobs are on so the counters are
+    # visible where operators look for them.
+    if args.lease_s is not None or eng.faults is not None:
+        fr = eng.fault_report()
+        print(f"robustness: faults injected {fr['faults_injected']}  "
+              f"requests failed {fr['requests_failed']}  "
+              f"leases reaped {fr['leases_reaped']}  "
+              f"pages quarantined {fr['pages_quarantined']}  "
+              f"dead: {fr['dead'] or 'no'}")
     if scheduler != "wave":
         syncs_tok = eng.stats["host_syncs"] / max(toks, 1)
         print(f"slot occupancy: {eng.occupancy():.2f}  "

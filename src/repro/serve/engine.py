@@ -109,6 +109,7 @@ lock):
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import math
@@ -121,6 +122,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as faults_mod
 from repro.core import nbb, states, transport
 from repro.core.host_queue import MpscQueue, SpscQueue
 from repro.models.model import prefix_chunk_hashes
@@ -182,6 +184,22 @@ class OversizeStatus:
     padded_len: int
     max_tokens: int
     max_len: int
+
+    def __bool__(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class FailedStatus:
+    """Typed terminal failure (DESIGN.md §13): the engine — not the
+    client — ended this request, because a fault landed on its slot
+    (watchdog fail-all, poisoned write), its lease expired, or the
+    engine died.  Falsy like :class:`TimeoutStatus`, with the
+    human-readable ``reason`` attached; rides ``Request.status`` to the
+    client handle, and is also what ``wait``/``get_response`` return
+    when the whole engine is dead — nothing hangs on a dead engine."""
+
+    reason: str
 
     def __bool__(self) -> bool:
         return False
@@ -270,7 +288,25 @@ class RequestHandle:
             self._session.forget(self.req.req_id)
             self._final = self.req
             return True
-        return self._session.pump() or moved
+        moved = self._session.pump() or moved
+        if self._final is None and self._session.engine.dead is not None:
+            # The engine died after accepting this request: nothing will
+            # ever deliver its terminal, so finalize locally with the
+            # typed falsy FailedStatus instead of hanging until timeout.
+            req = self.req
+            if req.done_t == 0.0:
+                req.done_t = time.monotonic()
+            if req.tokens_out is None:
+                req.tokens_out = np.zeros((0,), np.int32)
+            if self.status is None:
+                self.status = (req.status if req.status is not None else
+                               FailedStatus(self._session.engine.dead))
+            if req.status is None:
+                req.status = self.status
+            self._session.forget(req.req_id)
+            self._final = req
+            return True
+        return moved
 
     def test(self) -> bool:
         """Non-blocking: True iff the request has reached a terminal
@@ -280,9 +316,11 @@ class RequestHandle:
         return self._final is not None
 
     def wait(self, timeout_s: Optional[float] = None
-             ) -> Union[Request, TimeoutStatus]:
+             ) -> Union[Request, TimeoutStatus, "FailedStatus"]:
         """Block (Backoff discipline) until terminal; the final Request,
-        or a falsy TimeoutStatus with the handle still live."""
+        or a falsy TimeoutStatus with the handle still live.  On a dead
+        engine this returns the falsy :class:`FailedStatus` immediately
+        (reason attached) instead of hanging until timeout."""
         b = transport.Backoff()
         deadline = (None if timeout_s is None
                     else time.monotonic() + timeout_s)
@@ -293,6 +331,9 @@ class RequestHandle:
             if deadline is not None and time.monotonic() > deadline:
                 return TimeoutStatus(waited_s=timeout_s)
             b.wait(nbb.BUFFER_EMPTY)
+        if (isinstance(self.status, FailedStatus)
+                and self._session.engine.dead is not None):
+            return self.status
         return self._final
 
     def tokens(self, timeout_s: Optional[float] = None
@@ -374,6 +415,13 @@ class Session:
         self._handles: Dict[int, RequestHandle] = {}    # full req_id
         self._by_mask: Dict[int, RequestHandle] = {}    # req_id & _REQ_MASK
         self._completed: deque = deque()
+        # Explicit teardown (DESIGN.md §13): closed sessions refuse new
+        # submits with an already-terminal FailedStatus handle.
+        self.closed = False
+        # Lease heartbeat: any receive-side activity (pump) or a fresh
+        # submit renews the client's lease; the engine's reaper treats a
+        # client silent past ``lease_s`` as dead and reclaims its stake.
+        self.last_pump_t = time.monotonic()
 
     def submit_i(self, prompt: np.ndarray, max_tokens: int = 16,
                  eos_id: int = -1, priority: Optional[int] = None,
@@ -401,6 +449,17 @@ class Session:
         req = Request(next(eng._id), self.client_id,
                       np.asarray(prompt, np.int32), max_tokens, eos_id,
                       submit_t=time.monotonic())
+        if self.closed:
+            req.fsm.transition(states.REQUEST_FREE, states.REQUEST_VALID)
+            req.fsm.transition(states.REQUEST_VALID,
+                               states.REQUEST_CANCELLED)
+            req.done_t = time.monotonic()
+            req.tokens_out = np.zeros((0,), np.int32)
+            h = RequestHandle(self, req, None)
+            h._final = req
+            h.status = req.status = FailedStatus("session closed")
+            return h
+        self.last_pump_t = time.monotonic()   # submitting client is alive
         if priority is not None:
             req.priority = req.eff_priority = int(priority)
         req.slo_s = slo_s
@@ -453,6 +512,7 @@ class Session:
         through a whole token block pays one ring exchange to catch up,
         not one round trip per token.  Returns True iff anything
         arrived."""
+        self.last_pump_t = time.monotonic()     # lease heartbeat
         moved = False
         for ev in self.engine.streams[self.client_id].drain_burst():
             moved = True
@@ -472,9 +532,13 @@ class Session:
         return moved
 
     def next_response(self, timeout_s: float = 30.0
-                      ) -> Union[Request, TimeoutStatus]:
+                      ) -> Union[Request, TimeoutStatus, FailedStatus]:
         """Next terminal Request in completion order (whole-response
-        surface).  Falsy TimeoutStatus on timeout — never a bare raise."""
+        surface).  Falsy TimeoutStatus on timeout — never a bare raise.
+        On a dead engine, once the rings are drained, a falsy
+        :class:`FailedStatus` is returned immediately (the engine will
+        never produce another terminal — waiting out the timeout would
+        just be a slower way to learn the same thing)."""
         b = transport.Backoff()
         deadline = time.monotonic() + timeout_s
         while True:
@@ -483,9 +547,34 @@ class Session:
             if self.pump():
                 b.reset()
                 continue
+            if self.engine.dead is not None:
+                return FailedStatus(self.engine.dead)
             if time.monotonic() > deadline:
                 return TimeoutStatus(waited_s=timeout_s)
             b.wait(nbb.BUFFER_EMPTY)
+
+    def close(self) -> None:
+        """Explicit teardown (idempotent): cancel every in-flight
+        handle, pump once so already-delivered terminals land, then
+        refuse further submits (they get already-terminal FailedStatus
+        handles).  The engine reclaims the cancelled requests' slots and
+        pages on its next tick — close never blocks on the batcher, and
+        the engine's delivery paths drop this client's traffic instead
+        of retrying into rings nobody drains."""
+        if self.closed:
+            return
+        for h in list(self._handles.values()):
+            h.cancel()
+        self.pump()
+        self.closed = True
+        self._handles.clear()
+        self._by_mask.clear()
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
 
 
 @dataclasses.dataclass
@@ -575,7 +664,9 @@ class ServeEngine:
                  scheduler: str = "slot_fused", k_max: int = 8,
                  k_free: int = 2, chunk_tokens: int = 16,
                  prefix_cache: bool = True,
-                 overload: Optional[OverloadPolicy] = None):
+                 overload: Optional[OverloadPolicy] = None,
+                 fault_plan: Optional["faults_mod.FaultPlan"] = None,
+                 lease_s: Optional[float] = None, tick_retries: int = 1):
         if scheduler not in ("slot_paged", "slot_chunked", "slot_fused",
                              "slot", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
@@ -693,17 +784,56 @@ class ServeEngine:
                       # the pool's itemized counters) and requests shed
                       # at admission past their SLO.
                       "preemptions": 0, "resumes": 0, "shed_requests": 0,
-                      "swap_in_bytes": 0, "swap_out_bytes": 0}
+                      "swap_in_bytes": 0, "swap_out_bytes": 0,
+                      # Robustness counters (DESIGN.md §13): faults the
+                      # armed plan fired, requests the ENGINE terminated
+                      # (watchdog/lease/poison — distinct from client
+                      # cancels and admission rejects), leases reaped,
+                      # and pages quarantined after poisoned writes.
+                      "faults_injected": 0, "requests_failed": 0,
+                      "leases_reaped": 0, "pages_quarantined": 0}
         # Append-only log of fail-fast oversize rejects (written by
         # client threads in submit_i; list.append is the atomic).
         self.oversize_log: List[int] = []
+        # -- robustness layer (DESIGN.md §13) ------------------------------
+        if lease_s is not None and lease_s <= 0:
+            raise ValueError(f"lease_s must be positive, got {lease_s}")
+        if tick_retries < 0:
+            raise ValueError(f"tick_retries must be >= 0, "
+                             f"got {tick_retries}")
+        self.faults = fault_plan
+        self.pool.faults = fault_plan
+        self.lease_s = lease_s
+        self.tick_retries = int(tick_retries)
+        # Set once by _die(): the engine can no longer make progress;
+        # every receive surface observes it and resolves with a typed
+        # falsy FailedStatus instead of hanging.
+        self.dead: Optional[str] = None
+        self._tick_failures = 0         # consecutive failed ticks (watchdog)
+        self._reaped: set = set()       # clients whose lease was reaped
+        if fault_plan is not None:
+            # Thread the plan through the engine's own delivery rings so
+            # transport sites cover the token/terminal planes too (the
+            # intake side probes in _intake_recv).
+            self.streams = [
+                transport.FaultyTransport(r, fault_plan, f"stream{c}")
+                for c, r in enumerate(self.streams)]
+            self.responses = [
+                transport.FaultyTransport(r, fault_plan, f"responses{c}")
+                for c, r in enumerate(self.responses)]
 
     # -- client API (one thread per client) -------------------------------------
     def connect(self, client_id: int) -> Session:
         """The client's streaming session.  One per client: the session
         owns the consumer side of the client's response/stream rings, so
-        all receive-side calls for a client must come from one thread."""
-        return self._sessions[client_id]
+        all receive-side calls for a client must come from one thread.
+        Connecting RE-OPENS a closed session: close() left nothing in
+        flight, so the new holder starts clean with a fresh lease."""
+        sess = self._sessions[client_id]
+        if sess.closed:
+            sess.closed = False
+            sess.last_pump_t = time.monotonic()
+        return sess
 
     def submit(self, client_id: int, prompt: np.ndarray,
                max_tokens: int = 16, eos_id: int = -1,
@@ -732,9 +862,17 @@ class ServeEngine:
     def _respond(self, req: Request) -> None:
         # Response ring full => bounded backoff, never a spin-pin.  The
         # send can only fail during shutdown (should_stop); record the
-        # drop so stats never silently overcount deliveries.
+        # drop so stats never silently overcount deliveries.  A client
+        # presumed dead (reaped lease), a closed session, or a dead
+        # engine gets a short timeout instead of an unbounded retry —
+        # nobody drains that ring, and the batcher must not wedge on it
+        # (handles resolve through Request.status / engine.dead anyway).
         self.stats["ring_ops"] += 1
+        abandoned = (self.dead is not None
+                     or req.client_id in self._reaped
+                     or self._sessions[req.client_id].closed)
         if not transport.send_blocking(self.responses[req.client_id], req,
+                                       timeout_s=0.05 if abandoned else None,
                                        should_stop=self._stop.is_set):
             self.stats["dropped_responses"] += 1
 
@@ -747,6 +885,12 @@ class ServeEngine:
         not fit is dropped (counted), and every dropped position is
         still delivered exactly once at completion via ``tokens_out``
         (handles fill the gaps)."""
+        if (self._sessions[req.client_id].closed
+                or req.client_id in self._reaped):
+            # Nobody drains this stream ring anymore: dropping beats
+            # filling a ring whose consumer is gone.
+            self.stats["dropped_stream_events"] += len(toks)
+            return
         evs = [pack_token_event(req.req_id, first_pos + j, int(t))
                for j, t in enumerate(toks)]
         _, n = self.streams[req.client_id].send_burst(evs)
@@ -774,6 +918,207 @@ class ServeEngine:
             req.tokens_out = np.zeros((0,), np.int32)
         self.stats["cancelled"] += 1
         self._respond(req)
+
+    # -- self-healing (fault injection + recovery, DESIGN.md §13) --------------
+    @staticmethod
+    def _raw_ring(t):
+        """The counter ring under a FaultyTransport wrapper (or ``t``
+        itself): recovery code operates on the real ring, not through
+        the fault layer."""
+        return getattr(t, "inner", t)
+
+    def _fault_raise(self, site: str, retryable: bool = True) -> None:
+        """Engine-side injection probe (dispatch/sync sites)."""
+        if self.faults is not None and self.faults.fire(site) is not None:
+            raise faults_mod.InjectedFault(site, self.faults.n_fired,
+                                           retryable=retryable)
+
+    def _paused_plan(self):
+        """Context: suspend fault firing while recovery code runs, so
+        cleanup never recurses into fresh injected faults."""
+        return (self.faults.pause() if self.faults is not None
+                else contextlib.nullcontext())
+
+    def _fail_slot(self, slot: DecodeSlot, reason: str) -> None:
+        """Engine-initiated terminal for a bound slot (watchdog fail-all,
+        lease reap, poisoned write): the mirror of ``_abort_slot`` with a
+        typed FailedStatus and the ``requests_failed`` counter.  Partial
+        output is delivered; cache insertions this binding created are
+        rolled back and the pages freed — pool state returns exactly to
+        pre-admission (minus any pages quarantine pinned first)."""
+        req = slot.request
+        req.status = FailedStatus(reason)
+        req.tokens_out = slot.outs[:slot.generated].astype(np.int32)
+        req.done_t = time.monotonic()
+        if req.fsm.cas(states.REQUEST_RECEIVED, states.REQUEST_CANCELLED):
+            self.stats["requests_failed"] += 1
+        else:
+            self.stats["cancelled"] += 1    # client cancel won the race
+        self._rollback_created(slot)
+        self.pool.free(req.req_id)
+        self._respond(req)
+        self._release_slot(slot)
+
+    def _fail_queued(self, req: Request, reason: str) -> None:
+        """Engine-initiated terminal for a request that never reached a
+        slot (lease reap / dead-engine intake drain)."""
+        req.status = FailedStatus(reason)
+        if req.fsm.cas(states.REQUEST_VALID, states.REQUEST_CANCELLED):
+            self.stats["requests_failed"] += 1
+        else:
+            self.stats["cancelled"] += 1
+        req.done_t = time.monotonic()
+        if req.tokens_out is None:
+            req.tokens_out = np.zeros((0,), np.int32)
+        self._respond(req)
+
+    def _client_rings(self, client_id: int) -> List[object]:
+        """The client's private intake ring(s): one flat MPSC ring, or
+        one per priority class under an overload policy."""
+        if self._ov is None:
+            return [self.intake.producer(client_id)]
+        return [q.producer(client_id) for q in self.intake._queues]
+
+    def _reap_leases(self) -> bool:
+        """Per-session leases (DESIGN.md §13): a client silent past
+        ``lease_s`` — no pump, no submit — is presumed dead.  Its whole
+        stake is reclaimed in one sweep: bound slots and parked images
+        fail with a typed terminal, queued submissions (including a span
+        its dying thread announced but never committed —
+        ``recover_ring`` is legal exactly because the lease declared the
+        producer dead) are drained and failed, and the engine adopts the
+        consumer side of the abandoned stream ring so stale events can't
+        pin it.  A client that pumps again after reaping simply renews
+        its lease and keeps using the session."""
+        now = time.monotonic()
+        worked = False
+        for sess in self._sessions:
+            c = sess.client_id
+            if now - sess.last_pump_t <= self.lease_s:
+                self._reaped.discard(c)     # heartbeat seen: renewed
+                continue
+            if c in self._reaped:
+                continue
+            self._reaped.add(c)     # responses to it are now time-bounded
+            reason = (f"lease expired: client {c} silent > "
+                      f"{self.lease_s:g}s")
+            with self._paused_plan():
+                had = False
+                for slot in self.slots:
+                    if (slot.request is not None
+                            and slot.request.client_id == c):
+                        self._fail_slot(slot, reason)
+                        had = True
+                for parked in [p for p in self._parked
+                               if p.req.client_id == c]:
+                    parked.req.status = FailedStatus(reason)
+                    self._discard_parked(parked, failed=True)
+                    self._parked.remove(parked)
+                    had = True
+                keep: List[Tuple[Request, List[int]]] = []
+                for req, keys in self._deferred:
+                    if req.client_id == c:
+                        self._fail_queued(req, reason)
+                        had = True
+                    else:
+                        keep.append((req, keys))
+                self._deferred = keep
+                for ring in self._client_rings(c):
+                    faults_mod.recover_ring(ring)
+                    for req in ring.drain_burst():
+                        self._fail_queued(req, reason)
+                        had = True
+                if self._raw_ring(self.streams[c]).drain_burst():
+                    had = True
+            if had:
+                self.stats["leases_reaped"] += 1
+                worked = True
+        return worked
+
+    def _on_tick_fault(self, exc: Exception) -> Tuple[int, bool]:
+        """The tick watchdog's catch half.  A retryable fault (an
+        injected dispatch refusal, or any exception not marked
+        otherwise) earns up to ``tick_retries`` whole-tick retries —
+        pre-dispatch host bookkeeping is idempotent, so the retry simply
+        reassembles and redispatches.  Past that (or on a non-retryable
+        sync fault, where the device advanced beyond what the host
+        harvested) every bound slot fails with a typed terminal and the
+        engine KEEPS SERVING: queued and future requests are unaffected.
+        The engine's own rings are rolled back from any announced-but-
+        uncommitted span first — the engine thread is their producer, so
+        the rollback is unconditionally legal."""
+        retryable = bool(getattr(exc, "retryable", True))
+        self._tick_failures += 1
+        if retryable and self._tick_failures <= self.tick_retries:
+            return 0, True              # transient: next tick retries
+        self._tick_failures = 0
+        reason = f"tick failed: {exc!r}"
+        with self._paused_plan():
+            for t in list(self.streams) + list(self.responses):
+                faults_mod.recover_ring(self._raw_ring(t))
+            for slot in self.slots:
+                if slot.request is None:
+                    continue
+                try:
+                    self._fail_slot(slot, reason)
+                except Exception:       # never re-raise out of tick
+                    pass
+        return 0, True
+
+    def _die(self, reason: str) -> None:
+        """Terminal engine failure (the loop itself crashed — beyond
+        what fail-all-and-continue can heal): record the cause, resolve
+        EVERY outstanding request with a typed falsy terminal, and leave
+        ``dead`` set so every receive surface (handle ``wait``,
+        ``next_response``/``get_response``) returns immediately instead
+        of hanging on an engine that will never answer."""
+        if self.dead is not None:
+            return
+        self.dead = reason
+        self._stop.set()
+        with self._paused_plan():
+            for t in list(self.streams) + list(self.responses):
+                faults_mod.recover_ring(self._raw_ring(t))
+            for slot in self.slots:
+                if slot.request is None:
+                    continue
+                try:
+                    self._fail_slot(slot, reason)
+                except Exception:
+                    pass
+            for parked in list(self._parked):
+                parked.req.status = FailedStatus(reason)
+                try:
+                    self._discard_parked(parked, failed=True)
+                except Exception:
+                    pass
+                self._parked.remove(parked)
+            for req, _ in self._deferred:
+                self._fail_queued(req, reason)
+            self._deferred = []
+            while True:
+                status, req = self._intake_recv()
+                if status != nbb.OK or req is None:
+                    break
+                self._fail_queued(req, reason)
+        if self.faults is not None:
+            self.stats["faults_injected"] = self.faults.n_fired
+
+    def fault_report(self) -> Dict[str, object]:
+        """Robustness snapshot (printed by launch/serve.py): the four
+        §13 counters plus the fired-site log and death reason."""
+        if self.faults is not None:
+            self.stats["faults_injected"] = self.faults.n_fired
+        return {
+            "faults_injected": self.stats["faults_injected"],
+            "requests_failed": self.stats["requests_failed"],
+            "leases_reaped": self.stats["leases_reaped"],
+            "pages_quarantined": self.stats["pages_quarantined"],
+            "quarantined_pages": sorted(self.pool.quarantined),
+            "dead": self.dead,
+            "fired_sites": (list(self.faults.fired)
+                            if self.faults is not None else []),
+        }
 
     # ===========================================================================
     # Iteration-level scheduler (default): slot swap, no wave barrier.
@@ -1153,6 +1498,9 @@ class ServeEngine:
         multi-class pop; a request served by AGING over a more urgent
         nonempty class is promoted (eff_priority 0) so the bypass that
         earned its turn also shields it from instant preemption."""
+        if self.faults is not None and \
+                self.faults.fire("transport.recv") is not None:
+            return nbb.BUFFER_EMPTY, None   # injected: pop refused
         if self._ov is None:
             return self.intake.try_recv()
         status, req, promoted = self.intake.pop()
@@ -1213,9 +1561,8 @@ class ServeEngine:
             if self._ov is None or not self._ov.preemption:
                 return False
             victim = self._choose_victim(req.eff_priority)
-            if victim is None:
+            if victim is None or not self._preempt_slot(victim):
                 return False
-            self._preempt_slot(victim)
 
     def _extend_with_preemption(self, s: DecodeSlot, need: int) -> bool:
         """Chunk-assembly reservation growth with the same escape hatch.
@@ -1229,20 +1576,26 @@ class ServeEngine:
             if self._ov is None or not self._ov.preemption:
                 return False
             victim = self._choose_victim(s.request.eff_priority)
-            if victim is None:
+            if victim is None or not self._preempt_slot(victim):
                 return False
-            self._preempt_slot(victim)
 
-    def _preempt_slot(self, slot: DecodeSlot) -> None:
+    def _preempt_slot(self, slot: DecodeSlot) -> bool:
         """Park ``slot``'s sequence host-side (ALLOCATED -> PREEMPTED).
 
         The pool swaps out only the sequence's PRIVATE pages (shared
         prefix pages stay resident with their refcounts — the prefix
         cache never pays for someone else's preemption); the Figure-4
         cell travels with the parked sequence and the slot gets a fresh
-        FREE cell, ready to bind the work that displaced it."""
+        FREE cell, ready to bind the work that displaced it.
+
+        False when an injected ``pool.swap_out`` fault lands: the probe
+        raises *before* any pool mutation, so the victim keeps decoding
+        untouched and callers treat the failure as "no victim found"."""
         req = slot.request
-        image = self.pool.swap_out_preempt(req.req_id, slot.pos)
+        try:
+            image = self.pool.swap_out_preempt(req.req_id, slot.pos)
+        except faults_mod.InjectedFault:
+            return False                # pre-mutation: victim unharmed
         self.stats["host_syncs"] += 1   # the gather's device->host fetch
         slot.fsm.transition(states.BUFFER_ALLOCATED, states.BUFFER_PREEMPTED)
         self._parked.append(ParkedSeq(
@@ -1269,6 +1622,7 @@ class ServeEngine:
         self._pos[slot.index] = 0
         self.stats["preemptions"] += 1
         self.stats["swap_out_bytes"] = self.pool.swap_out_bytes
+        return True
 
     def _resume_parked(self, slot: DecodeSlot, parked: ParkedSeq) -> bool:
         """Swap a parked sequence back into ``slot`` (PREEMPTED ->
@@ -1325,20 +1679,21 @@ class ServeEngine:
             if not self._ov.preemption:
                 return False
             victim = self._choose_victim(cand.req.eff_priority)
-            if victim is None:
+            if victim is None or not self._preempt_slot(victim):
                 return False
-            self._preempt_slot(victim)
             if not self._resume_parked(slot, cand):
                 return False
         self._parked.remove(cand)
         return True
 
-    def _discard_parked(self, parked: ParkedSeq) -> None:
+    def _discard_parked(self, parked: ParkedSeq, failed: bool = False) -> None:
         """Terminal delivery for a sequence cancelled while parked
         (PREEMPTED -> FREE): partial output from the parked state, cache
         insertions this binding created rolled back, pages freed (the
         swap tombstones are skipped; resident shared pages drop exactly
-        this sequence's references)."""
+        this sequence's references).  ``failed``: engine-initiated (lease
+        reap / dead engine) rather than a client cancel — counted under
+        ``requests_failed``; the caller set the FailedStatus."""
         req = parked.req
         req.tokens_out = parked.outs[:parked.generated].astype(np.int32)
         req.done_t = time.monotonic()
@@ -1347,7 +1702,13 @@ class ServeEngine:
                 self.prefix_cache.evict_key(key)
         self.pool.free(req.req_id)
         parked.fsm.transition(states.BUFFER_PREEMPTED, states.BUFFER_FREE)
-        self.stats["cancelled"] += 1
+        if failed and req.fsm.cas(states.REQUEST_RECEIVED,
+                                  states.REQUEST_CANCELLED):
+            self.stats["requests_failed"] += 1
+        else:
+            if failed:
+                req.fsm.cas(states.REQUEST_VALID, states.REQUEST_CANCELLED)
+            self.stats["cancelled"] += 1
         self._respond(req)
 
     def class_ttft(self) -> Dict[int, Dict[str, float]]:
@@ -1369,12 +1730,30 @@ class ServeEngine:
         steps (``slot_fused``) or a single decode step (``slot``, the
         K=1 baseline); ``slot_chunked`` additionally streams one prompt
         chunk per admitting slot inside the same dispatch.  Returns
-        (requests retired, did work)."""
-        if self.scheduler in ("slot_chunked", "slot_paged"):
-            return self._tick_chunked()
-        if self.scheduler == "slot_fused":
-            return self._tick_fused()
-        return self._tick_scalar()
+        (requests retired, did work).
+
+        The whole dispatch runs under the tick watchdog: an exception —
+        injected or organic — NEVER propagates out of ``tick()``.
+        Transient faults earn ``tick_retries`` whole-tick retries;
+        beyond that the bound slots fail with typed terminals and the
+        engine keeps serving (``_on_tick_fault``).  When leases are
+        armed, silent clients are reaped first."""
+        if self.dead is not None:
+            return 0, False
+        reaped = self._reap_leases() if self.lease_s is not None else False
+        try:
+            if self.scheduler in ("slot_chunked", "slot_paged"):
+                served, worked = self._tick_chunked()
+            elif self.scheduler == "slot_fused":
+                served, worked = self._tick_fused()
+            else:
+                served, worked = self._tick_scalar()
+            self._tick_failures = 0
+        except Exception as exc:        # noqa: BLE001 — watchdog boundary
+            served, worked = self._on_tick_fault(exc)
+        if self.faults is not None:
+            self.stats["faults_injected"] = self.faults.n_fired
+        return served, worked or reaped
 
     def _finished(self, req: Request, tok: int, generated: int,
                   pos: int) -> bool:
@@ -1526,9 +1905,8 @@ class ServeEngine:
                 if best is None:
                     break
                 victim = self._choose_victim(best)
-                if victim is None:
+                if victim is None or not self._preempt_slot(victim):
                     break
-                self._preempt_slot(victim)
                 req = self._pop_next(victim)
                 if req is None:
                     break       # shed/cancel drained it; victim resumes
@@ -1572,6 +1950,7 @@ class ServeEngine:
         for s in active:
             rem_v[s.index] = s.request.max_tokens - s.generated
             eos_v[s.index] = s.request.eos_id
+        self._fault_raise("engine.dispatch")    # pre-device: retry is safe
         t0 = time.monotonic()
         # K=1 rides the same donated decode_loop trace (a scan of one
         # decode_step): uniform harvest below, and the persistent cache
@@ -1583,6 +1962,7 @@ class ServeEngine:
         blk = np.asarray(blk_dev).astype(np.int64)
         self.stats["host_syncs"] += 1   # the ONE sync for the whole block
         t1 = time.monotonic()
+        self._fault_raise("engine.sync", retryable=False)
         served += self._harvest_block(active, blk, k, t0, t1)
         return served, True
 
@@ -1685,6 +2065,20 @@ class ServeEngine:
                 self._reject_streaming(s)
                 worked = True
                 continue
+            if (self.faults is not None
+                    and self.faults.fire("pool.page_write") is not None):
+                # Poisoned write: the pages this chunk would have
+                # scattered into are declared corrupted.  Quarantine
+                # pins them BEFORE _fail_slot frees the sequence (the
+                # pin is the extra refcount that survives the free), so
+                # they never re-enter circulation.
+                qp = self.pool.quarantine_range(req.req_id,
+                                                s.prefill_pos, need)
+                self.stats["pages_quarantined"] += len(qp)
+                self._fail_slot(s, "poisoned page write "
+                                   f"({len(qp)} pages quarantined)")
+                worked = True
+                continue
             chunk[s.index, :v] = s.prompt[s.prefill_pos:s.prefill_pos + v]
             start_v[s.index] = s.prefill_pos
             nval_v[s.index] = v
@@ -1749,6 +2143,11 @@ class ServeEngine:
         else:
             k = 0
         # 3) ONE dispatch: chunk and K-step block fused when both exist.
+        # Dispatch probe sits here — after ALL host bookkeeping, before
+        # any device work — so a retried tick reassembles idempotently
+        # (extend claims 0 new pages, ensure_private finds nothing
+        # shared) and redispatches the identical work.
+        self._fault_raise("engine.dispatch")
         t0 = time.monotonic()
         tok_pf = blk = None
         if chunks and k:
@@ -1776,6 +2175,10 @@ class ServeEngine:
             self.stats["prefills"] += 1
             self.stats["prefill_dispatches"] += 1
         t1 = time.monotonic()
+        # Sync "timeout": the device advanced but the host never
+        # harvested — a retry would re-decode past the recorded state,
+        # so this one is non-retryable: the watchdog fails the slots.
+        self._fault_raise("engine.sync", retryable=False)
         # 4) Harvest chunks.  A final chunk delivers the prefill's first
         #    token straight from the regular block fetch (exact TTFT, no
         #    dedicated host sync), flips the slot ALLOCATED, and — when
@@ -1851,11 +2254,13 @@ class ServeEngine:
         #    masked by their own per-row position (layers.attention).
         active = [s for s in self.slots if s.request is not None]
         if active:
+            self._fault_raise("engine.dispatch")
             cur, self._caches = self._jit_decode(
                 self.params, self._caches, jnp.asarray(self._cur)[:, None],
                 jnp.asarray(self._pos))
             cur = np.asarray(cur)
             self.stats["host_syncs"] += 1   # one sync per decode step
+            self._fault_raise("engine.sync", retryable=False)
             for s in active:
                 s.next_tok = int(cur[s.index])
                 s.pos += 1
@@ -1970,16 +2375,25 @@ class ServeEngine:
                 return total
 
     def serve_forever(self) -> None:
-        backoff = transport.Backoff()
-        while not self._stop.is_set():
-            if self.scheduler == "wave":
-                worked = self.step() > 0
-            else:
-                _, worked = self.tick()
-            if worked:
-                backoff.reset()
-            else:
-                backoff.wait(nbb.BUFFER_EMPTY)
+        """The engine loop, with a last-resort boundary: slot-scheduler
+        ticks never raise (the watchdog), but if the loop itself somehow
+        crashes — wave scheduler, a bug in recovery — the engine dies
+        CLEANLY: every outstanding request resolves with a typed
+        FailedStatus instead of clients hanging on rings nobody will
+        ever fill again."""
+        try:
+            backoff = transport.Backoff()
+            while not self._stop.is_set():
+                if self.scheduler == "wave":
+                    worked = self.step() > 0
+                else:
+                    _, worked = self.tick()
+                if worked:
+                    backoff.reset()
+                else:
+                    backoff.wait(nbb.BUFFER_EMPTY)
+        except Exception as exc:        # noqa: BLE001 — death boundary
+            self._die(f"engine loop crashed: {exc!r}")
 
     def start(self) -> threading.Thread:
         t = threading.Thread(target=self.serve_forever, daemon=True)
@@ -1991,9 +2405,11 @@ class ServeEngine:
 
     # -- client-side receive -----------------------------------------------------
     def get_response(self, client_id: int, timeout_s: float = 30.0
-                     ) -> Union[Request, TimeoutStatus]:
+                     ) -> Union[Request, TimeoutStatus, "FailedStatus"]:
         """Next terminal Request for this client (legacy whole-response
         surface): a wrapper over the session's pump.  On timeout returns
         a falsy :class:`TimeoutStatus` rather than raising or returning a
-        bare None, so callers can branch on the typed status."""
+        bare None, so callers can branch on the typed status; on a dead
+        engine, a falsy :class:`FailedStatus` immediately instead of
+        burning the whole timeout on rings nobody fills."""
         return self._sessions[client_id].next_response(timeout_s)

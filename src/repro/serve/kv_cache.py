@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as faults_mod
 from repro.core.refcount import RefCountArray
 
 OK = 0
@@ -139,6 +140,14 @@ class PagedKVPool:
         self._evict: Optional[Callable[[], bool]] = None
         self._cow_fns: Dict[int, Callable] = {}
         self._swap_fns: Dict[int, Callable] = {}
+        # Fault-injection plan (DESIGN.md §13): armed by the engine;
+        # every probe below is one ``is None`` check when disarmed.
+        self.faults: Optional["faults_mod.FaultPlan"] = None
+        # Pages implicated in a failed/poisoned write, pinned out of
+        # circulation: quarantine holds one extra reference, so when the
+        # owning sequence frees, the count lands at 1 — never 0 — and
+        # claim-from-zero can never hand the page out again.
+        self.quarantined: set = set()
 
     # -- allocation (lock-free) ------------------------------------------------
     def pages_needed(self, n_tokens: int) -> int:
@@ -149,6 +158,9 @@ class PagedKVPool:
         claim ``n`` pages lock-free, all-or-nothing — on shortage the
         partial claim is rolled back and None returned, so concurrent
         admitters can't deadlock each other or strand half-claims."""
+        if (n > 0 and self.faults is not None
+                and self.faults.fire("pool.claim") is not None):
+            return None                 # injected shortage: pre-claim, clean
         got: List[int] = []
         for _ in range(n):
             while True:
@@ -254,6 +266,9 @@ class PagedKVPool:
                 if self._alloc.refcount(t.pages[i]) > 1]
         if not rows:
             return OK
+        if (self.faults is not None
+                and self.faults.fire("pool.cow") is not None):
+            return POOL_FULL            # injected: before any claim or copy
         fresh = self._claim_pages(len(rows))
         if fresh is None:
             return POOL_FULL
@@ -294,7 +309,11 @@ class PagedKVPool:
         cleanly instead of holding half its pages.  ``note_tokens``
         still reports actual written growth."""
         t = self._tables[seq_id]
-        got = self._claim_pages(self.pages_needed(n_tokens) - len(t.pages))
+        need = self.pages_needed(n_tokens) - len(t.pages)
+        if (need > 0 and self.faults is not None
+                and self.faults.fire("pool.extend") is not None):
+            return POOL_FULL            # injected: table untouched
+        got = self._claim_pages(need)
         if got is None:
             return POOL_FULL
         t.pages.extend(got)
@@ -317,6 +336,33 @@ class PagedKVPool:
         for p in t.pages:
             if p >= 0:  # skip swap tombstones of a parked sequence
                 self._alloc.release(p)
+
+    def quarantine_range(self, seq_id: int, start_pos: int,
+                         end_pos: int) -> List[int]:
+        """Remove the pages backing positions ``[start_pos, end_pos)`` of
+        a sequence from circulation after a failed/poisoned write
+        (DESIGN.md §13).  Only PRIVATE pages (refcount == 1) are pinned:
+        a shared page's bytes predate the failed write — other holders
+        adopted it from a committed prefix — so it is provably clean.
+        Pinning is one incref; the page is permanently accounted as used
+        (``free_pages`` stays exact) and, because claims only win on
+        count zero, it can never back a future sequence.  Idempotent per
+        page.  Returns the pages quarantined by THIS call."""
+        t = self._tables.get(seq_id)
+        if t is None or end_pos <= start_pos:
+            return []
+        ps = self.page_size
+        first = max(0, start_pos // ps)
+        last = min((end_pos - 1) // ps, len(t.pages) - 1)
+        got: List[int] = []
+        for i in range(first, last + 1):
+            p = t.pages[i]
+            if (p >= 0 and p not in self.quarantined
+                    and self._alloc.refcount(p) == 1):
+                self._alloc.incref(p)
+                self.quarantined.add(p)
+                got.append(p)
+        return got
 
     def free_pages(self) -> int:
         return self.n_pages - self._alloc.count()
@@ -356,7 +402,8 @@ class PagedKVPool:
                 "swap_in_bytes": self.swap_in_bytes,
                 "swap_out_bytes": self.swap_out_bytes,
                 "shared_pages": self._alloc.shared_count(),
-                "shared_pages_peak": self._shared_peak}
+                "shared_pages_peak": self._shared_peak,
+                "quarantined": len(self.quarantined)}
 
     # -- device data movement (RETIRED: no scheduler calls these) ---------------
     # Residency under ``slot_paged`` is established by writing int32
@@ -425,6 +472,15 @@ class PagedKVPool:
         with its BUFFER_PREEMPTED cell and later hands it back to
         :meth:`swap_in_preempt`.
         """
+        if (self.faults is not None
+                and self.faults.fire("pool.swap_out") is not None):
+            # Raised before ANY mutation: the victim's pages, table and
+            # counters are untouched, so the engine treats this exactly
+            # like "no preemptible victim" and the needer takes the
+            # ordinary rejection path.
+            raise faults_mod.InjectedFault("pool.swap_out",
+                                           self.faults.n_fired,
+                                           retryable=True)
         t = self._tables[seq_id]
         live = 0 if n_live_tokens <= 0 else self.pages_needed(n_live_tokens)
         rows: List[int] = []
@@ -466,6 +522,9 @@ class PagedKVPool:
         rows alone (they never left).  The resumed sequence reads back
         byte-identical: pages moved wholesale, and the block-table
         indirection makes the new physical page numbers invisible."""
+        if (self.faults is not None
+                and self.faults.fire("pool.swap_in") is not None):
+            return POOL_FULL            # injected: image stays parked
         t = self._tables[seq_id]
         need = len(image.rows) + len(image.dead_rows)
         got = self._claim_pages(need)

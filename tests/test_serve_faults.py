@@ -1,0 +1,439 @@
+"""Self-healing serve loop under injected faults (DESIGN.md §13).
+
+The engine half of the tentpole: the tick watchdog (transient retry,
+then per-slot typed terminals — never a raise out of ``tick()``),
+per-session leases reclaiming a silent client's whole stake, poisoned
+writes quarantining their pages, dead-engine handles resolving with a
+typed falsy FailedStatus instead of hanging, Session.close semantics,
+and the acceptance sweep: 50 seeded plans, every site class hit,
+survivors byte-identical to the no-fault run, pool/refcount/prefix
+invariants exact after every plan.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.core import faults, states  # noqa: E402
+from repro.core.faults import FaultPlan, FaultRule  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.serve.engine import FailedStatus, ServeEngine  # noqa: E402
+from repro.serve.overload import OverloadPolicy  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = get_smoke_config("smollm-135m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mk(model, params, fault_plan=None, lease_s=None, tick_retries=1,
+        overload=None, max_batch=2, pool_pages=24, n_clients=2):
+    return ServeEngine(model, params, max_batch=max_batch, max_len=64,
+                       n_clients=n_clients, pool_pages=pool_pages,
+                       page_size=8, scheduler="slot_paged", k_max=4,
+                       chunk_tokens=16, overload=overload,
+                       fault_plan=fault_plan, lease_s=lease_s,
+                       tick_retries=tick_retries)
+
+
+def _share_jit(eng, donor):
+    """Adopt a donor engine's compiled-function caches (identical model
+    + shapes), so a many-engine sweep compiles each trace once."""
+    eng._jit_loops = donor._jit_loops
+    eng._jit_chunked = donor._jit_chunked
+    eng._jit_prefill = donor._jit_prefill
+    eng._jit_decode = donor._jit_decode
+    eng._jit_write_slot = donor._jit_write_slot
+    eng.pool._cow_fns = donor.pool._cow_fns
+    eng.pool._swap_fns = donor.pool._swap_fns
+
+
+def _drive(eng, handles, max_ticks=800):
+    """Tick the engine inline until every handle is terminal.  The
+    tick budget IS the no-deadlock assertion: a fault plan that wedges
+    the engine (or strands a handle) fails here, not by hanging CI."""
+    ticks = 0
+    while not all(h.test() for h in handles):
+        ticks += 1
+        assert ticks < max_ticks, (
+            f"engine wedged: {sum(h.test() for h in handles)}/"
+            f"{len(handles)} terminal after {max_ticks} ticks")
+        eng.tick()
+    return ticks
+
+
+def _pool_clean(eng):
+    """Post-drain pool invariants (the crash-consistency acceptance):
+    every page is either free or quarantined, no sequence survives, and
+    the copy-traffic ledger balances exactly."""
+    pool = eng.pool
+    if eng.prefix_cache is not None:
+        eng.prefix_cache.clear()
+    assert pool.n_seqs() == 0, pool._tables
+    assert pool.used_pages() == len(pool.quarantined)
+    assert all(pool.refcount(p) == 1 for p in pool.quarantined)
+    assert pool.kv_copy_bytes == (pool.cow_copy_bytes
+                                  + pool.swap_in_bytes
+                                  + pool.swap_out_bytes)
+
+
+# ---------------------------------------------------------------------------
+# FailedStatus + ctor validation
+# ---------------------------------------------------------------------------
+def test_failed_status_is_falsy_with_reason():
+    s = FailedStatus("tick failed: boom")
+    assert not s and s.reason == "tick failed: boom"
+
+
+def test_ctor_validates_robustness_knobs(engine_setup):
+    _, model, params = engine_setup
+    with pytest.raises(ValueError):
+        _mk(model, params, lease_s=0.0)
+    with pytest.raises(ValueError):
+        _mk(model, params, tick_retries=-1)
+
+
+def test_no_plan_means_no_fault_layer(engine_setup):
+    _, model, params = engine_setup
+    eng = _mk(model, params)
+    assert eng.faults is None and eng.pool.faults is None
+    # rings are bare — the zero-overhead claim is structural
+    assert not hasattr(eng.streams[0], "plan")
+
+
+# ---------------------------------------------------------------------------
+# Tick watchdog
+# ---------------------------------------------------------------------------
+def test_transient_dispatch_fault_is_invisible(engine_setup):
+    """One injected dispatch refusal within the retry budget: the tick
+    retries and the token stream is byte-identical to the no-fault run."""
+    cfg, model, params = engine_setup
+    prompt = np.arange(8) % cfg.vocab_size
+
+    eng = _mk(model, params)
+    h = eng.connect(0).submit_i(prompt, max_tokens=8)
+    _drive(eng, [h])
+    ref = h.response.tokens_out.copy()
+
+    plan = FaultPlan([FaultRule("engine.dispatch", nth=1, times=1)])
+    eng = _mk(model, params, fault_plan=plan, tick_retries=1)
+    _share_jit(eng, _mk(model, params))
+    h = eng.connect(0).submit_i(prompt, max_tokens=8)
+    _drive(eng, [h])
+    assert plan.n_fired == 1
+    assert eng.stats["faults_injected"] == 1
+    assert eng.stats["requests_failed"] == 0
+    np.testing.assert_array_equal(h.response.tokens_out, ref)
+    _pool_clean(eng)
+
+
+def test_dispatch_retries_exhausted_fails_slots_keeps_serving(engine_setup):
+    """Past ``tick_retries`` consecutive dispatch faults the bound slots
+    fail with typed terminals — and the NEXT request is served normally
+    on the same engine (self-healing, not fail-stop)."""
+    cfg, model, params = engine_setup
+    prompt = np.arange(8) % cfg.vocab_size
+    # two firings: the first tick faults, its single retry faults again
+    plan = FaultPlan([FaultRule("engine.dispatch", nth=1, times=2)])
+    eng = _mk(model, params, fault_plan=plan, tick_retries=1)
+    sess = eng.connect(0)
+    h = sess.submit_i(prompt, max_tokens=8)
+    _drive(eng, [h])
+    r = h.response
+    assert r.fsm.state == states.REQUEST_CANCELLED
+    assert isinstance(r.status, FailedStatus) and "tick failed" in \
+        r.status.reason
+    assert eng.stats["requests_failed"] == 1
+    assert eng.dead is None                     # the ENGINE survived
+    h2 = sess.submit_i(prompt, max_tokens=4)    # plan quiet: healthy now
+    _drive(eng, [h2])
+    assert h2.response.fsm.state == states.REQUEST_COMPLETED
+    _pool_clean(eng)
+
+
+def test_sync_timeout_is_not_retried(engine_setup):
+    """engine.sync is non-retryable (the device advanced past what the
+    host harvested): the slot fails on the FIRST fault even with a
+    generous retry budget."""
+    cfg, model, params = engine_setup
+    plan = FaultPlan([FaultRule("engine.sync", nth=1, times=1)])
+    eng = _mk(model, params, fault_plan=plan, tick_retries=10)
+    h = eng.connect(0).submit_i(np.arange(8) % cfg.vocab_size, max_tokens=8)
+    _drive(eng, [h])
+    assert isinstance(h.response.status, FailedStatus)
+    assert eng.stats["requests_failed"] == 1
+    assert plan.n_fired == 1                    # no retry consumed more
+    _pool_clean(eng)
+
+
+def test_poisoned_write_quarantines_pages(engine_setup):
+    """A poisoned page write fails the slot AND pins the implicated
+    private pages out of circulation forever: later admissions never
+    receive them, and the pool accounts them used."""
+    cfg, model, params = engine_setup
+    plan = FaultPlan([FaultRule("pool.page_write", nth=1, times=1)])
+    eng = _mk(model, params, fault_plan=plan)
+    sess = eng.connect(0)
+    h = sess.submit_i(np.arange(8) % cfg.vocab_size, max_tokens=8)
+    _drive(eng, [h])
+    assert isinstance(h.response.status, FailedStatus)
+    assert "poisoned" in h.response.status.reason
+    quarantined = set(eng.pool.quarantined)
+    assert quarantined and eng.stats["pages_quarantined"] == len(quarantined)
+    h2 = sess.submit_i(np.arange(8) % cfg.vocab_size, max_tokens=8)
+    _drive(eng, [h2])
+    assert h2.response.fsm.state == states.REQUEST_COMPLETED
+    assert set(eng.pool.quarantined) == quarantined   # still pinned
+    _pool_clean(eng)
+    assert eng.pool.used_pages() == len(quarantined)
+
+
+def test_preempt_fault_leaves_victim_decoding(engine_setup):
+    """An injected pool.swap_out fault aborts the preemption attempt
+    pre-mutation: the victim keeps decoding to completion and the
+    high-priority arrival simply waits (no lost request, no leak)."""
+    cfg, model, params = engine_setup
+    ov = OverloadPolicy(priorities=True, preemption=True)
+    plan = FaultPlan([FaultRule("pool.swap_out", nth=1, times=99)])
+    # pool sized so the second admission needs a victim
+    eng = _mk(model, params, fault_plan=plan, overload=ov, max_batch=1,
+              pool_pages=5)
+    lo = eng.connect(0).submit_i(np.arange(8) % cfg.vocab_size,
+                                 max_tokens=16, priority=2)
+    hi = eng.connect(1).submit_i((np.arange(6) + 3) % cfg.vocab_size,
+                                 max_tokens=4, priority=0)
+    _drive(eng, [lo, hi])
+    assert lo.response.fsm.state == states.REQUEST_COMPLETED
+    assert hi.response.fsm.state == states.REQUEST_COMPLETED
+    assert eng.stats["preemptions"] == 0        # every attempt refused
+    _pool_clean(eng)
+
+
+def test_stalled_stream_producer_recovers(engine_setup):
+    """transport.stall on the engine's own stream ring: the watchdog
+    rolls the announced-but-uncommitted span back (the engine IS the
+    producer), fails the bound slots, and keeps serving — the stream
+    ring works again afterwards."""
+    cfg, model, params = engine_setup
+    plan = FaultPlan([FaultRule("transport.stall", nth=1, times=1)])
+    eng = _mk(model, params, fault_plan=plan)
+    sess = eng.connect(0)
+    h = sess.submit_i(np.arange(8) % cfg.vocab_size, max_tokens=8)
+    _drive(eng, [h])
+    assert isinstance(h.response.status, FailedStatus)
+    assert not eng._raw_ring(eng.streams[0])._uc & 1    # recovered
+    h2 = sess.submit_i(np.arange(8) % cfg.vocab_size, max_tokens=6)
+    _drive(eng, [h2])
+    r2 = h2.response
+    assert r2.fsm.state == states.REQUEST_COMPLETED
+    assert len(r2.tokens_out) == 6
+    _pool_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# Leases
+# ---------------------------------------------------------------------------
+def test_lease_reaps_silent_client(engine_setup):
+    """A client that submits and never pumps again: past ``lease_s`` its
+    bound slot fails, its queued submission drains, its pages free, and
+    the already-delivered terminals carry FailedStatus when it finally
+    pumps.  A healthy client on the same engine is untouched."""
+    cfg, model, params = engine_setup
+    eng = _mk(model, params, lease_s=0.05)
+    dead_sess = eng.connect(0)
+    live_sess = eng.connect(1)
+    h_bound = dead_sess.submit_i(np.arange(8) % cfg.vocab_size,
+                                 max_tokens=32)
+    eng.tick()                                  # binds + starts decoding
+    h_queued = dead_sess.submit_i(np.arange(8) % cfg.vocab_size,
+                                  max_tokens=8)
+    time.sleep(0.08)                            # client goes silent
+    h_live = live_sess.submit_i(np.arange(8) % cfg.vocab_size, max_tokens=4)
+    served = 0
+    for _ in range(200):
+        served += eng.tick()[0]
+        if h_live.test() and eng.stats["leases_reaped"]:
+            break
+    assert eng.stats["leases_reaped"] == 1      # one sweep took everything
+    assert eng.stats["requests_failed"] == 2
+    assert eng.pool.n_seqs() == 0          # the reaped stake is reclaimed
+    assert h_live.response.fsm.state == states.REQUEST_COMPLETED
+    # the silent client comes back: terminals resolve, typed + falsy
+    for h in (h_bound, h_queued):
+        r = h.wait(timeout_s=5)
+        assert r.fsm.state == states.REQUEST_CANCELLED
+        assert isinstance(r.status, FailedStatus)
+        assert "lease expired" in r.status.reason
+    _pool_clean(eng)
+
+
+def test_lease_renewed_by_pumping_client(engine_setup):
+    """A slow-but-pumping client is NEVER reaped: every wait() poll is a
+    heartbeat."""
+    cfg, model, params = engine_setup
+    eng = _mk(model, params, lease_s=0.05)
+    h = eng.connect(0).submit_i(np.arange(8) % cfg.vocab_size,
+                                max_tokens=8)
+    ticks = 0
+    while not h.test():                         # test() pumps = heartbeat
+        time.sleep(0.002)
+        eng.tick()
+        ticks += 1
+        assert ticks < 800
+    assert h.response.fsm.state == states.REQUEST_COMPLETED
+    assert eng.stats["leases_reaped"] == 0
+    _pool_clean(eng)
+
+
+def test_lease_recovers_stalled_intake_ring(engine_setup):
+    """The one failure a refusal can't model: the client thread died
+    BETWEEN announcing and committing an intake span.  The lease reaper
+    rolls the ring back (the lease declared the producer dead) and the
+    ring serves a reconnecting client again."""
+    cfg, model, params = engine_setup
+    eng = _mk(model, params, lease_s=0.05)
+    sess = eng.connect(0)
+    ring = eng.intake.producer(0)
+    sess.submit_i(np.arange(8) % cfg.vocab_size, max_tokens=4)
+    faults.stall_mid_burst(ring, [object()])    # died mid-reservation
+    assert ring._uc & 1
+    time.sleep(0.08)
+    for _ in range(50):
+        eng.tick()
+        if eng.stats["leases_reaped"]:
+            break
+    assert not ring._uc & 1                     # rolled back by the reaper
+    assert eng.stats["leases_reaped"] == 1
+    # reconnect: the ring is fully serviceable again
+    sess2 = eng.connect(0)
+    h = sess2.submit_i(np.arange(8) % cfg.vocab_size, max_tokens=4)
+    _drive(eng, [h])
+    assert h.response.fsm.state == states.REQUEST_COMPLETED
+    _pool_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# Session.close + dead-engine handles
+# ---------------------------------------------------------------------------
+def test_session_close_cancels_and_refuses(engine_setup):
+    cfg, model, params = engine_setup
+    eng = _mk(model, params)
+    sess = eng.connect(0)
+    h = sess.submit_i(np.arange(8) % cfg.vocab_size, max_tokens=32)
+    eng.tick()
+    sess.close()
+    sess.close()                                # idempotent
+    assert sess.closed
+    # the engine retires the cancelled slot on its next ticks
+    for _ in range(50):
+        eng.tick()
+        if eng.pool.n_seqs() == 0:
+            break
+    assert eng.pool.n_seqs() == 0
+    assert eng.pool.free_pages() == eng.pool.n_pages
+    # submit after close: already-terminal typed handle, no engine work
+    h2 = sess.submit_i(np.arange(4) % cfg.vocab_size, max_tokens=4)
+    assert h2.done and isinstance(h2.status, FailedStatus)
+    assert h2.status.reason == "session closed"
+    assert h2.response.fsm.state == states.REQUEST_CANCELLED
+    # context-manager form + reconnect reopens
+    with eng.connect(0) as sess3:
+        assert not sess3.closed
+        h3 = sess3.submit_i(np.arange(8) % cfg.vocab_size, max_tokens=4)
+        _drive(eng, [h3])
+        assert h3.response.fsm.state == states.REQUEST_COMPLETED
+    assert sess3.closed
+
+
+def test_dead_engine_resolves_handles_fast(engine_setup):
+    """Satellite 1: wait()/get_response on a dead engine return a typed
+    falsy FailedStatus promptly — never hang out the timeout."""
+    cfg, model, params = engine_setup
+    eng = _mk(model, params)
+    sess = eng.connect(0)
+    h = sess.submit_i(np.arange(8) % cfg.vocab_size, max_tokens=32)
+    eng.tick()
+    eng._die("engine loop crashed: test")
+    t0 = time.monotonic()
+    r = h.wait(timeout_s=30)
+    assert time.monotonic() - t0 < 5            # resolved, not timed out
+    assert isinstance(r, FailedStatus) and not r
+    assert "crashed" in r.reason
+    # whole-response surface too
+    t0 = time.monotonic()
+    r2 = eng.get_response(0, timeout_s=30)
+    assert time.monotonic() - t0 < 5
+    assert not r2
+    # a post-death submit also resolves instead of hanging
+    h2 = sess.submit_i(np.arange(4) % cfg.vocab_size, max_tokens=4)
+    assert isinstance(h2.wait(timeout_s=5), FailedStatus)
+    assert eng.pool.n_seqs() == 0               # _die reclaimed the pool
+    _pool_clean(eng)
+
+
+def test_tick_after_death_is_inert(engine_setup):
+    _, model, params = engine_setup
+    eng = _mk(model, params)
+    eng._die("x")
+    assert eng.tick() == (0, False)
+    assert eng.dead == "x"
+
+
+# ---------------------------------------------------------------------------
+# The acceptance sweep: 50 seeded plans, survivors byte-identical
+# ---------------------------------------------------------------------------
+def test_fault_plan_sweep_engine_never_wedges(engine_setup):
+    """ISSUE 8 acceptance: under a seeded 50-plan sweep covering every
+    site class, the engine never deadlocks or raises out of tick(),
+    every surviving (COMPLETED) request's tokens are byte-identical to
+    the no-fault run, and the pool invariants hold after every plan."""
+    cfg, model, params = engine_setup
+    ov = OverloadPolicy(priorities=True, preemption=True)
+    prompts = [(np.arange(8) + 3 * i) % cfg.vocab_size for i in range(4)]
+    pris = [2, 0, 1, 0]
+    budgets = [12, 4, 6, 4]
+
+    def run(fault_plan, donor=None):
+        eng = _mk(model, params, fault_plan=fault_plan, overload=ov,
+                  tick_retries=1, max_batch=2, pool_pages=8)
+        if donor is not None:
+            _share_jit(eng, donor)
+        sessions = [eng.connect(c) for c in range(2)]
+        handles = [sessions[i % 2].submit_i(p, max_tokens=budgets[i],
+                                            priority=pris[i])
+                   for i, p in enumerate(prompts)]
+        _drive(eng, handles, max_ticks=800)
+        _pool_clean(eng)
+        return eng, handles
+
+    donor, ref_handles = run(None)
+    ref = {i: h.response.tokens_out.copy()
+           for i, h in enumerate(ref_handles)}
+    assert all(h.response.fsm.state == states.REQUEST_COMPLETED
+               for h in ref_handles)
+
+    hit_sites = set()
+    for plan in FaultPlan.sweep(50, seed=11):
+        eng, handles = run(plan, donor=donor)
+        hit_sites.update(plan.fired)
+        assert eng.dead is None, (plan, eng.dead)
+        for i, h in enumerate(handles):
+            r = h.response
+            if r.fsm.state == states.REQUEST_COMPLETED:
+                np.testing.assert_array_equal(r.tokens_out, ref[i], plan)
+            else:
+                assert r.fsm.state == states.REQUEST_CANCELLED
+        s = eng.stats
+        terminal = (s["served"] + s["rejected"] + s["cancelled"]
+                    + s["shed_requests"] + s["requests_failed"])
+        assert terminal >= len(handles)
+    # every site CLASS was exercised somewhere in the sweep
+    assert {s.split(".")[0] for s in hit_sites} == \
+        {s.split(".")[0] for s in faults.SITES}
