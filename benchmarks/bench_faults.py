@@ -6,10 +6,16 @@ load exceeding capacity, the adversary is a deterministic
 :class:`~repro.core.faults.FaultPlan` armed at a different injection
 site per plan — transport refusals, a producer dying mid-span
 reservation, pool claim/extend/CoW/swap failures, poisoned page writes,
-dispatch raises, sync timeouts.  A no-fault baseline records every
-request's token stream; then ``--plans`` seeded plans (default 50, the
-ISSUE 8 acceptance sweep) each run the SAME workload on a fresh engine
-(compiled traces shared from the baseline, so the sweep compiles once).
+dispatch raises, sync timeouts, and (ISSUE 9) torn snapshot writes,
+aborted restores, and lost journal appends.  A no-fault baseline
+records every request's token stream; then ``--plans`` seeded plans
+(default 50, the ISSUE 8 acceptance sweep) each run the SAME workload
+on a fresh engine (compiled traces shared from the baseline, so the
+sweep compiles once).  Every sweep plan also crosses a kill-and-restore
+boundary mid-run: the engine is abandoned, and a fresh engine resumes
+from the newest good snapshot + write-ahead journal replay — recovery
+itself runs under fire, and a fault *during* snapshot write must never
+corrupt the last good snapshot (asserted).
 
 Deterministic gates (asserted, every plan):
 - the engine never deadlocks (a tick budget bounds each plan) and never
@@ -37,6 +43,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import shutil
+import tempfile
 import time
 from typing import Dict, List, Optional
 
@@ -47,6 +55,7 @@ jax.config.update("jax_platform_name", "cpu")
 
 from repro.core import faults  # noqa: E402
 from repro.core.faults import FaultPlan, FaultRule  # noqa: E402
+from repro.serve import snapshot as snapshot_mod  # noqa: E402
 from repro.serve.overload import (  # noqa: E402
     PRIORITY_HIGH,
     PRIORITY_LOW,
@@ -77,7 +86,8 @@ def make_workload(n_requests: int, seed: int = 0) -> List[Dict]:
 
 
 def _mk_engine(model, params, workload, fault_plan: Optional[FaultPlan],
-               lease_s: Optional[float] = None):
+               lease_s: Optional[float] = None,
+               snapshot_dir: Optional[str] = None):
     from repro.serve.engine import ServeEngine
 
     # Tight pool (half the dense budget) so admission pressure is real
@@ -92,7 +102,8 @@ def _mk_engine(model, params, workload, fault_plan: Optional[FaultPlan],
                        overload=OverloadPolicy(priorities=True,
                                                preemption=True),
                        fault_plan=fault_plan, lease_s=lease_s,
-                       tick_retries=1)
+                       tick_retries=1, snapshot_dir=snapshot_dir,
+                       snapshot_every=4 if snapshot_dir else None)
 
 
 def _share_jit(eng, donor) -> None:
@@ -108,66 +119,113 @@ def _share_jit(eng, donor) -> None:
 
 
 def run_plan(model, params, workload, plan: Optional[FaultPlan],
-             donor=None) -> Dict:
+             donor=None, kill_at: Optional[int] = None) -> Dict:
     """One engine, one plan, the whole workload.  Returns per-request
     terminal states + tokens, the engine's fault report, and the engine
     itself (``"_eng"``, so the baseline can donate its compiled traces).
     Raises AssertionError on any invariant violation — CI fails on the
-    first plan that breaks crash consistency."""
-    eng = _mk_engine(model, params, workload, plan)
-    if donor is not None:
-        _share_jit(eng, donor)
-    sessions = [eng.connect(c) for c in range(2)]
-    handles = [sessions[i % 2].submit_i(
-                   w["prompt"] % model.cfg.vocab_size,
-                   max_tokens=w["max_tokens"], priority=w["priority"])
-               for i, w in enumerate(workload)]
+    first plan that breaks crash consistency.
 
-    t0 = time.monotonic()
-    ticks = 0
-    while not all(h.test() for h in handles):
-        ticks += 1
-        assert ticks < MAX_TICKS, (
-            f"DEADLOCK: {sum(h.test() for h in handles)}/"
-            f"{len(handles)} terminal after {MAX_TICKS} ticks "
-            f"(plan={plan!r})")
-        eng.tick()      # watchdog contract: this must never raise
-    dt = time.monotonic() - t0
+    ``kill_at`` arms the ISSUE-9 kill-and-restore phase: after that
+    many ticks the engine is abandoned mid-run (a final snapshot
+    attempt first — which an injected ``snapshot.write`` fault may
+    tear), clients drain what their rings already committed, and a
+    FRESH engine restores from the newest good snapshot + journal
+    replay, re-binds the live handles, and finishes the workload.  The
+    torn write must never cost the previous good snapshot (asserted)."""
+    snap_dir = (tempfile.mkdtemp(prefix="bench_faults_snap_")
+                if kill_at is not None else None)
+    try:
+        eng = _mk_engine(model, params, workload, plan,
+                         snapshot_dir=snap_dir)
+        if donor is not None:
+            _share_jit(eng, donor)
+        sessions = [eng.connect(c) for c in range(2)]
+        handles = [sessions[i % 2].submit_i(
+                       w["prompt"] % model.cfg.vocab_size,
+                       max_tokens=w["max_tokens"], priority=w["priority"])
+                   for i, w in enumerate(workload)]
 
-    assert eng.dead is None, f"engine died under {plan!r}: {eng.dead}"
+        t0 = time.monotonic()
+        ticks = 0
+        killed = False
+        while not all(h.test() for h in handles):
+            ticks += 1
+            assert ticks < MAX_TICKS, (
+                f"DEADLOCK: {sum(h.test() for h in handles)}/"
+                f"{len(handles)} terminal after {MAX_TICKS} ticks "
+                f"(plan={plan!r})")
+            eng.tick()      # watchdog contract: this must never raise
+            if (kill_at is not None and not killed and ticks >= kill_at
+                    and eng.dead is None):
+                killed = True
+                _, last_good = snapshot_mod.load_latest(snap_dir)
+                eng.save_snapshot()     # may be torn by snapshot.write
+                if last_good is not None:
+                    # A fault DURING snapshot write must never corrupt
+                    # the previously-good snapshot: the loader still
+                    # finds a valid one to fall back to.
+                    _, now_good = snapshot_mod.load_latest(snap_dir)
+                    assert now_good is not None, (
+                        f"torn write lost the last-good snapshot "
+                        f"under {plan!r}")
+                for s in sessions:      # clients outlive the process:
+                    s.pump()            # committed rings are theirs
+                eng = _mk_engine(model, params, workload, plan,
+                                 snapshot_dir=snap_dir)
+                _share_jit(eng, donor if donor is not None else eng)
+                eng.restore_latest()    # None => no good snapshot ever:
+                sessions = [            # handles fail typed at re-bind
+                    eng.connect(c, resume=s)
+                    for c, s in enumerate(sessions)]
+        dt = time.monotonic() - t0
 
-    # Crash-consistent rollback: pool exactly at its quiescent state.
-    pool = eng.pool
-    if eng.prefix_cache is not None:
-        eng.prefix_cache.clear()
-    assert pool.n_seqs() == 0, f"leaked sequences under {plan!r}"
-    assert pool.used_pages() == len(pool.quarantined), \
-        f"leaked pages under {plan!r}: {pool.stats()}"
-    assert pool.kv_copy_bytes == (pool.cow_copy_bytes
-                                  + pool.swap_in_bytes
-                                  + pool.swap_out_bytes), \
-        f"unattributed kv copy traffic under {plan!r}"
+        assert eng.dead is None, f"engine died under {plan!r}: {eng.dead}"
 
-    s = eng.stats
-    terminal = (s["served"] + s["rejected"] + s["cancelled"]
-                + s["shed_requests"] + s["requests_failed"])
-    assert terminal >= len(workload), \
-        f"stranded requests under {plan!r}: {s}"
+        # Crash-consistent rollback: pool exactly at its quiescent state.
+        pool = eng.pool
+        if eng.prefix_cache is not None:
+            eng.prefix_cache.clear()
+        assert pool.n_seqs() == 0, f"leaked sequences under {plan!r}"
+        assert pool.used_pages() == len(pool.quarantined), \
+            f"leaked pages under {plan!r}: {pool.stats()}"
+        assert pool.kv_copy_bytes == (pool.cow_copy_bytes
+                                      + pool.swap_in_bytes
+                                      + pool.swap_out_bytes), \
+            f"unattributed kv copy traffic under {plan!r}"
 
-    states_out, tokens_out = [], []
-    for h in handles:
-        r = h.response
-        states_out.append(r.fsm.state.split("_")[-1])
-        tokens_out.append(list(map(int, r.tokens_out))
-                          if r.tokens_out is not None else [])
-    report = eng.fault_report() if plan is not None else {}
-    return {
-        "wall_s": dt, "ticks": ticks, "states": states_out,
-        "tokens": tokens_out, "report": report,
-        "preemptions": s["preemptions"],
-        "quarantined": len(pool.quarantined),
-        "_eng": eng,
-    }
+        s = eng.stats
+        if not killed:
+            # Stats-based coverage only holds single-life: a restored
+            # engine's counters date from the snapshot, so requests
+            # retired in the lost window between snapshot and kill are
+            # counted by neither life (their HANDLES still resolved —
+            # the per-handle terminal check below is the real gate).
+            terminal = (s["served"] + s["rejected"] + s["cancelled"]
+                        + s["shed_requests"] + s["requests_failed"])
+            assert terminal >= len(workload), \
+                f"stranded requests under {plan!r}: {s}"
+
+        states_out, tokens_out = [], []
+        for h in handles:
+            r = h.response
+            states_out.append(r.fsm.state.split("_")[-1])
+            tokens_out.append(list(map(int, r.tokens_out))
+                              if r.tokens_out is not None else [])
+        report = eng.fault_report() if plan is not None else {}
+        return {
+            "wall_s": dt, "ticks": ticks, "states": states_out,
+            "tokens": tokens_out, "report": report,
+            "preemptions": s["preemptions"],
+            "quarantined": len(pool.quarantined),
+            "killed": killed,
+            "restores": s["restores"],
+            "replayed": s["replayed_requests"],
+            "_eng": eng,
+        }
+    finally:
+        if snap_dir is not None:
+            shutil.rmtree(snap_dir, ignore_errors=True)
 
 
 def main(argv=None):
@@ -210,13 +268,31 @@ def main(argv=None):
           f"({warm['ticks']} ticks); quiet-plan overhead "
           f"{quiet_run['wall_s'] / max(warm['wall_s'], 1e-9):.2f}x")
 
-    # The acceptance sweep.
+    # No-fault kill-and-restore: the engine is abandoned mid-run and a
+    # fresh one resumes from snapshot + journal.  Every stream must come
+    # out byte-identical to the uninterrupted baseline (ISSUE 9 gate).
+    kill_at = 6
+    recovery = run_plan(model, params, workload, None, donor=donor,
+                        kill_at=kill_at)
+    assert recovery["killed"], "kill-and-restore phase never armed"
+    assert recovery["tokens"] == ref_tokens, \
+        "restored streams diverged from the uninterrupted baseline"
+    print(f"kill@{kill_at}+restore: byte-identical, "
+          f"{recovery['replayed']} journal-replayed")
+
+    # The acceptance sweep — every plan now ALSO crosses a kill-restore
+    # boundary, so the snapshot/journal fault sites are reachable and
+    # recovery itself runs under fire.
     hit_sites: set = set()
     survived = failed = identical = 0
+    restores_total = replayed_total = 0
     per_plan = []
     for i, plan in enumerate(FaultPlan.sweep(args.plans, seed=args.seed)):
-        r = run_plan(model, params, workload, plan, donor=donor)
+        r = run_plan(model, params, workload, plan, donor=donor,
+                     kill_at=kill_at)
         hit_sites.update(r["report"].get("fired_sites", []))
+        restores_total += r["restores"]
+        replayed_total += r["replayed"]
         ok = True
         for st, toks, ref in zip(r["states"], r["tokens"], ref_tokens):
             if st == "COMPLETED":
@@ -237,6 +313,8 @@ def main(argv=None):
             "failed": r["report"].get("requests_failed", 0),
             "quarantined": r["quarantined"],
             "ticks": r["ticks"],
+            "restores": r["restores"],
+            "replayed": r["replayed"],
         })
 
     classes_hit = {s.split(".")[0] for s in hit_sites}
@@ -249,6 +327,11 @@ def main(argv=None):
                      "seed": args.seed, "arch": args.arch},
         "baseline_wall_s": warm["wall_s"],
         "quiet_plan_wall_s": quiet_run["wall_s"],
+        "kill_restore": {
+            "kill_at": kill_at,
+            "byte_identical": True,
+            "replayed_requests": recovery["replayed"],
+        },
         "sweep": {
             "requests_total": args.plans * n_requests,
             "survived": survived,
@@ -256,6 +339,8 @@ def main(argv=None):
             "survivors_byte_identical": identical == survived,
             "site_classes_hit": sorted(classes_hit),
             "sites_hit": sorted(hit_sites),
+            "restores": restores_total,
+            "replayed_requests": replayed_total,
             "deadlocks": 0,
             "engine_deaths": 0,
         },
@@ -264,9 +349,10 @@ def main(argv=None):
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
 
-    print(f"sweep: {args.plans} plans x {n_requests} requests -> "
-          f"{survived} survived (all byte-identical), {failed} failed "
-          f"with typed terminals, 0 deadlocks, 0 engine deaths")
+    print(f"sweep: {args.plans} plans x {n_requests} requests "
+          f"(kill@{kill_at}+restore each) -> {survived} survived "
+          f"(all byte-identical), {failed} failed with typed terminals, "
+          f"{restores_total} restores, 0 deadlocks, 0 engine deaths")
     print(f"sites hit: {sorted(hit_sites)}")
     print(f"-> {args.out}")
     return out

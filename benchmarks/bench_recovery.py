@@ -1,0 +1,254 @@
+"""Crash-recovery benchmark: what a checkpoint costs and what a restart
+buys back (DESIGN.md §14).
+
+Measures, on the slot_paged engine mid-decode:
+
+- **snapshot latency** — capture (one host sync gathering every written
+  KV page) and write (checksum + fsync + atomic rename), separately;
+- **snapshot size** — bytes on disk vs the resident KV bytes it images
+  (pages are stored once however many block tables share them, and
+  reserved-ahead pages are recorded but not copied, so the ratio < 1 is
+  the structural-sharing win);
+- **restore-to-first-token** — from ``restore_latest()`` on a fresh
+  engine to the first post-restart harvested token reaching a client
+  (the metric an operator actually waits on);
+- **journal replay** — how many requests (and decoded tokens) the WAL
+  re-creates that the snapshot alone would have lost.
+
+Asserted, not just measured: every resumed stream is byte-identical to
+the uninterrupted reference run — recovery must never cost correctness
+to buy availability.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_recovery.py [--quick]
+Emits:  BENCH_recovery.json (cwd)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.serve import snapshot as snapshot_mod  # noqa: E402
+
+MAX_TICKS = 3000
+
+
+def _mk_engine(model, params, n_requests: int,
+               snapshot_dir: Optional[str] = None):
+    from repro.serve.engine import ServeEngine
+
+    return ServeEngine(model, params, max_batch=4, max_len=128,
+                       n_clients=2, pool_pages=48, page_size=8,
+                       intake_depth=n_requests + 8,
+                       scheduler="slot_paged", chunk_tokens=16, k_max=4,
+                       snapshot_dir=snapshot_dir)
+
+
+def _share_jit(eng, donor) -> None:
+    eng._jit_loops = donor._jit_loops
+    eng._jit_chunked = donor._jit_chunked
+    eng._jit_prefill = donor._jit_prefill
+    eng._jit_decode = donor._jit_decode
+    eng._jit_write_slot = donor._jit_write_slot
+    eng.pool._cow_fns = donor.pool._cow_fns
+    eng.pool._swap_fns = donor.pool._swap_fns
+
+
+def make_workload(n_requests: int, vocab: int, max_tokens: int,
+                  seed: int = 0) -> List[Dict]:
+    rng = np.random.default_rng(seed)
+    return [{"prompt": rng.integers(0, 1000, 10) % vocab,
+             "max_tokens": max_tokens} for _ in range(n_requests)]
+
+
+def _submit(sessions, workload):
+    return [sessions[i % len(sessions)].submit_i(
+                w["prompt"], max_tokens=w["max_tokens"])
+            for i, w in enumerate(workload)]
+
+
+def _drive(eng, handles) -> int:
+    ticks = 0
+    while not all(h.test() for h in handles):
+        ticks += 1
+        assert ticks < MAX_TICKS, "engine wedged"
+        eng.tick()
+    return ticks
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small workload for CI smoke")
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--max-tokens", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_recovery.json")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_smoke_config
+    from repro.models.model import build_model
+
+    n_requests = args.requests or (6 if args.quick else 16)
+    max_tokens = args.max_tokens or (24 if args.quick else 48)
+    n_late = 2      # submitted after the last snapshot: WAL-only recovery
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    workload = make_workload(n_requests + n_late, cfg.vocab_size,
+                             max_tokens)
+
+    # Reference: the uninterrupted run (also the jit donor).
+    ref_eng = _mk_engine(model, params, n_requests)
+    ref_sessions = [ref_eng.connect(c) for c in range(2)]
+    ref_handles = _submit(ref_sessions, workload)
+    ref_ticks = _drive(ref_eng, ref_handles)
+    ref_tokens = [list(map(int, h.response.tokens_out))
+                  for h in ref_handles]
+
+    snap_dir = tempfile.mkdtemp(prefix="bench_recovery_")
+    try:
+        kill_at = max(2, ref_ticks // 2)
+        eng = _mk_engine(model, params, n_requests, snapshot_dir=snap_dir)
+        _share_jit(eng, ref_eng)
+        sessions = [eng.connect(c) for c in range(2)]
+        handles = _submit(sessions, workload[:n_requests])
+        for _ in range(kill_at):
+            eng.tick()
+
+        # Snapshot cost, capture vs write split.  Warm pass first so the
+        # gather trace is compiled out of the measured numbers.
+        eng.snapshot()
+        t0 = time.perf_counter()
+        snap = eng.snapshot()
+        t_capture = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        path = snapshot_mod.write_snapshot(snap, snap_dir)
+        t_write = time.perf_counter() - t0
+        assert path is not None
+        import os
+        snap_bytes = os.path.getsize(path)
+        pool = eng.pool
+        page_nbytes = (pool.k.nbytes + pool.v.nbytes) // pool.n_pages
+        resident_kv_bytes = pool.used_pages() * page_nbytes
+        imaged_pages = len(snap.pool["data_pages"])
+
+        # Requests accepted AFTER the checkpoint: their only recovery
+        # story is the write-ahead journal.  Drive until they are bound
+        # (journaled), then die abruptly — no final snapshot, the worst
+        # case a crash can present.
+        handles += _submit(sessions, workload[n_requests:])
+        late_ids = {h.req_id for h in handles[n_requests:]}
+        ticks = 0
+        while not late_ids <= {r["req_id"]
+                               for r in eng._journal.records}:
+            ticks += 1
+            assert ticks < MAX_TICKS, "late binds never happened"
+            eng.tick()
+
+        # Kill: clients keep what their rings already committed.
+        for s in sessions:
+            s.pump()
+
+        # Restore on a fresh engine; measure restore and the full
+        # restore-to-first-token path (ticks until a client sees a new
+        # token on its stream ring).
+        eng2 = _mk_engine(model, params, n_requests,
+                          snapshot_dir=snap_dir)
+        _share_jit(eng2, ref_eng)
+        t0 = time.perf_counter()
+        report = eng2.restore_latest()
+        t_restore = time.perf_counter() - t0
+        assert report is not None, "no usable snapshot"
+        sessions = [eng2.connect(c, resume=s)
+                    for c, s in enumerate(sessions)]
+        streamed_before = {
+            h.req_id: len(h._tokens) for h in handles if not h.done}
+        t0 = time.perf_counter()
+        t_first_token = None
+        ticks = 0
+        while not all(h.test() for h in handles):
+            ticks += 1
+            assert ticks < MAX_TICKS, "restored engine wedged"
+            eng2.tick()
+            if t_first_token is None:
+                for s in sessions:
+                    s.pump()
+                if any(len(h._tokens) > streamed_before.get(h.req_id, 0)
+                       for h in handles if h.req_id in streamed_before):
+                    t_first_token = time.perf_counter() - t0
+        if t_first_token is None:       # everything finished pre-kill
+            t_first_token = 0.0
+
+        tokens = [list(map(int, h.response.tokens_out)) for h in handles]
+        assert tokens == ref_tokens, \
+            "restored streams diverged from the uninterrupted reference"
+        # Tokens owed purely to the WAL: requests whose bind postdates
+        # the snapshot's high-water mark and that no snapshot image
+        # carried (slots / parked / deferred / queued).
+        imaged = ({img.request.req_id for img in snap.slots}
+                  | {p.req.req_id for p in snap.parked}
+                  | {r.req_id for r, _ in snap.deferred}
+                  | {r.req_id for r in snap.queued})
+        replay_ids = {r["req_id"]
+                      for r in eng._journal.records[snap.journal_seq:]
+                      } - imaged
+        replayed_tokens = sum(len(t) for h, t in zip(handles, tokens)
+                              if h.req_id in replay_ids)
+        assert report["replayed"] == len(replay_ids), \
+            "journal replay count disagrees with the WAL delta"
+
+        out = {
+            "workload": {"n_requests": n_requests,
+                         "max_tokens": max_tokens, "arch": args.arch,
+                         "kill_at_tick": kill_at,
+                         "reference_ticks": ref_ticks},
+            "snapshot": {
+                "capture_s": t_capture,
+                "write_s": t_write,
+                "bytes": snap_bytes,
+                "resident_kv_bytes": resident_kv_bytes,
+                "bytes_per_resident_kv_byte":
+                    snap_bytes / max(resident_kv_bytes, 1),
+                "imaged_pages": imaged_pages,
+                "used_pages": pool.used_pages(),
+            },
+            "restore": {
+                "restore_s": t_restore,
+                "first_token_s": t_first_token,
+                "resumed_requests": report["resumed"],
+                "replayed_requests": report["replayed"],
+                "redelivered_terminals": report["redelivered"],
+                "replayed_tokens": replayed_tokens,
+            },
+            "byte_identical": True,
+        }
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=2)
+
+        print(f"snapshot: capture {t_capture * 1e3:.1f}ms + write "
+              f"{t_write * 1e3:.1f}ms, {snap_bytes / 1024:.0f}KiB "
+              f"({out['snapshot']['bytes_per_resident_kv_byte']:.2f}x "
+              f"resident KV, {imaged_pages}/{pool.used_pages()} pages "
+              f"imaged)")
+        print(f"restore: {t_restore * 1e3:.1f}ms, first token "
+              f"{t_first_token * 1e3:.1f}ms after; "
+              f"{report['resumed']} resumed, {report['replayed']} "
+              f"replayed, {report['redelivered']} redelivered — "
+              f"byte-identical")
+        print(f"-> {args.out}")
+        return out
+    finally:
+        shutil.rmtree(snap_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -69,6 +69,9 @@ SITES = {
     "pool.page_write": ACT_POISON,       # KV write declared corrupted
     "engine.dispatch": ACT_RAISE,        # jitted call refuses to launch
     "engine.sync": ACT_TIMEOUT,          # device->host fetch "hangs"
+    "snapshot.write": ACT_REFUSE,        # process dies mid-snapshot (torn file)
+    "snapshot.restore": ACT_REFUSE,      # restore aborts before mutation
+    "journal.append": ACT_REFUSE,        # WAL record lost at BIND
 }
 
 

@@ -164,6 +164,36 @@ class StateCell:
                 f"{self._name}: lost CAS {expected} -> {new} "
                 f"(actual state {self.state})")
 
+    # -- pickling (crash-recovery snapshots) --------------------------------
+    # A cell serializes as its folded state plus the NAME of its transition
+    # table: the journal is history, not state, so it compacts to nothing,
+    # and unpickling rebinds the canonical module-level table object (table
+    # identity matters — a deep-copied table would defeat `is` comparisons
+    # and bloat every snapshot with the same frozen dict).
+
+    def __getstate__(self):
+        table_name = _TABLE_NAMES.get(id(self._table))
+        if table_name is None:
+            raise TypeError(
+                f"{self._name}: cannot pickle a StateCell over a "
+                f"non-canonical transition table")
+        return (table_name, self.state, self._name)
+
+    def __setstate__(self, state):
+        table_name, folded, name = state
+        self._table = _TABLES[table_name]
+        self._base = folded
+        self._journal = []
+        self._name = name
+
+
+_TABLES: Dict[str, Dict[str, FrozenSet[str]]] = {
+    "REQUEST": REQUEST_TRANSITIONS,
+    "BUFFER": BUFFER_TRANSITIONS,
+    "OP": OP_TRANSITIONS,
+}
+_TABLE_NAMES = {id(t): n for n, t in _TABLES.items()}
+
 
 def request_cell(name: str = "request") -> StateCell:
     return StateCell(REQUEST_TRANSITIONS, REQUEST_FREE, name)

@@ -12,6 +12,8 @@ and the engine's lock-free stats.
 from __future__ import annotations
 
 import argparse
+import os
+import signal
 import threading
 import time
 
@@ -104,6 +106,19 @@ def main(argv=None) -> ServeEngine:
                     help="whole-tick retries the watchdog grants a "
                          "transient dispatch fault before failing the "
                          "bound slots (DESIGN.md §13)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="arm crash recovery (slot_paged only): "
+                         "crash-consistent engine snapshots + a "
+                         "write-ahead intake journal land here; "
+                         "SIGINT/SIGTERM snapshot before exiting "
+                         "(DESIGN.md §14)")
+    ap.add_argument("--snapshot-every", type=int, default=None,
+                    help="periodic snapshot cadence in engine ticks "
+                         "(default: only at shutdown/crash)")
+    ap.add_argument("--restore", default=None, metavar="PATH",
+                    help="restore before serving: a snapshot file, or a "
+                         "snapshot directory (newest valid snapshot + "
+                         "journal replay); prints the restore report")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -144,6 +159,15 @@ def main(argv=None) -> ServeEngine:
         overload = OverloadPolicy(
             priorities=True, preemption=preemption, wfq=args.wfq,
             slo_s=None if args.slo_ms is None else args.slo_ms / 1e3)
+    snapshot_dir = args.snapshot_dir
+    if args.restore is not None and snapshot_dir is None:
+        # --restore implies a snapshot home: the directory the snapshot
+        # lives in (so the journal opens alongside it).
+        snapshot_dir = (args.restore if os.path.isdir(args.restore)
+                        else os.path.dirname(args.restore) or ".")
+    if snapshot_dir is not None and scheduler != "slot_paged":
+        print(f"{scheduler}: no paged KV state, disabling snapshots")
+        snapshot_dir = None
     eng = ServeEngine(model, params, max_batch=max_batch,
                       max_len=args.max_len, n_clients=args.clients,
                       pool_pages=pool_pages, page_size=page_size,
@@ -151,7 +175,38 @@ def main(argv=None) -> ServeEngine:
                       chunk_tokens=min(args.chunk_tokens, args.max_len),
                       prefix_cache=not args.no_prefix_cache,
                       overload=overload, lease_s=args.lease_s,
-                      tick_retries=args.tick_retries)
+                      tick_retries=args.tick_retries,
+                      snapshot_dir=snapshot_dir,
+                      snapshot_every=args.snapshot_every)
+    if args.restore is not None and snapshot_dir is not None:
+        report = (eng.restore_latest() if os.path.isdir(args.restore)
+                  else eng.restore(args.restore))
+        if report is None:
+            print(f"restore: no usable snapshot under {args.restore}, "
+                  f"starting empty")
+        else:
+            print(f"restore: resumed {report['resumed']} requests, "
+                  f"replayed {report['replayed']}, "
+                  f"redelivered {report['redelivered']} terminals, "
+                  f"failed {report['failed']} "
+                  f"(from {report.get('path', args.restore)})")
+
+    # Graceful shutdown (DESIGN.md §14): SIGINT/SIGTERM stop the serve
+    # loop, whose exit path snapshots the final consistent state — the
+    # handler itself only sets flags (signal-safe).  Previous handlers
+    # are restored on the way out so embedding callers keep theirs.
+    prev_handlers = {}
+
+    def _graceful(signum, frame):
+        eng.request_snapshot()
+        eng.stop()
+
+    if snapshot_dir is not None:
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            try:
+                prev_handlers[sig] = signal.signal(sig, _graceful)
+            except ValueError:
+                pass                    # not the main thread: skip
     eng_thread = eng.start()
 
     # One private SPSC result ring per client (client thread produces,
@@ -207,6 +262,14 @@ def main(argv=None) -> ServeEngine:
     dt = time.monotonic() - t0
     eng.stop()
     eng_thread.join(timeout=10)
+    for sig, h in prev_handlers.items():
+        signal.signal(sig, h)
+    if snapshot_dir is not None:
+        print(f"crash recovery: {eng.stats['snapshots']} snapshots "
+              f"({eng.stats['snapshot_bytes'] / 1024:.0f} KiB last), "
+              f"{eng.stats['restores']} restores, "
+              f"{eng.stats['replayed_requests']} replayed -> "
+              f"{snapshot_dir}")
 
     lat, ttft = [], []
     for ring in results:                 # Transport-protocol drain

@@ -113,6 +113,7 @@ import contextlib
 import dataclasses
 import itertools
 import math
+import os
 import threading
 import time
 from collections import deque
@@ -126,8 +127,11 @@ from repro.core import faults as faults_mod
 from repro.core import nbb, states, transport
 from repro.core.host_queue import MpscQueue, SpscQueue
 from repro.models.model import prefix_chunk_hashes
+from repro.serve import snapshot as snapshot_mod
 from repro.serve.kv_cache import OK as POOL_OK
-from repro.serve.kv_cache import PagedKVPool, PrefixCache, SwapImage
+from repro.serve.kv_cache import (PagedKVPool, PrefixCache, PrefixEntry,
+                                  SwapImage)
+from repro.serve.snapshot import SnapshotError
 from repro.serve.overload import (OverloadPolicy, PriorityIntake,
                                   ShedStatus)
 
@@ -286,6 +290,7 @@ class RequestHandle:
             if self.req.tokens_out is None:
                 self.req.tokens_out = np.zeros((0,), np.int32)
             self._session.forget(self.req.req_id)
+            self._session._finalized.add(self.req.req_id)
             self._final = self.req
             return True
         moved = self._session.pump() or moved
@@ -304,6 +309,7 @@ class RequestHandle:
             if req.status is None:
                 req.status = self.status
             self._session.forget(req.req_id)
+            self._session._finalized.add(req.req_id)
             self._final = req
             return True
         return moved
@@ -415,6 +421,12 @@ class Session:
         self._handles: Dict[int, RequestHandle] = {}    # full req_id
         self._by_mask: Dict[int, RequestHandle] = {}    # req_id & _REQ_MASK
         self._completed: deque = deque()
+        # Terminal dedupe (DESIGN.md §14): a restore re-delivers the
+        # terminals that were sitting undelivered in the response ring
+        # at snapshot time, so a client that DID receive one before the
+        # crash may see it again — the first delivery wins, duplicates
+        # are dropped here.
+        self._finalized: set = set()
         # Explicit teardown (DESIGN.md §13): closed sessions refuse new
         # submits with an already-terminal FailedStatus handle.
         self.closed = False
@@ -522,6 +534,10 @@ class Session:
                 h._tokens.append((pos, tok))
         for req in self.engine.responses[self.client_id].drain_burst():
             moved = True
+            if req.req_id in self._finalized:
+                continue    # duplicate terminal re-delivered across a
+                            # restart: exactly-once, first delivery won
+            self._finalized.add(req.req_id)
             h = self.forget(req.req_id)
             if h is not None:
                 if req.status is not None and h.status is None:
@@ -552,6 +568,69 @@ class Session:
             if time.monotonic() > deadline:
                 return TimeoutStatus(waited_s=timeout_s)
             b.wait(nbb.BUFFER_EMPTY)
+
+    def adopt(self, old: "Session") -> None:
+        """Migrate a pre-restart session's state into this one
+        (DESIGN.md §14): live handles re-home here (their ``_session``
+        is re-pointed so polling drains THIS engine's rings), the
+        terminal-dedupe set and completed queue carry over, and — when
+        this engine was restored from a snapshot — every live handle is
+        re-bound to its restored Request.  The old session is left
+        closed and empty; adopting is idempotent."""
+        if old is self:
+            return
+        self._finalized |= old._finalized
+        self._completed.extend(old._completed)
+        for rid, h in list(old._handles.items()):
+            h._session = self
+            self._handles[rid] = h
+            m = rid & _REQ_MASK
+            if m in self._by_mask and self._by_mask[m] is not h:
+                self._by_mask.pop(m)    # wire-id collision: same rule
+            else:                       # as submit_i — disable both
+                self._by_mask[m] = h
+        old._handles.clear()
+        old._by_mask.clear()
+        old._completed.clear()
+        old._finalized = set()
+        old.closed = True
+        if self.engine.restore_report is not None:
+            self._rebind_restored()
+
+    def _rebind_restored(self) -> None:
+        """Post-restore handle reconciliation: a live handle whose
+        request survived into the snapshot (or replayed from the WAL)
+        is re-pointed at the restored Request object — ``cancel()`` must
+        CAS the FSM the engine actually schedules.  A handle the
+        restored engine does not know (accepted after the last snapshot
+        without a surviving WAL record) finalizes NOW with a typed falsy
+        FailedStatus: its request is gone; waiting would hang forever."""
+        eng = self.engine
+        report = eng.restore_report
+        for rid, h in list(self._handles.items()):
+            if h._final is not None:
+                continue
+            new_req = eng._restored_reqs.get(rid)
+            if new_req is not None:
+                if new_req is not h.req:
+                    h.req = new_req
+                continue
+            req = h.req
+            req.status = FailedStatus("lost across restart")
+            if not req.fsm.cas(states.REQUEST_VALID,
+                               states.REQUEST_CANCELLED):
+                req.fsm.cas(states.REQUEST_RECEIVED,
+                            states.REQUEST_CANCELLED)
+            if req.done_t == 0.0:
+                req.done_t = time.monotonic()
+            if req.tokens_out is None:
+                req.tokens_out = np.zeros((0,), np.int32)
+            h.status = req.status
+            self.forget(rid)
+            self._finalized.add(rid)
+            h._final = req
+            if report is not None:
+                report["failed"] = int(report.get("failed", 0)) + 1
 
     def close(self) -> None:
         """Explicit teardown (idempotent): cancel every in-flight
@@ -666,7 +745,9 @@ class ServeEngine:
                  prefix_cache: bool = True,
                  overload: Optional[OverloadPolicy] = None,
                  fault_plan: Optional["faults_mod.FaultPlan"] = None,
-                 lease_s: Optional[float] = None, tick_retries: int = 1):
+                 lease_s: Optional[float] = None, tick_retries: int = 1,
+                 snapshot_dir: Optional[str] = None,
+                 snapshot_every: Optional[int] = None):
         if scheduler not in ("slot_paged", "slot_chunked", "slot_fused",
                              "slot", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
@@ -704,6 +785,8 @@ class ServeEngine:
         # flat MPSC fan-in becomes the multi-class weighted-fair intake
         # (same lock-free per-client SPSC rings, one set per class).
         self._ov = overload
+        self._intake_depth = intake_depth
+        self._stream_depth = stream_depth
         self.intake = (PriorityIntake(n_clients, overload, intake_depth)
                        if overload is not None else
                        MpscQueue(n_clients,
@@ -791,7 +874,13 @@ class ServeEngine:
                       # cancels and admission rejects), leases reaped,
                       # and pages quarantined after poisoned writes.
                       "faults_injected": 0, "requests_failed": 0,
-                      "leases_reaped": 0, "pages_quarantined": 0}
+                      "leases_reaped": 0, "pages_quarantined": 0,
+                      # Crash-recovery counters (DESIGN.md §14):
+                      # snapshots written / bytes of the newest one,
+                      # restores performed, journal records replayed as
+                      # fresh submissions, and in-process restarts.
+                      "snapshots": 0, "snapshot_bytes": 0, "restores": 0,
+                      "replayed_requests": 0, "restarts": 0}
         # Append-only log of fail-fast oversize rejects (written by
         # client threads in submit_i; list.append is the atomic).
         self.oversize_log: List[int] = []
@@ -811,6 +900,36 @@ class ServeEngine:
         self.dead: Optional[str] = None
         self._tick_failures = 0         # consecutive failed ticks (watchdog)
         self._reaped: set = set()       # clients whose lease was reaped
+        # -- crash recovery (DESIGN.md §14) --------------------------------
+        if snapshot_dir is not None and scheduler != "slot_paged":
+            raise ValueError(
+                "snapshot_dir needs scheduler='slot_paged': snapshots "
+                "image the paged pool's block tables and pages; the "
+                "dense schedulers have no host-recoverable KV state")
+        if snapshot_every is not None and snapshot_dir is None:
+            raise ValueError("snapshot_every requires snapshot_dir")
+        if snapshot_every is not None and snapshot_every < 1:
+            raise ValueError(f"snapshot_every must be >= 1, "
+                             f"got {snapshot_every}")
+        self._snap_dir = snapshot_dir
+        self._snap_every = snapshot_every
+        self._snap_requested = False    # signal-handler-safe flag
+        self._in_tick = False           # snapshots only at tick boundaries
+        self._ticks = 0
+        self._restart_count = 0         # in-process restarts (not restored)
+        # Requests a restore re-queued ahead of the intake rings, in
+        # deterministic order (snapshot-queued first, then journal
+        # replay); consumed by _intake_recv before any ring pop.
+        self._restore_queue: deque = deque()
+        # req_id -> restored Request: what Session._rebind_restored uses
+        # to re-point live handles after a restart.
+        self._restored_reqs: Dict[int, Request] = {}
+        self.restore_report: Optional[Dict[str, object]] = None
+        self._journal: Optional[snapshot_mod.IntakeJournal] = None
+        if snapshot_dir is not None:
+            os.makedirs(snapshot_dir, exist_ok=True)
+            self._journal = snapshot_mod.IntakeJournal(
+                os.path.join(snapshot_dir, "journal.wal"))
         if fault_plan is not None:
             # Thread the plan through the engine's own delivery rings so
             # transport sites cover the token/terminal planes too (the
@@ -823,16 +942,26 @@ class ServeEngine:
                 for c, r in enumerate(self.responses)]
 
     # -- client API (one thread per client) -------------------------------------
-    def connect(self, client_id: int) -> Session:
+    def connect(self, client_id: int,
+                resume: Optional[Session] = None) -> Session:
         """The client's streaming session.  One per client: the session
         owns the consumer side of the client's response/stream rings, so
         all receive-side calls for a client must come from one thread.
         Connecting RE-OPENS a closed session: close() left nothing in
-        flight, so the new holder starts clean with a fresh lease."""
+        flight, so the new holder starts clean with a fresh lease.
+
+        ``resume`` re-binds a pre-restart session's live handles onto
+        this engine (DESIGN.md §14): handles whose requests the restored
+        engine knows keep streaming mid-decode (clients dedupe by the
+        ``req_id|pos|token`` wire positions, so delivery stays
+        exactly-once across the restart); the rest finalize with a typed
+        falsy FailedStatus instead of hanging."""
         sess = self._sessions[client_id]
         if sess.closed:
             sess.closed = False
             sess.last_pump_t = time.monotonic()
+        if resume is not None and resume is not sess:
+            sess.adopt(resume)
         return sess
 
     def submit(self, client_id: int, prompt: np.ndarray,
@@ -1074,6 +1203,15 @@ class ServeEngine:
         of hanging on an engine that will never answer."""
         if self.dead is not None:
             return
+        if self._snap_dir is not None and not self._in_tick:
+            # Last-gasp checksummed snapshot (DESIGN.md §14), attempted
+            # only at a consistent boundary (mid-tick state may be half-
+            # harvested — then the last periodic snapshot stands).  The
+            # fault plan is NOT paused here: a snapshot.write fault can
+            # tear this file, and the loader's checksum falls back to
+            # the previous good one — that path is part of the contract.
+            with contextlib.suppress(Exception):
+                self.save_snapshot()
         self.dead = reason
         self._stop.set()
         with self._paused_plan():
@@ -1348,6 +1486,8 @@ class ServeEngine:
                 # The hit chunks never dispatch: prefill resumes at the
                 # cached extent over the adopted (shared) pages.
                 slot.prefill_pos = e_hit
+        if self._journal is not None:
+            self._journal_bind(req)
 
     def _prefill_slot(self, slot: DecodeSlot) -> None:
         """Monolithic admission tail (``slot``/``slot_fused``): one B=1
@@ -1498,6 +1638,12 @@ class ServeEngine:
         multi-class pop; a request served by AGING over a more urgent
         nonempty class is promoted (eff_priority 0) so the bypass that
         earned its turn also shields it from instant preemption."""
+        if self._restore_queue:
+            # Restored/replayed submissions admit ahead of the (fresh,
+            # empty) intake rings, in the deterministic order restore
+            # queued them — no fault probe: these already paid intake
+            # once, in their previous life.
+            return nbb.OK, self._restore_queue.popleft()
         if self.faults is not None and \
                 self.faults.fire("transport.recv") is not None:
             return nbb.BUFFER_EMPTY, None   # injected: pop refused
@@ -1741,6 +1887,7 @@ class ServeEngine:
         if self.dead is not None:
             return 0, False
         reaped = self._reap_leases() if self.lease_s is not None else False
+        self._in_tick = True
         try:
             if self.scheduler in ("slot_chunked", "slot_paged"):
                 served, worked = self._tick_chunked()
@@ -1751,6 +1898,19 @@ class ServeEngine:
             self._tick_failures = 0
         except Exception as exc:        # noqa: BLE001 — watchdog boundary
             served, worked = self._on_tick_fault(exc)
+        finally:
+            self._in_tick = False
+        # Tick boundary: the one point where host state is consistent
+        # (no half-harvested dispatch, no half-claimed admission), so
+        # the one point snapshots are taken (DESIGN.md §14).
+        self._ticks += 1
+        if (self._snap_dir is not None and self.dead is None
+                and (self._snap_requested
+                     or (self._snap_every is not None
+                         and self._ticks % self._snap_every == 0))):
+            self._snap_requested = False
+            with contextlib.suppress(Exception):
+                self.save_snapshot()
         if self.faults is not None:
             self.stats["faults_injected"] = self.faults.n_fired
         return served, worked or reaped
@@ -2374,26 +2534,374 @@ class ServeEngine:
             if not worked:
                 return total
 
-    def serve_forever(self) -> None:
+    # -- crash recovery (DESIGN.md §14) -----------------------------------------
+    def request_snapshot(self) -> None:
+        """Ask the batcher thread to snapshot at its next tick boundary
+        (safe from any thread, including a signal handler: one boolean
+        store)."""
+        self._snap_requested = True
+
+    def _config_fingerprint(self) -> Dict[str, object]:
+        """The shape contract a snapshot restores onto: same model, same
+        slot/pool geometry, same scheduler.  Asserted at restore — a
+        snapshot is an image of THIS engine shape, not a migration
+        format.  (Byte-identical resumption additionally assumes the
+        same params; those are not fingerprinted — checksumming weights
+        per snapshot would dwarf the snapshot itself.)"""
+        return {
+            "arch": self.model.cfg.name,
+            "vocab": self.model.cfg.vocab_size,
+            "max_batch": self.max_batch, "max_len": self.max_len,
+            "page_size": self.pool.page_size,
+            "pool_pages": self.pool.n_pages,
+            "chunk_tokens": self.chunk_tokens,
+            "k_max": self.k_max, "k_free": self.k_free,
+            "scheduler": self.scheduler,
+            "n_clients": len(self._sessions),
+            "prefix_cache": self.prefix_cache is not None,
+        }
+
+    def _journal_bind(self, req: Request) -> None:
+        """WAL append at BIND: prompt + decode parameters are the whole
+        replay story — greedy decode is deterministic, so re-binding the
+        same record yields the same tokens.  The ``journal.append``
+        fault site models a lost record: the request still serves in
+        this life, but cannot be replayed after a crash (its handle
+        finalizes as "lost across restart" on re-bind)."""
+        if (self.faults is not None
+                and self.faults.fire("journal.append") is not None):
+            return                      # injected: record lost
+        self._journal.append({
+            "req_id": req.req_id, "client_id": req.client_id,
+            "prompt": np.asarray(req.prompt, np.int32),
+            "max_tokens": req.max_tokens, "eos_id": req.eos_id,
+            "priority": req.priority, "slo_s": req.slo_s,
+        })
+
+    def snapshot(self) -> "snapshot_mod.EngineSnapshot":
+        """Capture the crash-consistent engine image at the current tick
+        boundary (batcher thread only; one host sync for the page
+        gather).  Shared pages are captured once however many block
+        tables point at them; prefix-cache entries are recorded by their
+        chain keys and page lists — restore re-claims the same physical
+        pages, it never copies per sequence."""
+        if self.scheduler != "slot_paged":
+            raise SnapshotError(
+                f"snapshot() needs scheduler='slot_paged', "
+                f"not {self.scheduler!r}")
+        extra = (self.prefix_cache.resident_pages()
+                 if self.prefix_cache is not None else ())
+        pool_state = self.pool.snapshot_state(extra_pages=extra)
+        self.stats["host_syncs"] += 1
+        prefix_entries = []
+        if self.prefix_cache is not None:
+            for e in sorted(self.prefix_cache._entries.values(),
+                            key=lambda e: e.tick):
+                prefix_entries.append((e.key, e.n_tokens, list(e.pages)))
+        slots = []
+        for s in self.slots:
+            if s.request is None:
+                continue
+            slots.append(snapshot_mod.SlotImage(
+                index=s.index, fsm=s.fsm, request=s.request,
+                cur_token=int(self._cur[s.index]), pos=s.pos,
+                generated=s.generated, outs=s.outs, prompt=s.prompt,
+                prefill_pos=s.prefill_pos, next_tok=s.next_tok,
+                chunk_hashes=(list(s.chunk_hashes)
+                              if s.chunk_hashes is not None else None),
+                pending_prefix=list(s.pending_prefix),
+                created_prefixes=list(s.created_prefixes),
+                fresh_resume=s.fresh_resume))
+        # Peek (never consume) the in-flight rings: intake-resident
+        # submissions and undelivered terminals are exactly what a crash
+        # at this boundary would strand.
+        queued: List[Request] = []
+        for c in range(len(self._sessions)):
+            for ring in self._client_rings(c):
+                queued.extend(snapshot_mod.peek_ring(ring))
+        undelivered: Dict[int, List[Request]] = {}
+        for c in range(len(self._sessions)):
+            items = snapshot_mod.peek_ring(self._raw_ring(self.responses[c]))
+            if items:
+                undelivered[c] = list(items)
+        return snapshot_mod.EngineSnapshot(
+            config=self._config_fingerprint(),
+            journal_seq=(self._journal.seq
+                         if self._journal is not None else 0),
+            next_req_id=next(self._id),     # burns one id: ids may skip,
+            pool=pool_state,                # never collide across a restore
+            prefix_entries=prefix_entries,
+            slots=slots, cur=self._cur.copy(), pos=self._pos.copy(),
+            parked=list(self._parked),
+            deferred=[(r, list(k)) for r, k in self._deferred],
+            queued=queued, undelivered=undelivered,
+            stats=dict(self.stats))
+
+    def save_snapshot(self) -> Optional[str]:
+        """Capture + write to ``snapshot_dir``.  Returns the path, or
+        None when snapshots are disarmed or the write was torn by an
+        injected ``snapshot.write`` fault (the previous good snapshot
+        survives either way — tmp + checksum + atomic rename)."""
+        if self._snap_dir is None:
+            return None
+        snap = self.snapshot()
+        path = snapshot_mod.write_snapshot(snap, self._snap_dir,
+                                           faults=self.faults)
+        self.stats["snapshots"] += 1
+        if path is not None:
+            self.stats["snapshot_bytes"] = os.path.getsize(path)
+        return path
+
+    def _reset_runtime(self) -> None:
+        """Empty pre-admission state on the existing engine object:
+        fresh rings (sessions survive — their handles re-bind), free
+        slots, no parked/deferred/in-flight bookkeeping.  The pool and
+        prefix cache are NOT reset here; restore_state rebuilds them
+        wholesale (callers that give up entirely reset the pool too)."""
+        n_clients = len(self._sessions)
+        self.intake = (PriorityIntake(n_clients, self._ov,
+                                      self._intake_depth)
+                       if self._ov is not None else
+                       MpscQueue(n_clients,
+                                 capacity_per_producer=self._intake_depth))
+        self.responses = [SpscQueue(self._intake_depth)
+                          for _ in range(n_clients)]
+        self.streams = [SpscQueue(self._stream_depth)
+                        for _ in range(n_clients)]
+        if self.faults is not None:
+            self.streams = [
+                transport.FaultyTransport(r, self.faults, f"stream{c}")
+                for c, r in enumerate(self.streams)]
+            self.responses = [
+                transport.FaultyTransport(r, self.faults, f"responses{c}")
+                for c, r in enumerate(self.responses)]
+        self.slots = [DecodeSlot(i) for i in range(self.max_batch)]
+        self._cur[:] = 0
+        self._pos[:] = 0
+        self._caches = None
+        self._parked = []
+        self._deferred = []
+        self._inflight = {}
+        self._pending_bind = {}
+        self._restore_queue.clear()
+        self._restored_reqs = {}
+        if self.prefix_cache is not None:
+            # Entries drop without decref: the pool is rebuilt (or
+            # reset) wholesale right after, counts and all.
+            self.prefix_cache._entries.clear()
+        self.dead = None
+        self._stop.clear()
+        self._tick_failures = 0
+        self._reaped = set()
+        self._ticks = 0
+        self._snap_requested = False
+
+    def restore(self, snap: Union["snapshot_mod.EngineSnapshot", str,
+                                  os.PathLike]) -> Dict[str, object]:
+        """Reconstruct the engine from a snapshot (object or file path)
+        and resume decode mid-stream: pool pages re-claimed at their
+        exact physical ids and refcounts, block tables verbatim, prefix
+        cache re-adopted by key, bound/parked slots with their Figure-4
+        FSMs and decode cursors, stranded intake re-queued, undelivered
+        terminals re-sent, and WAL records past the snapshot's
+        high-water mark replayed as fresh submissions (deterministic:
+        greedy decode).  All-or-nothing: any failure resets the engine
+        empty and raises :class:`SnapshotError`; an injected
+        ``snapshot.restore`` fault aborts before any mutation."""
+        if isinstance(snap, (str, os.PathLike)):
+            snap = snapshot_mod.read_snapshot(os.fspath(snap))
+        self._fault_raise("snapshot.restore")
+        fp = self._config_fingerprint()
+        if snap.config != fp:
+            diff = {k: (snap.config.get(k), fp.get(k))
+                    for k in set(snap.config) | set(fp)
+                    if snap.config.get(k) != fp.get(k)}
+            raise SnapshotError(f"config mismatch, cannot restore: {diff}")
+        try:
+            with self._paused_plan():
+                self._reset_runtime()
+                self.pool.restore_state(snap.pool)
+                if self.prefix_cache is not None:
+                    for key, n_tok, pages in snap.prefix_entries:
+                        self.prefix_cache._entries[key] = PrefixEntry(
+                            key, n_tok, list(pages),
+                            next(self.prefix_cache._clock))
+                self._cur[:] = snap.cur
+                self._pos[:] = snap.pos
+                for img in snap.slots:
+                    s = self.slots[img.index]
+                    s.fsm = img.fsm
+                    s.request = img.request
+                    s.next_tok = img.next_tok
+                    s.pos = img.pos
+                    s.generated = img.generated
+                    s.outs = img.outs
+                    s.prompt = img.prompt
+                    s.prefill_pos = img.prefill_pos
+                    s.chunk_hashes = img.chunk_hashes
+                    s.pending_prefix = list(img.pending_prefix)
+                    s.created_prefixes = list(img.created_prefixes)
+                    s.fresh_resume = img.fresh_resume
+                    if img.chunk_hashes:
+                        for h in img.chunk_hashes:
+                            self._inflight[h] = self._inflight.get(h, 0) + 1
+                    self._restored_reqs[img.request.req_id] = img.request
+                self._parked = list(snap.parked)
+                for p in self._parked:
+                    self._restored_reqs[p.req.req_id] = p.req
+                self._deferred = [(r, list(k)) for r, k in snap.deferred]
+                for req, _ in self._deferred:
+                    self._restored_reqs[req.req_id] = req
+                now = time.monotonic()
+                for req in snap.queued:
+                    # The previous life's monotonic clock means nothing
+                    # here; the queue wait restarts (SLO sheds must not
+                    # fire on a stale cross-process timestamp).
+                    req.submit_t = now
+                    self._restore_queue.append(req)
+                    self._restored_reqs[req.req_id] = req
+                replayed = 0
+                if self._journal is not None:
+                    for rec in self._journal.records[snap.journal_seq:]:
+                        if rec["req_id"] in self._restored_reqs:
+                            continue    # bound from the snapshot's own
+                        req = Request(  # queue after capture: not lost
+                            rec["req_id"], rec["client_id"],
+                            np.asarray(rec["prompt"], np.int32),
+                            rec["max_tokens"], rec["eos_id"],
+                            submit_t=now)
+                        req.priority = req.eff_priority = rec["priority"]
+                        req.slo_s = rec["slo_s"]
+                        req.fsm.transition(states.REQUEST_FREE,
+                                           states.REQUEST_VALID)
+                        self._restore_queue.append(req)
+                        self._restored_reqs[req.req_id] = req
+                        replayed += 1
+                redelivered = 0
+                for c, reqs in snap.undelivered.items():
+                    for req in reqs:
+                        self._restored_reqs[req.req_id] = req
+                        self._respond(req)
+                        redelivered += 1
+                max_seen = max(self._restored_reqs, default=-1)
+                self._id = itertools.count(
+                    max(snap.next_req_id, max_seen + 1))
+        except SnapshotError:
+            raise
+        except Exception as exc:
+            with contextlib.suppress(Exception):
+                self._reset_runtime()
+                self.pool.reset()
+            raise SnapshotError(f"restore failed mid-rebuild: {exc!r}")
+        self.stats = dict(snap.stats)
+        self.stats["restores"] += 1
+        self.stats["replayed_requests"] += replayed
+        self.stats["restarts"] = self._restart_count
+        self.restore_report = {
+            "resumed": len(snap.slots) + len(snap.parked)
+                       + len(snap.deferred) + len(snap.queued),
+            "replayed": replayed,
+            "redelivered": redelivered,
+            "failed": 0,
+        }
+        return self.restore_report
+
+    def restore_latest(self, retries: int = 8) -> Optional[Dict[str, object]]:
+        """Restore from the newest *valid* snapshot in ``snapshot_dir``,
+        retrying through injected ``snapshot.restore`` faults (finite
+        plans go quiet).  None when no usable snapshot exists or every
+        retry failed — the engine is then reset empty (pool included)
+        so re-bound handles fail typed instead of hanging."""
+        if self._snap_dir is None:
+            return None
+        for _ in range(max(1, retries)):
+            snap, path = snapshot_mod.load_latest(self._snap_dir)
+            if snap is None:
+                return None
+            try:
+                report = self.restore(snap)
+                report["path"] = path
+                return report
+            except (SnapshotError, faults_mod.InjectedFault):
+                continue
+        with contextlib.suppress(Exception):
+            self._reset_runtime()
+            self.pool.reset()
+        return None
+
+    def _restart_from_crash(self, exc: Exception) -> bool:
+        """The in-process relaunch (``serve_forever(restart=True)``):
+        attempt a final boundary snapshot, restore from the newest good
+        one, re-bind every live session handle.  False => no usable
+        snapshot or the restart budget is spent (the caller dies the
+        PR-8 way: typed terminals for everything)."""
+        if self._restart_count >= 5:
+            return False                # a deterministic crash loop must
+        if not self._in_tick:           # not restart forever
+            with contextlib.suppress(Exception):
+                self.save_snapshot()
+        report = self.restore_latest()
+        if report is None:
+            return False
+        self._restart_count += 1
+        self.stats["restarts"] = self._restart_count
+        for sess in self._sessions:
+            sess._rebind_restored()
+        return True
+
+    def serve_forever(self, restart: bool = False) -> None:
         """The engine loop, with a last-resort boundary: slot-scheduler
         ticks never raise (the watchdog), but if the loop itself somehow
         crashes — wave scheduler, a bug in recovery — the engine dies
         CLEANLY: every outstanding request resolves with a typed
         FailedStatus instead of clients hanging on rings nobody will
-        ever fill again."""
-        try:
-            backoff = transport.Backoff()
-            while not self._stop.is_set():
+        ever fill again.
+
+        With ``restart=True`` (and ``snapshot_dir`` armed) a loop crash
+        relaunches instead: final snapshot attempt, restore from the
+        newest good snapshot, handles re-bound, loop resumed — process
+        death becomes a recoverable event (DESIGN.md §14).  On a CLEAN
+        stop the final state is snapshotted so a later process can
+        ``--restore`` it."""
+        backoff = transport.Backoff()
+        while not self._stop.is_set():
+            try:
                 if self.scheduler == "wave":
                     worked = self.step() > 0
                 else:
                     _, worked = self.tick()
-                if worked:
-                    backoff.reset()
-                else:
-                    backoff.wait(nbb.BUFFER_EMPTY)
-        except Exception as exc:        # noqa: BLE001 — death boundary
-            self._die(f"engine loop crashed: {exc!r}")
+            except Exception as exc:    # noqa: BLE001 — death boundary
+                if (not restart or self._snap_dir is None
+                        or not self._restart_from_crash(exc)):
+                    self._die(f"engine loop crashed: {exc!r}")
+                    return
+                backoff.reset()
+                continue
+            if worked:
+                backoff.reset()
+            else:
+                backoff.wait(nbb.BUFFER_EMPTY)
+        if self._snap_dir is not None and self.dead is None:
+            # Graceful shutdown: park the final consistent state for a
+            # later --restore.  With work still in flight, _die does the
+            # parking — its last-gasp snapshot captures the live slots /
+            # parked / queued requests FIRST, then resolves every handle
+            # with a typed terminal, so no client hangs on a stopped
+            # engine (the next process resumes them from the snapshot).
+            pending = (any(s.request is not None for s in self.slots)
+                       or bool(self._parked) or bool(self._deferred)
+                       or bool(self._restore_queue))
+            if not pending:
+                for c in range(len(self._sessions)):
+                    if any(snapshot_mod.peek_ring(r)
+                           for r in self._client_rings(c)):
+                        pending = True
+                        break
+            if pending:
+                self._die("engine stopped; state snapshotted for restore")
+            else:
+                with contextlib.suppress(Exception):
+                    self.save_snapshot()
 
     def start(self) -> threading.Thread:
         t = threading.Thread(target=self.serve_forever, daemon=True)

@@ -548,6 +548,120 @@ class PagedKVPool:
         self._peak_pages = max(self._peak_pages, self.used_pages())
         return OK
 
+    # -- crash-recovery snapshots (DESIGN.md §14) ------------------------------
+    def snapshot_state(self, extra_pages=()) -> Dict[str, object]:
+        """Host-side image of the pool at a tick boundary: block tables,
+        per-page refcounts, quarantine pins, traffic counters, and the
+        bytes of every page that backs *written* positions — gathered
+        once per distinct physical page in a single device fetch, so a
+        page shared by N sequences (or pinned by a prefix-cache entry)
+        costs one page of host memory, not N.  Reserved-ahead pages
+        (rows beyond ``pages_needed(n_tokens)``) carry no bytes: nothing
+        attended lives there, so restore re-claims them blank.
+        ``extra_pages`` lets the engine pin prefix-cache-resident pages
+        whose owning sequences have already retired."""
+        refcounts = {p: self._alloc.refcount(p) for p in range(self.n_pages)
+                     if self._alloc.refcount(p) > 0}
+        tables = {sid: {"pages": list(t.pages), "n_tokens": t.n_tokens,
+                        "slot": t.slot, "n_reserved": t.n_reserved}
+                  for sid, t in self._tables.items()}
+        need = {int(p) for p in extra_pages}
+        for t in self._tables.values():
+            if t.n_tokens > 0:
+                live = min(self.pages_needed(t.n_tokens), len(t.pages))
+                need.update(p for p in t.pages[:live] if p >= 0)
+        idx = sorted(need)
+        if idx:
+            ii = jnp.asarray(idx, jnp.int32)
+            k_host = np.asarray(self.k[ii])
+            v_host = np.asarray(self.v[ii])
+        else:
+            k_host = v_host = np.zeros((0,), np.int8)
+        return {
+            "n_pages": self.n_pages, "page_size": self.page_size,
+            "refcounts": refcounts, "tables": tables,
+            "quarantined": set(self.quarantined),
+            "next_probe": self._next_probe,
+            "counters": {
+                "kv_copy_bytes": self.kv_copy_bytes,
+                "cow_copy_bytes": self.cow_copy_bytes,
+                "swap_in_bytes": self.swap_in_bytes,
+                "swap_out_bytes": self.swap_out_bytes,
+                "peak_pages": self._peak_pages,
+                "shared_peak": self._shared_peak,
+            },
+            "data_pages": idx, "k": k_host, "v": v_host,
+        }
+
+    def reset(self) -> None:
+        """Return the pool to its just-constructed state: zeroed device
+        arrays (stale bytes from a previous incarnation must not leak
+        into restored sequences), a fresh allocator, no tables, no
+        quarantine, zero counters.  Compiled CoW/swap traces survive."""
+        shape = (self.n_pages, self.page_size, self.n_layers,
+                 self.kv_heads, self.head_dim)
+        dtype = self.k.dtype
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+        self._alloc = RefCountArray(self.n_pages)
+        self._tables = {}
+        self._next_probe = 0
+        self.quarantined = set()
+        self.kv_copy_bytes = 0
+        self.cow_copy_bytes = 0
+        self.swap_in_bytes = 0
+        self.swap_out_bytes = 0
+        self._peak_pages = 0
+        self._shared_peak = 0
+
+    def restore_state(self, state: Dict[str, object]) -> None:
+        """Rebuild the pool from a :meth:`snapshot_state` image.  Every
+        physical page id is re-claimed at its exact saved refcount via
+        ``RefCountArray.claim_specific`` — block tables restore verbatim,
+        so post-restore decode reads the same page numbers the snapshot
+        recorded.  Saved page bytes scatter back in one fused dispatch
+        (reusing the swap-in trace cache); traffic counters restore to
+        their snapshotted values, so the copy ledger stays exact across
+        the restart (the restore scatter itself is recovery traffic, not
+        scheduler traffic, and is deliberately not charged)."""
+        if (state["n_pages"] != self.n_pages
+                or state["page_size"] != self.page_size):
+            raise ValueError(
+                f"pool shape mismatch: snapshot {state['n_pages']}p x "
+                f"{state['page_size']}, pool {self.n_pages}p x "
+                f"{self.page_size}")
+        self.reset()
+        for p, n in state["refcounts"].items():
+            if not self._alloc.claim_specific(p):
+                raise RuntimeError(f"page {p} not claimable on restore")
+            for _ in range(n - 1):
+                self._alloc.incref(p)
+        self._tables = {
+            sid: PageTable(sid, list(d["pages"]), d["n_tokens"],
+                           slot=d["slot"], n_reserved=d["n_reserved"])
+            for sid, d in state["tables"].items()}
+        self.quarantined = set(state["quarantined"])
+        self._next_probe = state["next_probe"]
+        c = state["counters"]
+        self.kv_copy_bytes = c["kv_copy_bytes"]
+        self.cow_copy_bytes = c["cow_copy_bytes"]
+        self.swap_in_bytes = c["swap_in_bytes"]
+        self.swap_out_bytes = c["swap_out_bytes"]
+        self._peak_pages = c["peak_pages"]
+        self._shared_peak = c["shared_peak"]
+        idx = state["data_pages"]
+        if idx:
+            fn = self._swap_fns.get(len(idx))
+            if fn is None:
+                fn = jax.jit(lambda k, v, d, kh, vh: (k.at[d].set(kh),
+                                                      v.at[d].set(vh)),
+                             donate_argnums=(0, 1))
+                self._swap_fns[len(idx)] = fn
+            d = jnp.asarray(idx, jnp.int32)
+            self.k, self.v = fn(self.k, self.v, d,
+                                jnp.asarray(state["k"]),
+                                jnp.asarray(state["v"]))
+
 
 @dataclasses.dataclass
 class PrefixEntry:

@@ -434,6 +434,10 @@ def test_fault_plan_sweep_engine_never_wedges(engine_setup):
         terminal = (s["served"] + s["rejected"] + s["cancelled"]
                     + s["shed_requests"] + s["requests_failed"])
         assert terminal >= len(handles)
-    # every site CLASS was exercised somewhere in the sweep
+    # every site CLASS reachable here was exercised somewhere in the
+    # sweep.  The ISSUE-9 snapshot/journal sites only probe on an
+    # engine with snapshot_dir armed — their sweep coverage lives in
+    # tests/test_serve_recovery.py and benchmarks/bench_faults.py
+    # (where every plan crosses a kill-restore boundary).
     assert {s.split(".")[0] for s in hit_sites} == \
-        {s.split(".")[0] for s in faults.SITES}
+        {s.split(".")[0] for s in faults.SITES} - {"snapshot", "journal"}

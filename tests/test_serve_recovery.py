@@ -1,0 +1,569 @@
+"""Crash recovery (DESIGN.md §14): crash-consistent snapshots, the
+write-ahead intake journal, and byte-identical stream resumption.
+
+The acceptance battery for ISSUE 9:
+- kill-at-every-tick sweep: abandon the engine at EVERY tick boundary
+  of the reference run, restore a fresh engine from the snapshot +
+  journal, re-bind the live handles — every stream must come out
+  byte-identical to the uninterrupted run, delivered exactly once;
+- snapshot→restore roundtrip property test (hypothesis): the restored
+  pool is EXACTLY the captured pool — refcounts, block tables, free
+  ledger, page bytes, and the copy-traffic ledger
+  (``kv_copy == cow + swap_in + swap_out``) — and the resumed engine
+  finishes every request with the same tokens;
+- torn snapshot writes (injected ``snapshot.write`` fault) never cost
+  the previous good snapshot; a lost journal record (``journal.append``
+  fault) fails its handle typed ("lost across restart"), never hangs;
+- ``serve_forever(restart=True)`` self-restarts across a loop crash;
+- Session reconnect semantics: ``connect(resume=...)`` adoption,
+  idempotent close, terminal re-delivery deduped (exactly-once).
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+try:  # optional dev dependency (requirements-dev.txt); property tests
+    from hypothesis import given, settings, strategies as st  # skip without it
+except ImportError:
+    given = settings = st = None
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.core.faults import FaultPlan, FaultRule  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.serve import snapshot as snapshot_mod  # noqa: E402
+from repro.serve.engine import FailedStatus, ServeEngine  # noqa: E402
+from repro.serve.snapshot import SnapshotError  # noqa: E402
+
+MAX_TICKS = 800
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = get_smoke_config("smollm-135m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    donor = _mk(model, params)
+    return cfg, model, params, donor
+
+
+def _mk(model, params, snapshot_dir=None, snapshot_every=None,
+        fault_plan=None, pool_pages=24):
+    return ServeEngine(model, params, max_batch=2, max_len=64,
+                       n_clients=2, pool_pages=pool_pages, page_size=8,
+                       scheduler="slot_paged", k_max=4, chunk_tokens=16,
+                       fault_plan=fault_plan, tick_retries=1,
+                       snapshot_dir=snapshot_dir,
+                       snapshot_every=snapshot_every)
+
+
+def _share_jit(eng, donor):
+    """Adopt the donor's compiled-function caches (identical shapes):
+    the whole module compiles each trace exactly once."""
+    eng._jit_loops = donor._jit_loops
+    eng._jit_chunked = donor._jit_chunked
+    eng._jit_prefill = donor._jit_prefill
+    eng._jit_decode = donor._jit_decode
+    eng._jit_write_slot = donor._jit_write_slot
+    eng.pool._cow_fns = donor.pool._cow_fns
+    eng.pool._swap_fns = donor.pool._swap_fns
+
+
+def _submit_all(sessions, vocab, n=4, max_tokens=12, seed=3):
+    rng = np.random.default_rng(seed)
+    return [sessions[i % len(sessions)].submit_i(
+                rng.integers(0, 1000, 6) % vocab, max_tokens=max_tokens)
+            for i in range(n)]
+
+
+def _drive(eng, handles, max_ticks=MAX_TICKS):
+    ticks = 0
+    while not all(h.test() for h in handles):
+        ticks += 1
+        assert ticks < max_ticks, (
+            f"wedged: {sum(h.test() for h in handles)}/{len(handles)} "
+            f"terminal after {max_ticks} ticks")
+        eng.tick()
+    return ticks
+
+
+def _tokens_of(handles):
+    return [list(map(int, h.response.tokens_out)) for h in handles]
+
+
+def _pool_clean(eng):
+    pool = eng.pool
+    if eng.prefix_cache is not None:
+        eng.prefix_cache.clear()
+    assert pool.n_seqs() == 0
+    assert pool.used_pages() == len(pool.quarantined)
+    assert pool.kv_copy_bytes == (pool.cow_copy_bytes
+                                  + pool.swap_in_bytes
+                                  + pool.swap_out_bytes)
+
+
+def _run_reference(model, params, donor, vocab, **wl):
+    eng = _mk(model, params)
+    _share_jit(eng, donor)
+    sessions = [eng.connect(c) for c in range(2)]
+    handles = _submit_all(sessions, vocab, **wl)
+    ticks = _drive(eng, handles)
+    assert all(h.response.fsm.state.endswith("COMPLETED") for h in handles)
+    return _tokens_of(handles), ticks
+
+
+def _run_killed(model, params, donor, vocab, kill_tick, tmpdir,
+                fault_plan=None, **wl):
+    """Drive to ``kill_tick``, abandon the engine (final snapshot
+    attempt), restore a fresh one from disk, re-bind the sessions, and
+    finish.  Returns (final_engine, handles)."""
+    d = str(tmpdir)
+    eng = _mk(model, params, snapshot_dir=d, fault_plan=fault_plan)
+    _share_jit(eng, donor)
+    sessions = [eng.connect(c) for c in range(2)]
+    handles = _submit_all(sessions, vocab, **wl)
+    ticks = 0
+    killed = False
+    while not all(h.test() for h in handles):
+        ticks += 1
+        assert ticks < MAX_TICKS
+        eng.tick()
+        if not killed and ticks >= kill_tick:
+            killed = True
+            eng.save_snapshot()
+            for s in sessions:
+                s.pump()            # clients keep what their rings committed
+            eng2 = _mk(model, params, snapshot_dir=d, fault_plan=fault_plan)
+            _share_jit(eng2, donor)
+            eng2.restore_latest()
+            sessions = [eng2.connect(c, resume=s)
+                        for c, s in enumerate(sessions)]
+            eng = eng2
+    return eng, handles
+
+
+# ---------------------------------------------------------------------------
+# Kill-at-every-tick: byte-identical resumption from any boundary
+# ---------------------------------------------------------------------------
+class TestKillAtEveryTick:
+    def test_every_boundary_resumes_byte_identical(self, engine_setup,
+                                                   tmp_path):
+        cfg, model, params, donor = engine_setup
+        ref_tokens, ref_ticks = _run_reference(model, params, donor,
+                                               cfg.vocab_size)
+        assert ref_ticks >= 3, "workload too small to exercise boundaries"
+        for t in range(1, ref_ticks + 1):
+            eng, handles = _run_killed(model, params, donor,
+                                       cfg.vocab_size, t,
+                                       tmp_path / f"kill{t}")
+            states_out = [h.response.fsm.state.split("_")[-1]
+                          for h in handles]
+            assert states_out == ["COMPLETED"] * len(handles), \
+                f"kill@{t}: {states_out}"
+            assert _tokens_of(handles) == ref_tokens, \
+                f"kill@{t}: streams diverged"
+            # Exactly-once: the streamed positions (client-side dedupe
+            # over pre-kill ring deliveries + post-restore re-streams)
+            # cover every position exactly once, values matching the
+            # terminal output.
+            for h, ref in zip(handles, ref_tokens):
+                got = sorted(h.tokens(timeout_s=5))
+                assert got == list(enumerate(ref)), f"kill@{t}"
+            _pool_clean(eng)
+
+    def test_restore_reports_resumed_work(self, engine_setup, tmp_path):
+        cfg, model, params, donor = engine_setup
+        d = str(tmp_path / "report")
+        eng = _mk(model, params, snapshot_dir=d)
+        _share_jit(eng, donor)
+        sessions = [eng.connect(c) for c in range(2)]
+        handles = _submit_all(sessions, cfg.vocab_size, max_tokens=24)
+        for _ in range(4):
+            eng.tick()
+        assert eng.save_snapshot() is not None
+        eng2 = _mk(model, params, snapshot_dir=d)
+        _share_jit(eng2, donor)
+        report = eng2.restore_latest()
+        assert report is not None and report["resumed"] >= 2
+        assert eng2.stats["restores"] == 1
+        sessions = [eng2.connect(c, resume=s)
+                    for c, s in enumerate(sessions)]
+        _drive(eng2, handles)
+        assert all(h.response.fsm.state.endswith("COMPLETED")
+                   for h in handles)
+
+
+# ---------------------------------------------------------------------------
+# The write-ahead intake journal
+# ---------------------------------------------------------------------------
+class TestJournalReplay:
+    def test_binds_after_snapshot_replay_deterministically(
+            self, engine_setup, tmp_path):
+        cfg, model, params, donor = engine_setup
+        ref_tokens, _ = _run_reference(model, params, donor,
+                                       cfg.vocab_size, n=4, max_tokens=8)
+        d = str(tmp_path / "wal")
+        eng = _mk(model, params, snapshot_dir=d)
+        _share_jit(eng, donor)
+        sessions = [eng.connect(c) for c in range(2)]
+        rng = np.random.default_rng(3)
+        prompts = [rng.integers(0, 1000, 6) % cfg.vocab_size
+                   for _ in range(4)]
+        handles = [sessions[i % 2].submit_i(prompts[i], max_tokens=8)
+                   for i in range(2)]
+        for _ in range(2):
+            eng.tick()
+        assert eng.save_snapshot() is not None
+        # These two submissions postdate the snapshot: their only
+        # recovery story is the WAL.
+        handles += [sessions[i % 2].submit_i(prompts[i], max_tokens=8)
+                    for i in range(2, 4)]
+        ticks = 0
+        while eng._journal.seq < 4:     # drive until both are BOUND
+            ticks += 1
+            assert ticks < MAX_TICKS
+            eng.tick()
+        for s in sessions:
+            s.pump()
+        eng2 = _mk(model, params, snapshot_dir=d)
+        _share_jit(eng2, donor)
+        report = eng2.restore_latest()
+        assert report is not None and report["replayed"] == 2
+        sessions = [eng2.connect(c, resume=s)
+                    for c, s in enumerate(sessions)]
+        _drive(eng2, handles)
+        assert _tokens_of(handles) == ref_tokens
+        _pool_clean(eng2)
+
+    def test_lost_journal_record_fails_typed_not_hangs(
+            self, engine_setup, tmp_path):
+        cfg, model, params, donor = engine_setup
+        # Third bind's WAL append is injected away: that request cannot
+        # be replayed after the crash — its handle must resolve with the
+        # typed falsy FailedStatus, not hang.
+        plan = FaultPlan([FaultRule("journal.append", nth=3)])
+        d = str(tmp_path / "lostrec")
+        eng = _mk(model, params, snapshot_dir=d, fault_plan=plan)
+        _share_jit(eng, donor)
+        sessions = [eng.connect(c) for c in range(2)]
+        handles = _submit_all(sessions, cfg.vocab_size, n=2, max_tokens=4)
+        for _ in range(2):
+            eng.tick()
+        assert eng.save_snapshot() is not None
+        h3 = sessions[0].submit_i(
+            np.arange(6, dtype=np.int32) % cfg.vocab_size, max_tokens=24)
+        ticks = 0
+        while not any(s.request is not None
+                      and s.request.req_id == h3.req_id
+                      for s in eng.slots):
+            ticks += 1
+            assert ticks < MAX_TICKS
+            eng.tick()
+        assert eng._journal.seq == 2    # the bind really was lost
+        for s in sessions:
+            s.pump()
+        eng2 = _mk(model, params, snapshot_dir=d, fault_plan=plan)
+        _share_jit(eng2, donor)
+        assert eng2.restore_latest() is not None
+        sessions = [eng2.connect(c, resume=s)
+                    for c, s in enumerate(sessions)]
+        assert h3.test(), "unreplayable handle must finalize at re-bind"
+        assert isinstance(h3.status, FailedStatus) and not h3.status
+        assert "lost across restart" in h3.status.reason
+        _drive(eng2, handles)
+        assert all(h.response.fsm.state.endswith("COMPLETED")
+                   for h in handles)
+
+
+# ---------------------------------------------------------------------------
+# Torn writes and aborted restores
+# ---------------------------------------------------------------------------
+class TestTornSnapshots:
+    def test_torn_write_never_corrupts_last_good(self, engine_setup,
+                                                 tmp_path):
+        cfg, model, params, donor = engine_setup
+        plan = FaultPlan([FaultRule("snapshot.write", nth=2)])
+        d = str(tmp_path / "torn")
+        eng = _mk(model, params, snapshot_dir=d, fault_plan=plan)
+        _share_jit(eng, donor)
+        sessions = [eng.connect(c) for c in range(2)]
+        handles = _submit_all(sessions, cfg.vocab_size, max_tokens=24)
+        for _ in range(3):
+            eng.tick()
+        good = eng.save_snapshot()
+        assert good is not None
+        for _ in range(2):
+            eng.tick()
+        assert eng.save_snapshot() is None      # injected tear
+        torn = [p for p in snapshot_mod._snap_paths(d) if p != good]
+        assert torn, "the torn write must still have left a file"
+        with pytest.raises(SnapshotError):
+            snapshot_mod.read_snapshot(torn[0])
+        snap, path = snapshot_mod.load_latest(d)
+        assert path == good                     # fallback, not corruption
+        for s in sessions:
+            s.pump()
+        eng2 = _mk(model, params, snapshot_dir=d)
+        _share_jit(eng2, donor)
+        assert eng2.restore_latest() is not None
+        sessions = [eng2.connect(c, resume=s)
+                    for c, s in enumerate(sessions)]
+        _drive(eng2, handles)
+        assert all(h.response.fsm.state.endswith("COMPLETED")
+                   for h in handles)
+        _pool_clean(eng2)
+
+    def test_restore_fault_retries_then_gives_up_typed(self, engine_setup,
+                                                       tmp_path):
+        cfg, model, params, donor = engine_setup
+        d = str(tmp_path / "aborted")
+        eng = _mk(model, params, snapshot_dir=d)
+        _share_jit(eng, donor)
+        sessions = [eng.connect(c) for c in range(2)]
+        handles = _submit_all(sessions, cfg.vocab_size, max_tokens=24)
+        for _ in range(3):
+            eng.tick()
+        assert eng.save_snapshot() is not None
+        for s in sessions:
+            s.pump()
+        # An unbounded snapshot.restore fault: every retry aborts, the
+        # engine gives up EMPTY — handles fail typed instead of hanging.
+        plan = FaultPlan([FaultRule("snapshot.restore", nth=1, times=10**6)])
+        eng2 = _mk(model, params, snapshot_dir=d, fault_plan=plan)
+        _share_jit(eng2, donor)
+        assert eng2.restore_latest(retries=3) is None
+        assert eng2.pool.n_seqs() == 0 and eng2.pool.used_pages() == 0
+        # A finite fault goes quiet and the retry loop succeeds.
+        plan2 = FaultPlan([FaultRule("snapshot.restore", nth=1, times=2)])
+        eng3 = _mk(model, params, snapshot_dir=d, fault_plan=plan2)
+        _share_jit(eng3, donor)
+        assert eng3.restore_latest() is not None
+        sessions = [eng3.connect(c, resume=s)
+                    for c, s in enumerate(sessions)]
+        _drive(eng3, handles)
+        assert all(h.response.fsm.state.endswith("COMPLETED")
+                   for h in handles)
+
+    def test_config_mismatch_refuses_restore(self, engine_setup, tmp_path):
+        cfg, model, params, donor = engine_setup
+        d = str(tmp_path / "shape")
+        eng = _mk(model, params, snapshot_dir=d)
+        _share_jit(eng, donor)
+        eng.connect(0)
+        assert eng.save_snapshot() is not None
+        other = _mk(model, params, snapshot_dir=d, pool_pages=12)
+        _share_jit(other, donor)
+        snap, _ = snapshot_mod.load_latest(d)
+        with pytest.raises(SnapshotError, match="config mismatch"):
+            other.restore(snap)
+
+
+# ---------------------------------------------------------------------------
+# In-process restart (serve_forever(restart=True))
+# ---------------------------------------------------------------------------
+class TestSelfRestart:
+    def test_loop_crash_restores_and_finishes(self, engine_setup,
+                                              tmp_path):
+        cfg, model, params, donor = engine_setup
+        eng = _mk(model, params, snapshot_dir=str(tmp_path / "loop"),
+                  snapshot_every=2)
+        _share_jit(eng, donor)
+        sessions = [eng.connect(c) for c in range(2)]
+        orig_tick = eng.tick
+        calls = {"n": 0}
+
+        def crashing_tick():
+            calls["n"] += 1
+            if calls["n"] == 5:
+                raise RuntimeError("injected loop crash")
+            return orig_tick()
+
+        eng.tick = crashing_tick
+        t = threading.Thread(target=eng.serve_forever,
+                             kwargs={"restart": True}, daemon=True)
+        t.start()
+        handles = _submit_all(sessions, cfg.vocab_size, max_tokens=12)
+        deadline = time.monotonic() + 60
+        while not all(h.test() for h in handles):
+            assert time.monotonic() < deadline, "restarted engine wedged"
+            time.sleep(0.005)
+        eng.stop()
+        t.join(timeout=10)
+        assert not t.is_alive()
+        assert eng.dead is None
+        assert eng.stats["restarts"] == 1
+        assert all(h.response.fsm.state.endswith("COMPLETED")
+                   for h in handles)
+
+    def test_restart_budget_bounds_crash_loops(self, engine_setup,
+                                               tmp_path):
+        cfg, model, params, donor = engine_setup
+        eng = _mk(model, params, snapshot_dir=str(tmp_path / "budget"),
+                  snapshot_every=2)
+        _share_jit(eng, donor)
+        eng.connect(0)
+        eng.tick()
+        assert eng.save_snapshot() is not None
+        eng.tick = lambda: (_ for _ in ()).throw(
+            RuntimeError("deterministic crash"))
+        t = threading.Thread(target=eng.serve_forever,
+                             kwargs={"restart": True}, daemon=True)
+        t.start()
+        t.join(timeout=60)
+        assert not t.is_alive(), "crash loop must terminate"
+        assert eng.dead is not None         # budget spent -> typed death
+        assert eng.stats["restarts"] == 5
+
+
+# ---------------------------------------------------------------------------
+# Session reconnect semantics
+# ---------------------------------------------------------------------------
+class TestSessionReconnect:
+    def test_terminal_redelivery_is_deduped(self, engine_setup, tmp_path):
+        cfg, model, params, donor = engine_setup
+        d = str(tmp_path / "dedupe")
+        eng = _mk(model, params, snapshot_dir=d)
+        _share_jit(eng, donor)
+        sessions = [eng.connect(c) for c in range(2)]
+        handles = _submit_all(sessions, cfg.vocab_size, n=2, max_tokens=3)
+        # Complete both WITHOUT pumping: their terminals sit undelivered
+        # in the response ring and are captured by the snapshot.
+        ticks = 0
+        while not all(h.req.done_t for h in handles):
+            ticks += 1
+            assert ticks < MAX_TICKS
+            eng.tick()
+        assert eng.save_snapshot() is not None
+        # The client then DID receive them before the crash ...
+        assert all(h.test() for h in handles)
+        n_finalized = [len(s._finalized) for s in sessions]
+        # ... so the restore's re-delivery must be dropped client-side.
+        eng2 = _mk(model, params, snapshot_dir=d)
+        _share_jit(eng2, donor)
+        assert eng2.restore_latest() is not None
+        sessions = [eng2.connect(c, resume=s)
+                    for c, s in enumerate(sessions)]
+        for s in sessions:
+            s.pump()
+        assert all(not s._completed for s in sessions), \
+            "duplicate terminal leaked past the dedupe set"
+        assert [len(s._finalized) for s in sessions] == n_finalized
+
+    def test_close_is_idempotent_and_reconnect_reopens(self, engine_setup):
+        cfg, model, params, donor = engine_setup
+        eng = _mk(model, params)
+        _share_jit(eng, donor)
+        sess = eng.connect(0)
+        sess.close()
+        sess.close()                        # idempotent
+        assert sess.closed
+        again = eng.connect(0)
+        assert again is sess and not again.closed
+        h = again.submit_i(np.arange(4, dtype=np.int32), max_tokens=2)
+        _drive(eng, [h])
+        assert h.response.fsm.state.endswith("COMPLETED")
+
+    def test_adopt_is_idempotent_and_closes_donor(self, engine_setup,
+                                                  tmp_path):
+        cfg, model, params, donor = engine_setup
+        d = str(tmp_path / "adopt")
+        eng = _mk(model, params, snapshot_dir=d)
+        _share_jit(eng, donor)
+        old = eng.connect(0)
+        h = old.submit_i(np.arange(4, dtype=np.int32) % cfg.vocab_size,
+                         max_tokens=24)
+        for _ in range(2):
+            eng.tick()
+        assert eng.save_snapshot() is not None
+        old.pump()
+        eng2 = _mk(model, params, snapshot_dir=d)
+        _share_jit(eng2, donor)
+        assert eng2.restore_latest() is not None
+        new = eng2.connect(0, resume=old)
+        assert old.closed and not new._handles.keys() - {h.req_id}
+        assert h._session is new
+        old.close()                         # closing the husk: no-op
+        eng2.connect(0, resume=new)         # self-adopt: no-op
+        assert not new.closed
+        _drive(eng2, [h])
+        assert h.response.fsm.state.endswith("COMPLETED")
+
+
+# ---------------------------------------------------------------------------
+# Property test: the restored pool is EXACTLY the captured pool
+# ---------------------------------------------------------------------------
+def _assert_state_equal(a, b, path=""):
+    assert type(a) is type(b), f"{path}: {type(a)} != {type(b)}"
+    if isinstance(a, dict):
+        assert set(a) == set(b), f"{path}: keys {set(a) ^ set(b)}"
+        for k in a:
+            _assert_state_equal(a[k], b[k], f"{path}.{k}")
+    elif isinstance(a, (list, tuple)):
+        assert len(a) == len(b), f"{path}: len {len(a)} != {len(b)}"
+        for i, (x, y) in enumerate(zip(a, b)):
+            _assert_state_equal(x, y, f"{path}[{i}]")
+    elif isinstance(a, np.ndarray):
+        assert np.array_equal(a, b), f"{path}: arrays differ"
+    else:
+        assert a == b, f"{path}: {a!r} != {b!r}"
+
+
+if st is None:
+    def test_hypothesis_roundtrip_property():
+        pytest.importorskip("hypothesis")   # records the skip with reason
+else:
+    class TestSnapshotRoundtripProperties:
+        @given(
+            n_requests=st.integers(1, 4),
+            max_tokens=st.integers(2, 12),
+            kill_tick=st.integers(1, 8),
+            seed=st.integers(0, 2**16),
+        )
+        @settings(max_examples=8, deadline=None)
+        def test_restore_is_exact(self, engine_setup, tmp_path_factory,
+                                  n_requests, max_tokens, kill_tick, seed):
+            """snapshot→restore is the identity on the pool: refcounts,
+            block tables, the free-page ledger, page bytes, and the
+            copy-traffic ledger come back EXACTLY, and the resumed
+            engine finishes with the same tokens as the donor run."""
+            cfg, model, params, donor = engine_setup
+            d = str(tmp_path_factory.mktemp("prop"))
+            eng = _mk(model, params, snapshot_dir=d)
+            _share_jit(eng, donor)
+            sessions = [eng.connect(c) for c in range(2)]
+            handles = _submit_all(sessions, cfg.vocab_size,
+                                  n=n_requests, max_tokens=max_tokens,
+                                  seed=seed)
+            for _ in range(kill_tick):
+                if all(h.test() for h in handles):
+                    break
+                eng.tick()
+            snap = eng.snapshot()
+            extra = (eng.prefix_cache.resident_pages()
+                     if eng.prefix_cache is not None else ())
+            want = eng.pool.snapshot_state(extra_pages=extra)
+            eng2 = _mk(model, params, snapshot_dir=d)
+            _share_jit(eng2, donor)
+            eng2.restore(snap)
+            extra2 = (eng2.prefix_cache.resident_pages()
+                      if eng2.prefix_cache is not None else ())
+            got = eng2.pool.snapshot_state(extra_pages=extra2)
+            _assert_state_equal(want, got, "pool")
+            assert eng2.pool.kv_copy_bytes == (eng2.pool.cow_copy_bytes
+                                               + eng2.pool.swap_in_bytes
+                                               + eng2.pool.swap_out_bytes)
+            # Finish both lives; streams must agree byte-for-byte.
+            for s in sessions:
+                s.pump()
+            for c, s in enumerate(sessions):
+                eng2.connect(c, resume=s)
+            _drive(eng2, handles)
+            ref, _ = _run_reference(model, params, donor, cfg.vocab_size,
+                                    n=n_requests, max_tokens=max_tokens,
+                                    seed=seed)
+            assert _tokens_of(handles) == ref
+            _pool_clean(eng2)
