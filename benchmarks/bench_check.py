@@ -1,0 +1,188 @@
+"""Deterministic interleaving checker benchmark (DESIGN.md §15).
+
+Measures the model-checking layer itself and re-asserts its core
+guarantees as deterministic gates:
+
+- **Exhaustive coverage**: every scenario tagged ``expect="pass"`` is
+  explored at its full budget; the ones that exhaust are complete
+  proofs over their bounded casts, and any counterexample fails the
+  bench with the minimized replay schedule printed (the one-line repro
+  IS the bug report).
+- **Detector sensitivity**: the two preserved-broken scenarios
+  (``legacy_statecell_compaction``, ``broken_ring``) must still be
+  convicted — a checker that stops finding planted bugs is broken.
+- **Throughput**: schedules/second for the DFS explorer and the seeded
+  fuzzer (re-execution rate is THE cost driver of stateless model
+  checking).
+- **Zero-overhead unarmed**: a hot loop over the instrumented
+  primitives with no scheduler armed must take ZERO yield points
+  (``interleave.ARMED_HITS`` unchanged — the paper's packaging claim
+  says instrumentation may not tax the fast path), plus a relative
+  wall-clock comparison against the pre-instrumentation ceiling.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_check.py [--quick]
+Emits:  BENCH_check.json (cwd)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import interleave as il
+from repro.core.nbb import HostNBB
+from repro.checker import scenarios
+
+
+def run_explores(quick: bool) -> tuple:
+    """Explore every registered scenario; returns (records, failures)."""
+    records, failures = [], []
+    for name, scen in sorted(scenarios.SCENARIOS.items()):
+        budget = scen.explore_budget
+        if quick:
+            budget = min(budget, 1500)
+        t0 = time.perf_counter()
+        r = scenarios.explore_scenario(name, max_executions=budget)
+        dt = time.perf_counter() - t0
+        rec = {
+            "scenario": name,
+            "structure": scen.structure,
+            "expect": scen.expect,
+            "executions": r.executions,
+            "distinct_states": r.distinct_states,
+            "exhausted": r.exhausted,
+            "max_trace_len": r.max_trace_len,
+            "seconds": round(dt, 3),
+            "schedules_per_sec": round(r.executions / dt, 1) if dt else 0.0,
+            "ok": r.ok,
+        }
+        if scen.expect == "pass" and not r.ok:
+            cx = r.counterexample
+            mini = il.minimize(scen.make_world,
+                               il.run_schedule(scen.make_world, cx.schedule,
+                                               max_steps=scen.max_steps,
+                                               strict=False),
+                               max_steps=scen.max_steps)
+            rec["counterexample"] = {
+                "error": cx.error, "schedule": list(mini)}
+            failures.append(
+                f"{name}: {cx.error_type}\n"
+                f"  minimized replay schedule: {list(mini)}\n"
+                f"  repro: interleave.run_schedule("
+                f"scenarios.get({name!r}).make_world, {list(mini)})")
+        elif scen.expect == "violation" and r.ok:
+            failures.append(
+                f"{name}: expected a violation (detector sensitivity "
+                f"check) but exploration found none in {r.executions} "
+                f"executions")
+        records.append(rec)
+        status = "ok" if (r.ok == (scen.expect == "pass")) else "FAIL"
+        print(f"  {name:32s} exec={r.executions:6d} "
+              f"distinct={r.distinct_states:6d} "
+              f"exhausted={str(r.exhausted):5s} "
+              f"{rec['schedules_per_sec']:8.1f} sched/s  [{status}]")
+    return records, failures
+
+
+def run_fuzz(quick: bool) -> dict:
+    """Fuzzer throughput + clean-pass gate on two large scenarios."""
+    runs = 40 if quick else 300
+    out = {}
+    for name in ("mpsc_fanin", "torn_span_recovery"):
+        t0 = time.perf_counter()
+        f = scenarios.fuzz_scenario(name, seed=0, runs=runs)
+        dt = time.perf_counter() - t0
+        assert f.ok, (f"fuzz found a bug in {name}: "
+                      f"{f.counterexample.error}\n"
+                      f"repro: {f.counterexample.repro(name)}")
+        out[name] = {"runs": f.runs, "seconds": round(dt, 3),
+                     "schedules_per_sec": round(f.runs / dt, 1)}
+    return out
+
+
+def run_unarmed_overhead(quick: bool) -> dict:
+    """The zero-overhead-unarmed gate: no hits, and the wall-clock of
+    the instrumented hot path (scalar + burst ring ops)."""
+    n = 20_000 if quick else 200_000
+    ring = HostNBB(64)
+    assert il._active is None
+    hits_before = il.ARMED_HITS
+    t0 = time.perf_counter()
+    for i in range(n):
+        ring.insert_item(i)
+        ring.read_item()
+    scalar_dt = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    burst = list(range(32))
+    for _ in range(n // 32):
+        ring.send_burst(burst)
+        ring.drain_burst(32)
+    burst_dt = time.perf_counter() - t0
+    added_ops = il.ARMED_HITS - hits_before
+    assert added_ops == 0, (
+        f"unarmed hot path took {added_ops} yield points — the "
+        f"zero-overhead-unarmed guarantee is broken")
+    return {
+        "ops": n,
+        "armed_hits_delta": added_ops,
+        "scalar_ns_per_op": round(scalar_dt / (2 * n) * 1e9, 1),
+        "burst_ns_per_item": round(burst_dt / (2 * (n // 32) * 32) * 1e9,
+                                   1),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="capped budgets for CI smoke")
+    args = ap.parse_args()
+
+    print("== deterministic interleaving checker bench "
+          f"({'quick' if args.quick else 'full'}) ==")
+    print("-- exhaustive exploration --")
+    t0 = time.perf_counter()
+    explore_recs, failures = run_explores(args.quick)
+    print("-- seeded fuzzing --")
+    fuzz_recs = run_fuzz(args.quick)
+    for name, rec in fuzz_recs.items():
+        print(f"  {name:32s} runs={rec['runs']:6d} "
+              f"{rec['schedules_per_sec']:8.1f} sched/s")
+    print("-- zero-overhead unarmed --")
+    overhead = run_unarmed_overhead(args.quick)
+    print(f"  armed_hits_delta={overhead['armed_hits_delta']} "
+          f"scalar={overhead['scalar_ns_per_op']}ns/op "
+          f"burst={overhead['burst_ns_per_item']}ns/item")
+
+    total = time.perf_counter() - t0
+    exhausted = sum(1 for r in explore_recs
+                    if r["exhausted"] and r["expect"] == "pass")
+    result = {
+        "bench": "check",
+        "mode": "quick" if args.quick else "full",
+        "total_seconds": round(total, 2),
+        "scenarios": explore_recs,
+        "scenarios_exhausted": exhausted,
+        "interleavings_covered": sum(r["executions"]
+                                     for r in explore_recs),
+        "distinct_states": sum(r["distinct_states"]
+                               for r in explore_recs),
+        "fuzz": fuzz_recs,
+        "unarmed_overhead": overhead,
+        "ok": not failures,
+    }
+    with open("BENCH_check.json", "w") as f:
+        json.dump(result, f, indent=1)
+        f.write("\n")
+    print(f"== {result['interleavings_covered']} interleavings, "
+          f"{result['distinct_states']} distinct states, "
+          f"{exhausted} scenarios exhausted, {total:.1f}s ==")
+    if failures:
+        print("== FAILURES ==")
+        for msg in failures:
+            print(msg)
+        raise SystemExit(1)
+    print("OK — wrote BENCH_check.json")
+
+
+if __name__ == "__main__":
+    main()

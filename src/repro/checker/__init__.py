@@ -1,0 +1,29 @@
+"""Deterministic concurrency checking for the lock-free core.
+
+Layers (DESIGN.md §15):
+
+* :mod:`repro.core.interleave` — the schedule-controlled
+  VirtualScheduler, bounded-DFS explorer, seeded fuzzer and schedule
+  minimizer (lives in ``core`` so every primitive can host its yield
+  points without an import cycle).
+* :mod:`repro.checker.lin` — Wing & Gong linearizability checking over
+  recorded histories.
+* :mod:`repro.checker.specs` — pure sequential specifications of
+  ring/queue/allocator/FSM semantics.
+* :mod:`repro.checker.detectors` — torn-read / happens-before detection
+  over yield traces (the NBB epoch protocol's Safety property).
+* :mod:`repro.checker.scenarios` — the scenario registry: bounded casts
+  of tasks + invariants, explored exhaustively in tier-1 and fuzzed at
+  larger budgets in ``benchmarks/bench_check.py``.
+"""
+from repro.checker import detectors, lin, scenarios, specs  # noqa: F401
+from repro.checker.lin import (  # noqa: F401
+    MISSING, LinearizabilityViolation, OpRecord, Recorder,
+    assert_linearizable, check_history,
+)
+from repro.checker.detectors import (  # noqa: F401
+    TornRead, TornReadDetected, assert_no_torn_reads, find_torn_reads,
+)
+from repro.checker.scenarios import (  # noqa: F401
+    SCENARIOS, explore_scenario, fuzz_scenario, replay,
+)

@@ -21,6 +21,8 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro.core import interleave as _il
+
 
 class HostBitset:
     """Lock-free slot allocator for host threads (multi-producer safe)."""
@@ -46,14 +48,20 @@ class HostBitset:
         n = self._n
         for off in range(n):
             i = (start + off) % n
+            if _il._active is not None:
+                _il._active.yield_point("bitset.probe", (id(self), i))
             if self._claims.setdefault(i, owner) is owner:
                 return i
         return None
 
     def claim_specific(self, i: int, owner: object = True) -> bool:
+        if _il._active is not None:
+            _il._active.yield_point("bitset.probe", (id(self), i))
         return self._claims.setdefault(i, owner) is owner
 
     def release(self, i: int) -> None:
+        if _il._active is not None:
+            _il._active.yield_point("bitset.release", (id(self), i))
         # pop() is atomic; releasing an unclaimed slot is a programming error.
         if self._claims.pop(i, _MISSING) is _MISSING:
             raise KeyError(f"slot {i} was not claimed")

@@ -29,6 +29,7 @@ import threading
 from collections import deque
 from typing import Any, List, Optional, Tuple
 
+from repro.core import interleave as _il
 from repro.core import nbb, transport
 from repro.core.nbb import HostNBB
 
@@ -70,6 +71,9 @@ class MpscQueue:
         busy = False
         for off in range(n):
             ring = self._rings[(self._cursor + off) % n]
+            if _il._active is not None:
+                _il._active.yield_point(
+                    "mpsc.scan", (id(self), (self._cursor + off) % n))
             status, item = ring.read_item()
             if status == nbb.OK:
                 self._cursor = (self._cursor + off + 1) % n
@@ -104,6 +108,9 @@ class MpscQueue:
             take = None if max_n is None else max_n - len(out)
             if take is not None and take <= 0:
                 break
+            if _il._active is not None:
+                _il._active.yield_point(
+                    "mpsc.burst.scan", (id(self), (self._cursor + off) % n))
             out.extend(self._rings[(self._cursor + off) % n]
                        .drain_burst(take))
         if n:

@@ -33,10 +33,20 @@ Two variants are provided:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import interleave as _il
+
+# Deterministic-interleaving yield points (repro.core.interleave): each
+# shared-memory access below is preceded by one `_il._active is None`
+# check — the same zero-overhead-unarmed contract as core/faults.py
+# sites.  Armed, the access parks the task and the VirtualScheduler
+# decides who advances, which is what lets the checker enumerate every
+# counter/slot interleaving of this protocol.
 
 # ---------------------------------------------------------------------------
 # Status codes — Table 1 of the paper.
@@ -88,6 +98,8 @@ class HostNBB:
         return (self._uc // 2) - (self._ac // 2)
 
     def insert_item(self, item: Any) -> int:
+        if _il._active is not None:
+            _il._active.yield_point("nbb.send.load", id(self))
         uc = self._uc
         ac = self._ac  # single racy read — fine: AC only grows
         if (uc // 2) - (ac // 2) >= self._n:
@@ -96,22 +108,37 @@ class HostNBB:
             if ac & 1:
                 return BUFFER_FULL_BUT_CONSUMER_READING
             return BUFFER_FULL
+        if _il._active is not None:
+            _il._active.yield_point("nbb.send.announce", id(self))
         self._uc = uc + 1                       # announce write-in-progress
+        if _il._active is not None:
+            _il._active.yield_point("nbb.send.slot",
+                                    (id(self), (uc // 2) % self._n))
         self._slots[(uc // 2) % self._n] = item
+        if _il._active is not None:
+            _il._active.yield_point("nbb.send.commit", id(self))
         self._uc = uc + 2                       # commit
         return OK
 
     def read_item(self) -> Tuple[int, Optional[Any]]:
+        if _il._active is not None:
+            _il._active.yield_point("nbb.recv.load", id(self))
         ac = self._ac
         uc = self._uc  # single racy read — UC only grows
         if (uc // 2) == (ac // 2):
             if uc & 1:
                 return BUFFER_EMPTY_BUT_PRODUCER_INSERTING, None
             return BUFFER_EMPTY, None
+        if _il._active is not None:
+            _il._active.yield_point("nbb.recv.announce", id(self))
         self._ac = ac + 1                       # announce read-in-progress
         idx = (ac // 2) % self._n
+        if _il._active is not None:
+            _il._active.yield_point("nbb.recv.slot", (id(self), idx))
         item = self._slots[idx]
         self._slots[idx] = None                 # help GC; slot now ours alone
+        if _il._active is not None:
+            _il._active.yield_point("nbb.recv.ack", id(self))
         self._ac = ac + 2                       # acknowledge
         return OK, item
 
@@ -131,6 +158,8 @@ class HostNBB:
         all-at-once visibility either way.
         """
         want = len(vals)
+        if _il._active is not None:
+            _il._active.yield_point("nbb.burst.load", id(self))
         uc = self._uc
         ac = self._ac  # single racy read — fine: AC only grows
         space = self._n - ((uc // 2) - (ac // 2))
@@ -140,12 +169,19 @@ class HostNBB:
         if space <= 0:
             return full, 0
         m = min(space, want)
+        if _il._active is not None:
+            _il._active.yield_point("nbb.burst.announce", id(self))
         self._uc = uc + 1                       # announce burst-in-progress
         start = (uc // 2) % self._n
         head = min(m, self._n - start)
+        if _il._active is not None:
+            _il._active.yield_point("nbb.burst.copy",
+                                    (id(self), start, m, self._n))
         self._slots[start:start + head] = vals[:head]
         if m > head:                            # wrap-around: second slice
             self._slots[:m - head] = vals[head:m]
+        if _il._active is not None:
+            _il._active.yield_point("nbb.burst.commit", id(self))
         self._uc = uc + 2 * m                   # commit the whole span
         return (OK, m) if m == want else (full, m)
 
@@ -153,6 +189,8 @@ class HostNBB:
         """Consumer-side packet read: everything available now (bounded
         by ``max_n``), one announce/ack counter pair, at most two slice
         copies.  Empty list when nothing is committed."""
+        if _il._active is not None:
+            _il._active.yield_point("nbb.drain.load", id(self))
         ac = self._ac
         uc = self._uc  # single racy read — UC only grows
         avail = (uc // 2) - (ac // 2)
@@ -161,14 +199,21 @@ class HostNBB:
         m = avail if max_n is None else min(avail, max_n)
         if m <= 0:
             return []
+        if _il._active is not None:
+            _il._active.yield_point("nbb.drain.announce", id(self))
         self._ac = ac + 1                       # announce read-in-progress
         start = (ac // 2) % self._n
         head = min(m, self._n - start)
+        if _il._active is not None:
+            _il._active.yield_point("nbb.drain.copy",
+                                    (id(self), start, m, self._n))
         out = self._slots[start:start + head]
         self._slots[start:start + head] = [None] * head     # help GC
         if m > head:
             out += self._slots[:m - head]
             self._slots[:m - head] = [None] * (m - head)
+        if _il._active is not None:
+            _il._active.yield_point("nbb.drain.ack", id(self))
         self._ac = ac + 2 * m                   # acknowledge the span
         return out
 
@@ -198,30 +243,45 @@ class HostNBB:
             out.append(item)
         return out
 
-    # Convenience blocking wrappers (spin + yield, still lock-free progress).
-    def put(self, item: Any, spin: int = 64) -> None:
-        import time
-        k = 0
+    # Convenience blocking wrappers.  Both route through the Table-1
+    # Backoff discipline (spin on transient, yield, then exponential
+    # sleep — never a raw `sleep(0)` burn) and take an optional
+    # deadline: a dead peer bounds the caller's wait instead of
+    # spinning it forever outside the serve loop's watchdog.
+    def put(self, item: Any, timeout_s: Optional[float] = None,
+            backoff: Optional[Any] = None) -> bool:
+        """Blocking insert.  True when delivered; False on deadline
+        (``timeout_s``) with the item NOT enqueued."""
+        from repro.core import transport  # late: transport imports this module
+        b = backoff if backoff is not None else transport.Backoff()
+        deadline = (None if timeout_s is None
+                    else time.monotonic() + timeout_s)
         while True:
             st = self.insert_item(item)
             if st == OK:
-                return
-            k += 1
-            if st == BUFFER_FULL or k > spin:
-                time.sleep(0)  # yield the processor, per Table 1
-                k = 0
+                return True
+            if deadline is not None and time.monotonic() > deadline:
+                return False
+            b.wait(st)
 
-    def get(self, spin: int = 64) -> Any:
-        import time
-        k = 0
+    def get(self, timeout_s: Optional[float] = None,
+            backoff: Optional[Any] = None) -> Any:
+        """Blocking read.  Returns the item; raises ``TimeoutError`` on
+        deadline (``timeout_s``) so an absent producer cannot park the
+        caller forever."""
+        from repro.core import transport
+        b = backoff if backoff is not None else transport.Backoff()
+        deadline = (None if timeout_s is None
+                    else time.monotonic() + timeout_s)
         while True:
             st, item = self.read_item()
             if st == OK:
                 return item
-            k += 1
-            if st == BUFFER_EMPTY or k > spin:
-                time.sleep(0)
-                k = 0
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"NBB get(): no item within {timeout_s}s "
+                    f"(last status {STATUS_NAMES[st]})")
+            b.wait(st)
 
 
 # ---------------------------------------------------------------------------

@@ -34,6 +34,8 @@ from __future__ import annotations
 
 from typing import Optional
 
+from repro.core import interleave as _il
+
 _MISSING = object()
 
 
@@ -73,6 +75,8 @@ class RefCountArray:
         n = self._n
         for off in range(n):
             i = (start + off) % n
+            if _il._active is not None:
+                _il._active.yield_point("refcount.probe", (id(self), i))
             if not self._refs[i] and self.claim_specific(i):
                 return i
         return None
@@ -80,17 +84,25 @@ class RefCountArray:
     def claim_specific(self, i: int) -> bool:
         """CAS claim slot ``i`` iff it is free.  True when we took it."""
         tok = object()
+        if _il._active is not None:
+            _il._active.yield_point("refcount.guard", (id(self), i))
         if self._claiming.setdefault(i, tok) is not tok:
             return False           # another claimer holds the guard
         try:
+            if _il._active is not None:
+                _il._active.yield_point("refcount.check", (id(self), i))
             if self._refs[i]:      # referenced -> not free, claim fails
                 return False
             # No holders exist (count == 0) and rival claimers are
             # excluded by the guard: inserting the first reference is
             # race-free.
+            if _il._active is not None:
+                _il._active.yield_point("refcount.insert", (id(self), i))
             self._refs[i][object()] = None
             return True
         finally:
+            if _il._active is not None:
+                _il._active.yield_point("refcount.unguard", (id(self), i))
             self._claiming.pop(i, None)
 
     # -- share / release (fetch-add / fetch-sub) ---------------------------
@@ -104,6 +116,8 @@ class RefCountArray:
         d = self._refs[i]
         if not d:
             raise KeyError(f"slot {i} is free; incref requires a holder")
+        if _il._active is not None:
+            _il._active.yield_point("refcount.incref", (id(self), i))
         d[object()] = None         # unique key: atomic, never lost
         return len(d)
 
@@ -111,6 +125,8 @@ class RefCountArray:
         """Drop one reference; returns the remaining count.  The slot
         re-enters the free set exactly when this returns 0 — there is no
         separate "free" step to forget or double-run."""
+        if _il._active is not None:
+            _il._active.yield_point("refcount.decref", (id(self), i))
         try:
             self._refs[i].popitem()    # atomic removal of one reference
         except KeyError:

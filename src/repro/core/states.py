@@ -47,6 +47,8 @@ from __future__ import annotations
 import itertools
 from typing import Dict, FrozenSet, Tuple
 
+from repro.core import interleave as _il
+
 # --- Request FSM (paper Figure 3) ------------------------------------------
 REQUEST_FREE = "REQUEST_FREE"
 REQUEST_VALID = "REQUEST_VALID"
@@ -108,6 +110,9 @@ class IllegalTransition(RuntimeError):
 _seq = itertools.count()  # itertools.count() is thread-safe in CPython
 
 
+_COMPACT_AT = 64
+
+
 class StateCell:
     """A lock-free CAS cell over a fixed transition table.
 
@@ -115,48 +120,148 @@ class StateCell:
     that moved the cell from ``expected`` to ``new``.  Multiple threads may
     race; exactly one wins per state occupancy.  Progress is lock-free: an
     append always completes, and deciding the winner is a pure fold.
+
+    Representation: ``_journal`` is ONE append-only list of proposals
+    ``[seq, expected, new, resolved]`` that is never replaced, so an
+    append can never land in an abandoned list.  ``_base`` is an
+    immutable pair ``(folded_state, folded_entries)`` stored as ONE
+    attribute write; a fold starts from ``folded_state`` and replays
+    every journal entry that is not (by identity) in ``folded_entries``.
+    A fold is authoritative iff ``_base`` is unchanged when it finishes.
+
+    Compaction (bounding the journal) is where two earlier versions of
+    this cell had genuine lost-update races, both found by the
+    deterministic interleaving checker:
+
+    * The original two-store design (preserved as
+      ``repro.checker.scenarios.LegacyStateCell``) wrote the folded base
+      and the truncated journal as separate stores — a proposal folded
+      between them replayed against a doubled history.
+    * The second design swapped an immutable ``(base, journal[k:])``
+      pair atomically, but the suffix copy and the swap were two steps:
+      a proposal appended between them passed its currency check (the
+      pair was still current), reported a WIN, and was then orphaned by
+      the swap — schedule ``[1,1,1,1,1,1,0,0,0,0,0,1]`` of the
+      ``statecell_compaction`` scenario loses a committed transition
+      (the minimized schedule lives in ``tests/schedules/``).
+
+    The watermark protocol here closes both windows:
+
+      * a proposal is marked ``resolved`` only after its caller's
+        authoritative fold, and the compactor folds ONLY the longest
+        resolved prefix — it can never fold an entry whose owner has
+        not yet seen the outcome (an unresolved entry also blocks every
+        entry behind it, so position order is preserved);
+      * the compactor installs ``(prefix_state, prefix_entries)`` as
+        one atomic store and only THEN deletes the prefix from the
+        journal (``del j[:k]`` — a single slice-delete).  Between the
+        two, folds skip the prefix entries by identity, so both orders
+        of the interim window read the same state.  ``_base`` keeps the
+        folded entries alive, so their ids cannot be recycled while the
+        skip set still matters;
+      * a single-compactor guard (the ``setdefault`` CAS primitive)
+        keeps rival compactions from interleaving; losers skip —
+        compaction is opportunistic, so skipping is progress.
     """
 
-    __slots__ = ("_table", "_base", "_journal", "_name")
+    __slots__ = ("_table", "_base", "_journal", "_name", "_cguard",
+                 "_compact_at")
 
     def __init__(self, table: Dict[str, FrozenSet[str]], initial: str,
-                 name: str = ""):
+                 name: str = "", compact_at: int = _COMPACT_AT):
         if initial not in table:
             raise ValueError(f"unknown state {initial!r}")
         self._table = table
-        self._base = initial
-        self._journal: list = []  # [(seq, expected, new)]
+        self._base: tuple = (initial, ())
+        self._journal: list = []          # [[seq, expected, new, resolved]]
         self._name = name
+        self._cguard: dict = {}
+        self._compact_at = compact_at
 
-    def _fold(self) -> Tuple[str, set]:
-        """Deterministically replay proposals; returns (state, winner_seqs)."""
-        state = self._base
+    def _fold_once(self) -> Tuple[tuple, str, set]:
+        """One fold pass: (base-read, folded state, winner seqs)."""
+        base = self._base
+        state = base[0]
+        skip = {id(e) for e in base[1]}
         winners = set()
-        for seq, expected, new in self._journal:
-            if expected == state and new in self._table[state]:
-                state = new
-                winners.add(seq)
-        return state, winners
+        for e in list(self._journal):
+            if id(e) in skip:             # already folded into the base
+                continue
+            if e[1] == state and e[2] in self._table[state]:
+                state = e[2]
+                winners.add(e[0])
+        return base, state, winners
+
+    def _fold_current(self) -> Tuple[str, set]:
+        """Fold base + journal; retry if a compaction moved the base
+        mid-fold (our journal snapshot may then miss folded entries
+        whose effect the stale base did not carry)."""
+        while True:
+            if _il._active is not None:
+                _il._active.yield_point("states.fold", id(self))
+            base, state, winners = self._fold_once()
+            if _il._active is not None:
+                _il._active.yield_point("states.fold.verify", id(self))
+            if self._base is base:
+                return state, winners
 
     @property
     def state(self) -> str:
-        return self._fold()[0]
+        return self._fold_current()[0]
 
     def cas(self, expected: str, new: str) -> bool:
         if new not in self._table.get(expected, frozenset()):
             raise IllegalTransition(
                 f"{self._name}: {expected} -> {new} not in transition table")
         seq = next(_seq)
-        self._journal.append((seq, expected, new))  # atomic append = consensus
-        _, winners = self._fold()
-        won = seq in winners
-        # Opportunistic compaction by any caller once the journal grows; the
-        # fold result is base-state-invariant so a torn compaction by two
-        # threads is benign (both write the same folded base).
-        if len(self._journal) > 64:
-            state, _ = self._fold()
-            self._base, self._journal = state, []
+        entry = [seq, expected, new, False]
+        if _il._active is not None:
+            _il._active.yield_point("states.append", id(self))
+        self._journal.append(entry)       # atomic append = consensus order
+        # Our own entry is unresolved, so no compactor can fold or delete
+        # it before the authoritative fold below returns its verdict.
+        won = entry[0] in self._fold_current()[1]
+        if _il._active is not None:
+            _il._active.yield_point("states.resolve", id(self))
+        entry[3] = True                   # compactable from here on
+        if len(self._journal) > self._compact_at:
+            self._maybe_compact()
         return won
+
+    def _maybe_compact(self) -> None:
+        """Fold the longest resolved journal prefix into the base with
+        one atomic store, then drop the prefix — opportunistic,
+        single-compactor, and unable to touch an unresolved (in-flight)
+        proposal by construction."""
+        tok = object()
+        if _il._active is not None:
+            _il._active.yield_point("states.compact.guard", id(self))
+        if self._cguard.setdefault("c", tok) is not tok:
+            return                        # a rival compactor is active
+        try:
+            j = self._journal
+            k = 0
+            while k < len(j) and j[k][3]:
+                k += 1
+            if k == 0:
+                return
+            prefix = tuple(j[:k])
+            base = self._base             # stable: we hold the guard
+            state = base[0]
+            skip = {id(e) for e in base[1]}
+            for e in prefix:
+                if id(e) in skip:         # defensive; prior del precedes
+                    continue              # guard release, so never hit
+                if e[1] == state and e[2] in self._table[state]:
+                    state = e[2]
+            if _il._active is not None:
+                _il._active.yield_point("states.compact.swap", id(self))
+            self._base = (state, prefix)  # ONE atomic store installs both
+            if _il._active is not None:
+                _il._active.yield_point("states.compact.del", id(self))
+            del j[:k]                     # cleanup; folds skip by identity
+        finally:
+            self._cguard.pop("c", None)
 
     def transition(self, expected: str, new: str) -> None:
         if not self.cas(expected, new):
@@ -182,9 +287,11 @@ class StateCell:
     def __setstate__(self, state):
         table_name, folded, name = state
         self._table = _TABLES[table_name]
-        self._base = folded
+        self._base = (folded, ())
         self._journal = []
         self._name = name
+        self._cguard = {}
+        self._compact_at = _COMPACT_AT
 
 
 _TABLES: Dict[str, Dict[str, FrozenSet[str]]] = {

@@ -58,6 +58,7 @@ import time
 from typing import Any, Callable, List, Optional, Protocol, Tuple, runtime_checkable
 
 from repro.core import faults, nbb, nbw, states
+from repro.core import interleave as _il
 
 # Table-1 status codes, re-exported so transport users need one import.
 OK = nbb.OK
@@ -117,6 +118,13 @@ class Backoff:
 
     def wait(self, status: int = BUFFER_EMPTY) -> None:
         """Wait appropriately for ``status``; escalates across calls."""
+        if _il._active is not None:
+            # Under the deterministic scheduler, waiting IS yielding: the
+            # scheduler decides who runs next, so spinning or sleeping for
+            # wall-clock time would only burn the model checker's budget
+            # (and a time.sleep would deadlock the one-runner handshake).
+            _il._active.yield_point("backoff.wait", status)
+            return
         if status in TRANSIENT and self._attempt < self.spins:
             self._attempt += 1
             return                       # spin: retry immediately
@@ -194,11 +202,15 @@ class OpHandle:
             return True
         if s == states.OP_CANCELLED:
             return False
+        if _il._active is not None:
+            _il._active.yield_point("op.attempt", id(self))
         status, payload = self._attempt()
         if status != OK:
             self.last_status = status
             return False
         self.attempted_ok = True
+        if _il._active is not None:
+            _il._active.yield_point("op.commit", id(self))
         if self._fsm.cas(states.OP_PENDING, states.OP_COMPLETED):
             self.result = payload
             return True
@@ -226,6 +238,8 @@ class OpHandle:
 
     def cancel(self) -> bool:
         """CAS PENDING -> CANCELLED; True iff this caller won."""
+        if _il._active is not None:
+            _il._active.yield_point("op.cancel", id(self))
         return self._fsm.cas(states.OP_PENDING, states.OP_CANCELLED)
 
 
@@ -399,7 +413,10 @@ class PriorityTransport:
 
     def try_recv(self) -> Tuple[int, Optional[Any]]:
         busy = False
-        for t in self.classes:
+        for p, t in enumerate(self.classes):
+            if _il._active is not None:
+                _il._active.yield_point("transport.priority.scan",
+                                        (id(self), p))
             status, payload = t.try_recv()
             if status == OK:
                 return OK, payload

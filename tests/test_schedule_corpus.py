@@ -1,0 +1,46 @@
+"""Replay the tests/schedules/ corpus (DESIGN.md §15).
+
+Every JSON file is a schedule the checker once found interesting — a
+minimized counterexample against a preserved-broken implementation
+(``expect: violation``) or a regression schedule that once exposed a
+since-fixed bug and must now pass (``expect: pass``).  Replaying them
+is cheap (one execution each) and pins both the scenarios' shapes and
+the fixes themselves.
+"""
+import glob
+import os
+
+import pytest
+
+from repro.core import interleave as il
+from repro.checker import scenarios
+
+CORPUS_DIR = os.path.join(os.path.dirname(__file__), "schedules")
+CORPUS = sorted(glob.glob(os.path.join(CORPUS_DIR, "*.json")))
+
+
+def test_corpus_exists():
+    assert CORPUS, "tests/schedules/ corpus is empty"
+
+
+@pytest.mark.parametrize(
+    "path", CORPUS, ids=[os.path.basename(p) for p in CORPUS])
+def test_replay(path):
+    rec = il.load_schedule(path)
+    scen = scenarios.get(rec["scenario"])
+    res = il.run_schedule(scen.make_world, rec["schedule"],
+                          max_steps=scen.max_steps, strict=False)
+    if rec["expect"] == "violation":
+        assert res.failed, (
+            f"{path}: schedule no longer reproduces the violation "
+            f"(did the scenario change shape?)")
+    else:
+        assert not res.failed, (
+            f"{path}: regression schedule fails again: {res.error!r}\n"
+            f"note: {rec.get('note', '')}")
+
+
+def test_corpus_scenarios_registered():
+    for path in CORPUS:
+        rec = il.load_schedule(path)
+        assert rec["scenario"] in scenarios.SCENARIOS, path
